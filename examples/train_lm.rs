@@ -1,0 +1,82 @@
+//! End-to-end driver: train a DeltaNet transformer LM on the synthetic
+//! corpus for a few hundred steps and log the loss curve — proving all
+//! three layers compose (Pallas kernel → JAX train-step HLO → Rust
+//! coordinator via PJRT).
+//!
+//! By default uses the largest artifact present: `deltanet_e2e` (~28M
+//! params, built by `make e2e`) if available, else `deltanet_small`, else
+//! `deltanet_tiny`.  Override with DELTANET_E2E_ARTIFACT / _STEPS.
+//!
+//!     make e2e          # exports deltanet_e2e and runs this driver
+//!     cargo run --release --example train_lm     # uses what's built
+
+use deltanet::config::{DataConfig, LrSchedule, RunConfig};
+use deltanet::coordinator::Trainer;
+use deltanet::data::batcher::Split;
+use deltanet::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::new("artifacts")?;
+    let artifact = std::env::var("DELTANET_E2E_ARTIFACT").ok()
+        .or_else(|| ["deltanet_e2e", "deltanet_small", "deltanet_tiny"]
+            .iter()
+            .find(|a| runtime.has_artifact(&format!("{a}.train")))
+            .map(|s| s.to_string()))
+        .ok_or_else(|| anyhow::anyhow!("no deltanet train artifact; \
+                                        run `make artifacts`"))?;
+    let steps: usize = std::env::var("DELTANET_E2E_STEPS").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let mut trainer = Trainer::new(&runtime, &artifact, 7)?;
+    println!("== end-to-end LM training ==");
+    println!("artifact  : {artifact}");
+    println!("params    : {}", trainer.param_count());
+    println!("batch     : {} x {} tokens", trainer.batch, trainer.seq_len);
+    println!("steps     : {steps}");
+
+    let data = DataConfig::Corpus { seed: 7 };
+    let split = Split::from_config(&data);
+    let mut train_task = split.train;
+    let mut eval_task = split.eval;
+
+    let log_path = std::path::PathBuf::from("train_lm_loss.jsonl");
+    let cfg = RunConfig {
+        artifact: artifact.clone(),
+        artifacts_dir: "artifacts".into(),
+        steps,
+        seed: 7,
+        lr: LrSchedule::paper_default(steps),
+        data,
+        eval_every: (steps / 4).max(1),
+        eval_batches: 4,
+        log_path: Some(log_path.clone()),
+        checkpoint_path: Some("checkpoints/train_lm.npz".into()),
+    };
+
+    let report = trainer.train(&cfg, train_task.as_mut(),
+                               Some(eval_task.as_mut()))?;
+
+    println!("\nloss curve (from {}):", log_path.display());
+    let text = std::fs::read_to_string(&log_path)?;
+    let records: Vec<&str> = text.lines().collect();
+    let show = 12.min(records.len());
+    for i in 0..show {
+        let idx = i * (records.len() - 1) / (show - 1).max(1);
+        println!("  {}", records[idx]);
+    }
+
+    println!("\nsummary: loss {:.4} -> {:.4} | {:.0} tok/s | {:.1}s total",
+             report.first_loss, report.final_loss,
+             report.tokens_per_sec, report.elapsed_secs);
+    for (step, e) in &report.evals {
+        println!("  eval@{step}: held-out ppl {:.3} (nll {:.4}) acc {:.1}%",
+                 e.ppl, e.nll, 100.0 * e.accuracy);
+    }
+    // The corpus has a known entropy floor (MarkovCorpus::entropy_rate ≈
+    // 1.9 nats for fanout 8); a working trainer must approach it.
+    anyhow::ensure!(report.final_loss < report.first_loss,
+                    "loss did not decrease");
+    println!("\ncheckpoint: checkpoints/train_lm.npz");
+    Ok(())
+}

@@ -1,0 +1,385 @@
+"""AOT export: lower L2/L1 computations to HLO *text* + a JSON manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/load_hlo/.
+
+Each artifact `<name>.hlo.txt` ships with `<name>.manifest.json` describing
+every input/output tensor in the exact flattened order jax.jit uses —
+(positional args; flat dicts flatten in sorted-key order) — plus init specs
+so the Rust runtime can construct parameter buffers without Python.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--set default]
+        [--only substring]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim
+from .kernels import delta_chunkwise, delta_recurrent
+from .model import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Presets: export-time shapes.  `batch`/`seq_len` are artifact shapes, the
+# rest feeds ModelConfig.  (Paper scale: 340M/1.3B/3B on 8×H100 — see
+# DESIGN.md §Substitutions for the scaling rationale.)
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # vocab 128: fits every synthetic task alphabet (MQAR ≤16 pairs needs
+    # 2+2·48 = 98; the recall suites need 68; the corpus uses 128)
+    "tiny": dict(vocab_size=128, d_model=64, n_layers=2, n_heads=2,
+                 chunk_size=16, swa_window=16, max_seq_len=128,
+                 batch=8, seq_len=64),
+    "small": dict(vocab_size=512, d_model=128, n_layers=4, n_heads=4,
+                  chunk_size=32, swa_window=32, max_seq_len=256,
+                  batch=8, seq_len=128),
+    "medium": dict(vocab_size=2048, d_model=256, n_layers=6, n_heads=4,
+                   chunk_size=64, swa_window=64, max_seq_len=512,
+                   batch=8, seq_len=256),
+    # end-to-end LM training driver (examples/train_lm.rs): ~28M params
+    "e2e": dict(vocab_size=8192, d_model=512, n_layers=8, n_heads=8,
+                chunk_size=64, swa_window=64, max_seq_len=512,
+                batch=8, seq_len=256),
+    # ~100M-class configuration (paper's 340M row scaled to this testbed)
+    "e2e100m": dict(vocab_size=16384, d_model=768, n_layers=12, n_heads=12,
+                    chunk_size=64, swa_window=64, max_seq_len=512,
+                    batch=4, seq_len=256),
+    # long-sequence throughput probe (Fig. 4's crossover: linear-time
+    # mixers vs O(L²) attention at L = 1024)
+    "long": dict(vocab_size=128, d_model=128, n_layers=2, n_heads=2,
+                 chunk_size=64, swa_window=64, max_seq_len=1024,
+                 batch=1, seq_len=1024),
+}
+
+ARCHS = ["deltanet", "gla", "retnet", "mamba2", "linattn", "transformer",
+         "hybrid_swa", "hybrid_global"]
+
+
+def make_config(preset: str, arch: str, **overrides) -> ModelConfig:
+    p = dict(PRESETS[preset])
+    p.pop("batch"), p.pop("seq_len")
+    p.update(overrides)
+    return ModelConfig(arch=arch, **p)
+
+
+# ---------------------------------------------------------------------------
+# Lowering + manifest plumbing
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+
+
+def _entries(tree, arg_name: str, role: str, inits=None):
+    """Flatten one positional arg into manifest entries, in the exact order
+    jax.jit flattens it (tree_flatten_with_path matches tree_flatten)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = arg_name + "".join(
+            f".{p.key}" for p in path)  # DictKey(.key); empty for scalars
+        e = {"name": name, "shape": [int(d) for d in leaf.shape],
+             "dtype": _dt(leaf.dtype), "role": role}
+        if inits is not None:
+            key = name.split(".", 1)[1] if "." in name else name
+            e["init"] = inits[key]
+        out.append(e)
+    return out
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def param_abstract(cfg: ModelConfig):
+    return {n: f32(*s) for n, s, _ in M.param_spec(cfg)}
+
+
+def write_artifact(out_dir, name, lowered, in_entries, out_entries, meta):
+    t0 = time.time()
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest = dict(name=name, inputs=in_entries, outputs=out_entries, **meta)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {name}: {len(text)/1e6:.2f} MB hlo, "
+          f"{len(in_entries)}→{len(out_entries)} tensors "
+          f"({time.time()-t0:.1f}s)")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+def build_train(out_dir, arch: str, preset: str):
+    cfg = make_config(preset, arch)
+    B, L = PRESETS[preset]["batch"], PRESETS[preset]["seq_len"]
+    pa = param_abstract(cfg)
+    inits = {n: init for n, _, init in M.param_spec(cfg)}
+
+    def train_fn(params, m, v, step, lr, tokens, mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, tokens, mask))(params)
+        params, m, v = optim.adamw_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    args = (pa, pa, pa, f32(), f32(), i32(B, L + 1), f32(B, L))
+    lowered = jax.jit(train_fn, keep_unused=True).lower(*args)
+    ins = (_entries(pa, "params", "param", inits)
+           + _entries(pa, "m", "opt_m")
+           + _entries(pa, "v", "opt_v")
+           + [{"name": "step", "shape": [], "dtype": "f32", "role": "data"},
+              {"name": "lr", "shape": [], "dtype": "f32", "role": "data"},
+              {"name": "tokens", "shape": [B, L + 1], "dtype": "i32",
+               "role": "data"},
+              {"name": "mask", "shape": [B, L], "dtype": "f32",
+               "role": "data"}])
+    outs = (_entries(pa, "params", "param")
+            + _entries(pa, "m", "opt_m")
+            + _entries(pa, "v", "opt_v")
+            + [{"name": "loss", "shape": [], "dtype": "f32",
+                "role": "metric"}])
+    name = f"{arch}_{preset}.train"
+    meta = dict(kind="train", config=cfg.to_dict(), batch=B, seq_len=L)
+    return write_artifact(out_dir, name, lowered, ins, outs, meta)
+
+
+def build_eval(out_dir, arch: str, preset: str):
+    cfg = make_config(preset, arch)
+    B, L = PRESETS[preset]["batch"], PRESETS[preset]["seq_len"]
+    pa = param_abstract(cfg)
+    inits = {n: init for n, _, init in M.param_spec(cfg)}
+
+    def eval_fn(params, tokens, mask):
+        return M.lm_eval(cfg, params, tokens, mask)
+
+    args = (pa, i32(B, L + 1), f32(B, L))
+    lowered = jax.jit(eval_fn, keep_unused=True).lower(*args)
+    ins = (_entries(pa, "params", "param", inits)
+           + [{"name": "tokens", "shape": [B, L + 1], "dtype": "i32",
+               "role": "data"},
+              {"name": "mask", "shape": [B, L], "dtype": "f32",
+               "role": "data"}])
+    outs = [
+        {"name": "nll_sum", "shape": [], "dtype": "f32", "role": "metric"},
+        {"name": "correct_sum", "shape": [], "dtype": "f32",
+         "role": "metric"},
+        {"name": "preds", "shape": [B, L], "dtype": "i32", "role": "metric"},
+    ]
+    name = f"{arch}_{preset}.eval"
+    meta = dict(kind="eval", config=cfg.to_dict(), batch=B, seq_len=L)
+    return write_artifact(out_dir, name, lowered, ins, outs, meta)
+
+
+def build_decode(out_dir, arch: str, preset: str, batch: int | None = None):
+    cfg = make_config(preset, arch)
+    B = batch or PRESETS[preset]["batch"]
+    pa = param_abstract(cfg)
+    inits = {n: init for n, _, init in M.param_spec(cfg)}
+    sa = {n: f32(*s) for n, s in M.state_spec(cfg, B)}
+
+    def decode_fn(params, state, token, pos):
+        return M.decode_step(cfg, params, state, token, pos)
+
+    args = (pa, sa, i32(B), jax.ShapeDtypeStruct((), jnp.int32))
+    lowered = jax.jit(decode_fn, keep_unused=True).lower(*args)
+    ins = (_entries(pa, "params", "param", inits)
+           + _entries(sa, "state", "state")
+           + [{"name": "token", "shape": [B], "dtype": "i32",
+               "role": "data"},
+              {"name": "pos", "shape": [], "dtype": "i32", "role": "data"}])
+    outs = ([{"name": "logits", "shape": [B, cfg.vocab_size],
+              "dtype": "f32", "role": "metric"}]
+            + _entries(sa, "state", "state"))
+    name = f"{arch}_{preset}.decode"
+    meta = dict(kind="decode", config=cfg.to_dict(), batch=B,
+                seq_len=cfg.max_seq_len)
+    return write_artifact(out_dir, name, lowered, ins, outs, meta)
+
+
+def build_kernel(out_dir, form: str, L: int, d: int, C: int, B: int):
+    """Standalone DeltaNet kernel artifacts for the Fig. 1 speed harness:
+    chunkwise-parallel vs token-recurrent at various (L, d_head)."""
+    if form == "chunkwise":
+        def fn(q, k, v, beta):
+            o, s = jax.vmap(
+                lambda q, k, v, b: delta_chunkwise(q, k, v, b, C)
+            )(q, k, v, beta)
+            return o, s
+    elif form == "recurrent":
+        def fn(q, k, v, beta):
+            o, s = jax.vmap(delta_recurrent)(q, k, v, beta)
+            return o, s
+    else:
+        raise ValueError(form)
+
+    args = (f32(B, L, d), f32(B, L, d), f32(B, L, d), f32(B, L))
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    ins = [{"name": n, "shape": [B, L, d] if n != "beta" else [B, L],
+            "dtype": "f32", "role": "data"}
+           for n in ("q", "k", "v", "beta")]
+    outs = [{"name": "o", "shape": [B, L, d], "dtype": "f32",
+             "role": "metric"},
+            {"name": "s", "shape": [B, d, d], "dtype": "f32",
+             "role": "metric"}]
+    name = f"kernel_{form}_L{L}_d{d}_C{C}_B{B}"
+    meta = dict(kind="kernel", form=form, L=L, d=d, C=C, batch=B,
+                seq_len=L, config=None)
+    return write_artifact(out_dir, name, lowered, ins, outs, meta)
+
+
+def build_ablation(out_dir, feature_map: str, key_norm: str, preset="tiny"):
+    """§4.2 ablation rows: feature map × key normalization for DeltaNet."""
+    cfg = make_config(preset, "deltanet", feature_map=feature_map,
+                      key_norm=key_norm)
+    B, L = PRESETS[preset]["batch"], PRESETS[preset]["seq_len"]
+    pa = param_abstract(cfg)
+    inits = {n: init for n, _, init in M.param_spec(cfg)}
+
+    def train_fn(params, m, v, step, lr, tokens, mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, tokens, mask))(params)
+        params, m, v = optim.adamw_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    args = (pa, pa, pa, f32(), f32(), i32(B, L + 1), f32(B, L))
+    lowered = jax.jit(train_fn, keep_unused=True).lower(*args)
+    ins = (_entries(pa, "params", "param", inits)
+           + _entries(pa, "m", "opt_m") + _entries(pa, "v", "opt_v")
+           + [{"name": "step", "shape": [], "dtype": "f32", "role": "data"},
+              {"name": "lr", "shape": [], "dtype": "f32", "role": "data"},
+              {"name": "tokens", "shape": [B, L + 1], "dtype": "i32",
+               "role": "data"},
+              {"name": "mask", "shape": [B, L], "dtype": "f32",
+               "role": "data"}])
+    outs = (_entries(pa, "params", "param")
+            + _entries(pa, "m", "opt_m") + _entries(pa, "v", "opt_v")
+            + [{"name": "loss", "shape": [], "dtype": "f32",
+                "role": "metric"}])
+    name = f"deltanet_abl_{feature_map}_{key_norm}_{preset}.train"
+    meta = dict(kind="train", config=cfg.to_dict(), batch=B, seq_len=L)
+    return write_artifact(out_dir, name, lowered, ins, outs, meta)
+
+
+# ---------------------------------------------------------------------------
+# Artifact sets
+# ---------------------------------------------------------------------------
+
+def default_set(out_dir):
+    """Everything tests, examples and reproduce-harnesses need.
+    Each job is (artifact-name, thunk) so --only can filter before building."""
+    jobs = []
+    for arch in ARCHS:
+        jobs.append((f"{arch}_tiny.train",
+                     lambda a=arch: build_train(out_dir, a, "tiny")))
+        jobs.append((f"{arch}_tiny.eval",
+                     lambda a=arch: build_eval(out_dir, a, "tiny")))
+    jobs.append(("deltanet_tiny.decode",
+                 lambda: build_decode(out_dir, "deltanet", "tiny")))
+    jobs.append(("hybrid_swa_tiny.decode",
+                 lambda: build_decode(out_dir, "hybrid_swa", "tiny")))
+    # small-preset deltanet + key baselines for fig2/fig4-style sweeps
+    for arch in ("deltanet", "gla", "mamba2", "transformer"):
+        jobs.append((f"{arch}_small.train",
+                     lambda a=arch: build_train(out_dir, a, "small")))
+        jobs.append((f"{arch}_small.eval",
+                     lambda a=arch: build_eval(out_dir, a, "small")))
+    jobs.append(("deltanet_small.decode",
+                 lambda: build_decode(out_dir, "deltanet", "small")))
+    # fig4 long-sequence crossover probes (train-step throughput only)
+    for arch in ("deltanet", "gla", "transformer"):
+        jobs.append((f"{arch}_long.train",
+                     lambda a=arch: build_train(out_dir, a, "long")))
+    # fig1: chunkwise vs recurrent kernel grid (B·L = 4096 tokens fixed)
+    for L in (256, 512, 1024, 2048, 4096):
+        B = 4096 // L
+        for d in (32, 64):
+            for form in ("chunkwise", "recurrent"):
+                jobs.append((f"kernel_{form}_L{L}_d{d}_C64_B{B}",
+                             lambda form=form, L=L, d=d, B=B: build_kernel(
+                                 out_dir, form, L, d, 64, B)))
+    # chunk-size ablation artifacts for the perf study
+    for C in (16, 32, 64, 128):
+        jobs.append((f"kernel_chunkwise_L1024_d64_C{C}_B4",
+                     lambda C=C: build_kernel(
+                         out_dir, "chunkwise", 1024, 64, C, 4)))
+    # feature-map / norm ablations (paper Table 2, bottom)
+    for fm, kn in (("silu", "l1"), ("elu1", "l2"), ("elu1", "l1"),
+                   ("relu", "l2")):
+        jobs.append((f"deltanet_abl_{fm}_{kn}_tiny.train",
+                     lambda fm=fm, kn=kn: build_ablation(out_dir, fm, kn)))
+    return jobs
+
+
+def e2e_set(out_dir):
+    return [
+        ("deltanet_e2e.train",
+         lambda: build_train(out_dir, "deltanet", "e2e")),
+        ("deltanet_e2e.eval",
+         lambda: build_eval(out_dir, "deltanet", "e2e")),
+        ("deltanet_e2e.decode",
+         lambda: build_decode(out_dir, "deltanet", "e2e", batch=4)),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="default",
+                    choices=["default", "e2e", "all"])
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = []
+    if args.set in ("default", "all"):
+        jobs += default_set(args.out)
+    if args.set in ("e2e", "all"):
+        jobs += e2e_set(args.out)
+    if args.only:
+        jobs = [(n, j) for n, j in jobs if args.only in n]
+
+    t0 = time.time()
+    built = []
+    for _, job in jobs:
+        built.append(job())
+    index_path = os.path.join(args.out, "index.json")
+    existing = []
+    if os.path.exists(index_path):
+        existing = json.load(open(index_path))
+    merged = sorted(set(existing) | set(built))
+    with open(index_path, "w") as f:
+        json.dump(merged, f, indent=1)
+    print(f"built {len(built)} artifacts in {time.time()-t0:.0f}s "
+          f"→ {args.out}")
+
+
+if __name__ == "__main__":
+    main()

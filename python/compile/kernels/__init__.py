@@ -1,0 +1,36 @@
+"""L1 — Pallas kernels (build-time only; lowered into HLO by compile.aot).
+
+Public surface:
+    delta_chunkwise       — the paper's chunkwise-parallel DeltaNet forward
+    delta_chunkwise_ad    — custom-VJP wrapper (recompute backward)
+    delta_chunkwise_jnp   — same algorithm, plain jnp (oracle / bwd body)
+    delta_recurrent       — token-by-token DeltaNet (Fig. 1 baseline)
+    linear_attn_chunkwise — vanilla linear attention (Eq. 1–2)
+    gla_chunkwise         — gated linear attention baseline
+    scalar_decay_chunkwise— RetNet / Mamba-2 baseline
+    causal_attention, sliding_window_attention, flash_attention
+    ref                   — step-by-step oracles for all of the above
+"""
+
+from .attention import (causal_attention, flash_attention,
+                        sliding_window_attention)
+from .delta_chunkwise import (delta_chunkwise, delta_chunkwise_ad,
+                              delta_chunkwise_jnp)
+from .delta_recurrent import delta_recurrent
+from .gla import gla_ad, gla_chunkwise, gla_chunkwise_jnp
+from .linear_attn import (linear_attn_ad, linear_attn_chunkwise,
+                          linear_attn_chunkwise_jnp)
+from .scalar_decay import (scalar_decay_ad, scalar_decay_chunkwise,
+                           scalar_decay_chunkwise_jnp)
+from . import ref, wy
+
+__all__ = [
+    "delta_chunkwise", "delta_chunkwise_ad", "delta_chunkwise_jnp",
+    "delta_recurrent",
+    "linear_attn_chunkwise", "linear_attn_chunkwise_jnp", "linear_attn_ad",
+    "gla_chunkwise", "gla_chunkwise_jnp", "gla_ad",
+    "scalar_decay_chunkwise", "scalar_decay_chunkwise_jnp",
+    "scalar_decay_ad",
+    "causal_attention", "flash_attention", "sliding_window_attention",
+    "ref", "wy",
+]

@@ -1,0 +1,91 @@
+"""Softmax attention operators for the Transformer++ baseline and hybrids.
+
+Causal full attention and sliding-window attention (SWA), plus a blockwise
+(flash-style) Pallas variant of causal attention used when L is large —
+same online-softmax restructuring as FlashAttention, expressed as a Pallas
+grid over query blocks with an inner lax.fori_loop over key blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # large-but-finite: keeps padded rows NaN-free
+
+
+def causal_attention(q, k, v, scale=None):
+    """Plain causal softmax attention, [L, d] → [L, d_v]."""
+    L = q.shape[0]
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    logits = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    logits = jnp.where(mask, logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+def sliding_window_attention(q, k, v, window: int, scale=None):
+    """Causal SWA: position i attends to (i−window, i]."""
+    L = q.shape[0]
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    logits = (q @ k.T) * scale
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    mask = (j <= i) & (j > i - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block: int, scale: float):
+    """Online-softmax causal attention: grid over query blocks, fori_loop
+    over key blocks up to the diagonal."""
+    qi = pl.program_id(0)
+    Q = q_ref[...] * scale                                  # [B, d]
+    B, d_v = Q.shape[0], v_ref.shape[-1]
+
+    def body(kj, carry):
+        acc, m, l = carry
+        K = k_ref[pl.dslice(kj * block, block), :]
+        V = v_ref[pl.dslice(kj * block, block), :]
+        s = Q @ K.T                                         # [B, B]
+        # causal mask on the diagonal block
+        row = qi * block + jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+        col = kj * block + jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+        s = jnp.where(col <= row, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        acc = acc * alpha[:, None] + p @ V
+        l = l * alpha + p.sum(-1)
+        return acc, m_new, l
+
+    acc = jnp.zeros((B, d_v), Q.dtype)
+    m = jnp.full((B,), NEG_INF, Q.dtype)
+    l = jnp.zeros((B,), Q.dtype)
+    acc, m, l = jax.lax.fori_loop(0, qi + 1, body, (acc, m, l))
+    o_ref[...] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def flash_attention(q, k, v, block: int = 64):
+    """Blockwise causal attention (Pallas, interpret).  L % block == 0."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    assert L % block == 0
+    scale = d_k ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block=block, scale=scale),
+        grid=(L // block,),
+        in_specs=[
+            pl.BlockSpec((block, d_k), lambda i: (i, 0)),
+            pl.BlockSpec((L, d_k), lambda i: (0, 0)),   # full K visible
+            pl.BlockSpec((L, d_v), lambda i: (0, 0)),   # full V visible
+        ],
+        out_specs=pl.BlockSpec((block, d_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, d_v), q.dtype),
+        interpret=True,
+    )(q, k, v)

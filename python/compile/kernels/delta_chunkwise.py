@@ -1,0 +1,164 @@
+"""Chunkwise-parallel DeltaNet forward — the paper's core contribution (§3.2).
+
+One fused Pallas kernel sweeps the grid over sequence chunks, carrying the
+d_k×d_v state in a revisited output block (never materializing per-step
+states — the WY representation keeps everything rank-C inside a chunk):
+
+  per chunk [t]:
+    A    = tril(diag(β) K Kᵀ, −1)                 # C×C, strictly lower
+    Tmat = (I + A)⁻¹                              # log₂C matmuls (UT transform)
+    W    = Tmat diag(β) K        U = Tmat diag(β) V
+    U̅    = U − W S                                # fold in inter-chunk state
+    O    = Q S + (Q Kᵀ ⊙ M) U̅                     # Eq. 9
+    S    ← S + Kᵀ U̅                               # Eq. 8
+
+Hardware adaptation (paper: Triton/H100 → here: Pallas/TPU-shape):
+  * the threadblock-per-chunk schedule becomes the Pallas grid over L/C;
+  * K/V/Q chunk tiles live in VMEM via BlockSpec; the state S is a revisited
+    output block (the TPU grid is sequential, so read-modify-write is sound);
+  * everything is expressed as (C×d)·(d×d) / (C×C)·(C×d) matmuls → MXU.
+  * interpret=True: the CPU PJRT plugin cannot execute Mosaic custom-calls;
+    interpret mode lowers the identical schedule to plain HLO.
+
+VMEM footprint per grid step (fp32): 3·C·d (q,k,v tiles) + C (β) + C·d (o)
++ d·d (state) + ~3·C² (A, Tmat, mask) + 2·C·d (W, U) floats.
+For C=64, d=128: ≈ 64·128·6 + 3·4096 + 16384 ≈ 0.33 MiB « 16 MiB VMEM;
+C=128, d=256: ≈ 1.4 MiB — comfortably double-bufferable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import wy
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, beta_ref, o_ref, s_ref, *, C: int):
+    """One grid step = one sequence chunk.  s_ref is the revisited state."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    Q = q_ref[...]                       # [C, d_k]
+    K = k_ref[...]                       # [C, d_k]
+    V = v_ref[...]                       # [C, d_v]
+    beta = beta_ref[...]                 # [C]
+    S = s_ref[...]                       # [d_k, d_v]
+
+    Kb = K * beta[:, None]
+    A = jnp.tril(jnp.dot(Kb, K.T), -1)                 # C×C
+    Tmat = wy.tri_inv_unit_lower(A)                    # (I + A)⁻¹
+    W = jnp.dot(Tmat, Kb)                              # [C, d_k]
+    U = jnp.dot(Tmat, V * beta[:, None])               # [C, d_v]
+    U_bar = U - jnp.dot(W, S)                          # [C, d_v]
+
+    attn = jnp.tril(jnp.dot(Q, K.T))                   # (Q Kᵀ ⊙ M), C×C
+    o_ref[...] = jnp.dot(Q, S) + jnp.dot(attn, U_bar)  # Eq. 9
+    s_ref[...] = S + jnp.dot(K.T, U_bar)               # Eq. 8
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def delta_chunkwise(q, k, v, beta, chunk_size: int = 64):
+    """Chunkwise-parallel DeltaNet forward (Pallas, interpret mode).
+
+    q, k : [L, d_k]   v : [L, d_v]   beta : [L]   L % chunk_size == 0.
+    Returns (o [L, d_v], final_state [d_k, d_v]).
+    """
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0, f"L={L} must be a multiple of chunk_size={C}"
+
+    o, s = pl.pallas_call(
+        functools.partial(_chunk_kernel, C=C),
+        grid=(L // C,),
+        in_specs=[
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((C,), lambda t: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((d_k, d_v), lambda t: (0, 0)),   # revisited: the carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_v), q.dtype),
+            jax.ShapeDtypeStruct((d_k, d_v), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, beta)
+    return o, s
+
+
+def delta_chunkwise_jnp(q, k, v, beta, chunk_size: int = 64,
+                        initial_state=None):
+    """The same chunkwise algorithm in plain jnp (lax.scan over chunks).
+
+    Three uses: (1) middle oracle between the step-by-step recurrence and the
+    Pallas kernel, (2) the differentiable body for the custom-VJP backward
+    (hidden states recomputed chunk-by-chunk, the paper's remat strategy),
+    (3) supports a non-zero initial state for chunked prefill.
+    """
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+    n = L // C
+
+    qc = q.reshape(n, C, d_k)
+    kc = k.reshape(n, C, d_k)
+    vc = v.reshape(n, C, d_v)
+    bc = beta.reshape(n, C)
+
+    # Intra-chunk UT transform for every chunk in parallel (vmapped matmuls).
+    W, U = jax.vmap(wy.ut_transform)(kc, vc, bc)
+
+    S0 = (jnp.zeros((d_k, d_v), q.dtype)
+          if initial_state is None else initial_state)
+
+    def chunk_step(S, inp):
+        Qt, Kt, Ut, Wt = inp
+        U_bar = Ut - Wt @ S
+        attn = jnp.tril(Qt @ Kt.T)
+        o = Qt @ S + attn @ U_bar
+        S = S + Kt.T @ U_bar
+        return S, o
+
+    S, oc = jax.lax.scan(chunk_step, S0, (qc, kc, U, W))
+    return oc.reshape(L, d_v), S
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward + recompute backward (custom VJP).
+# The backward pass re-runs the jnp chunkwise body under jax.vjp — this is
+# exactly the paper's "hidden states recomputed during the backward pass"
+# strategy (§3.2, Practical considerations): only (q, k, v, β) are saved.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def delta_chunkwise_ad(q, k, v, beta, chunk_size: int = 64):
+    o, _ = delta_chunkwise(q, k, v, beta, chunk_size)
+    return o
+
+
+def _ad_fwd(q, k, v, beta, chunk_size):
+    o, _ = delta_chunkwise(q, k, v, beta, chunk_size)
+    return o, (q, k, v, beta)
+
+
+def _ad_bwd(chunk_size, res, g):
+    q, k, v, beta = res
+    _, vjp = jax.vjp(
+        lambda q, k, v, b: delta_chunkwise_jnp(q, k, v, b, chunk_size)[0],
+        q, k, v, beta)
+    return vjp(g)
+
+
+delta_chunkwise_ad.defvjp(_ad_fwd, _ad_bwd)

@@ -1,0 +1,69 @@
+"""Recurrent-form DeltaNet forward as a Pallas kernel (the paper's baseline).
+
+This is the form the original Schlag et al. (2021) implementation used: one
+grid step per *token*, state carried across steps.  It exists to reproduce
+Figure 1 (chunkwise-parallel vs recurrent speedup): the recurrent form does
+O(L) sequential steps of rank-1 (outer-product) work — no matmul richness,
+no sequence-level parallelism — while the chunkwise kernel does O(L/C) steps
+of dense-matmul work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _token_kernel(q_ref, k_ref, v_ref, beta_ref, o_ref, s_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_t = q_ref[...].reshape(-1)         # [d_k]
+    k_t = k_ref[...].reshape(-1)         # [d_k]
+    v_t = v_ref[...].reshape(-1)         # [d_v]
+    b_t = beta_ref[...].reshape(())      # scalar
+    S = s_ref[...]                       # [d_k, d_v]
+
+    v_old = k_t @ S                      # retrieve:  S_{t-1} k_t
+    v_new = b_t * v_t + (1.0 - b_t) * v_old
+    S = S + jnp.outer(k_t, v_new - v_old)
+    o_ref[...] = (q_t @ S).reshape(o_ref.shape)
+    s_ref[...] = S
+
+
+@jax.jit
+def delta_recurrent(q, k, v, beta):
+    """Token-by-token DeltaNet forward (Pallas, interpret mode).
+
+    q, k : [L, d_k]   v : [L, d_v]   beta : [L].
+    Returns (o [L, d_v], final_state [d_k, d_v]).
+    """
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+
+    o, s = pl.pallas_call(
+        _token_kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((1, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((1, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((1,), lambda t: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((d_k, d_v), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_v), q.dtype),
+            jax.ShapeDtypeStruct((d_k, d_v), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, beta)
+    return o, s

@@ -1,0 +1,123 @@
+"""Chunkwise Gated Linear Attention (Yang et al. 2023) — baseline kernel.
+
+Recurrence: S_t = diag(α_t) S_{t-1} + k_t v_tᵀ with per-channel,
+data-dependent decay α_t ∈ (0,1)^{d_k}.  Chunkwise form with the standard
+secondary-chunking-free cumprod trick:
+
+  Λ_r  = ∏_{i≤r} α_i                       (inclusive cumulative decay)
+  o_r  = (q_r ⊙ Λ_r) S₀ + Σ_{j≤r} ((q_r⊙Λ_r)·(k_j/Λ_j)) v_j
+  S_C  = diag(Λ_C) S₀ + Σ_j (k_j ⊙ Λ_C/Λ_j) v_jᵀ
+
+The k/Λ division is numerically safe for α bounded away from 0 and C
+moderate (the model layer lower-bounds α; see layers.gla_gate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, a_ref, o_ref, s_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    Q = q_ref[...]
+    K = k_ref[...]
+    V = v_ref[...]
+    alpha = a_ref[...]                    # [C, d_k]
+    S = s_ref[...]
+
+    lam = jnp.cumprod(alpha, axis=0)      # Λ_r, inclusive
+    lam_C = lam[-1]
+    q_t = Q * lam
+    k_div = K / lam
+    k_scl = K * (lam_C / lam)
+
+    attn = jnp.tril(jnp.dot(q_t, k_div.T))
+    o_ref[...] = jnp.dot(q_t, S) + jnp.dot(attn, V)
+    s_ref[...] = lam_C[:, None] * S + jnp.dot(k_scl.T, V)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def gla_chunkwise(q, k, v, alpha, chunk_size: int = 64):
+    """q, k : [L, d_k]  v : [L, d_v]  alpha : [L, d_k] ∈ (0,1).
+    Returns (o [L, d_v], final_state [d_k, d_v])."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+
+    o, s = pl.pallas_call(
+        _chunk_kernel,
+        grid=(L // C,),
+        in_specs=[
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((d_k, d_v), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_v), q.dtype),
+            jax.ShapeDtypeStruct((d_k, d_v), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, alpha)
+    return o, s
+
+
+def gla_chunkwise_jnp(q, k, v, alpha, chunk_size: int = 64,
+                      initial_state=None):
+    """Plain-jnp twin (scan over chunks) — oracle + custom-VJP bwd body."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+    n = L // C
+    qc, kc = q.reshape(n, C, d_k), k.reshape(n, C, d_k)
+    vc, ac = v.reshape(n, C, d_v), alpha.reshape(n, C, d_k)
+    S0 = (jnp.zeros((d_k, d_v), q.dtype)
+          if initial_state is None else initial_state)
+
+    def chunk_step(S, inp):
+        Qt, Kt, Vt, At = inp
+        lam = jnp.cumprod(At, axis=0)
+        lam_C = lam[-1]
+        q_t = Qt * lam
+        o = q_t @ S + jnp.tril(q_t @ (Kt / lam).T) @ Vt
+        S = lam_C[:, None] * S + (Kt * (lam_C / lam)).T @ Vt
+        return S, o
+
+    S, oc = jax.lax.scan(chunk_step, S0, (qc, kc, vc, ac))
+    return oc.reshape(L, d_v), S
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def gla_ad(q, k, v, alpha, chunk_size: int = 64):
+    """Differentiable wrapper: Pallas forward, recompute-jnp backward."""
+    return gla_chunkwise(q, k, v, alpha, chunk_size)[0]
+
+
+def _gla_fwd(q, k, v, alpha, chunk_size):
+    return gla_chunkwise(q, k, v, alpha, chunk_size)[0], (q, k, v, alpha)
+
+
+def _gla_bwd(chunk_size, res, g):
+    q, k, v, alpha = res
+    _, vjp = jax.vjp(
+        lambda q, k, v, a: gla_chunkwise_jnp(q, k, v, a, chunk_size)[0],
+        q, k, v, alpha)
+    return vjp(g)
+
+
+gla_ad.defvjp(_gla_fwd, _gla_bwd)

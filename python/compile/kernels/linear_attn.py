@@ -1,0 +1,107 @@
+"""Chunkwise vanilla linear attention (Eq. 1–2) as a Pallas kernel.
+
+The simplest member of the family (Katharopoulos et al. 2020, unnormalized
+form): S_{[t+1]} = S_{[t]} + K_{[t]}ᵀ V_{[t]},
+O_{[t]} = Q_{[t]} S_{[t]} + (Q_{[t]} K_{[t]}ᵀ ⊙ M) V_{[t]}.
+DeltaNet degenerates to this when the WY correction vanishes (orthogonal
+keys within a chunk and β ≡ 1 wrt state read-out is *not* identical — see
+tests for the exact relationship; this kernel is the baseline row in the
+family table, not an approximation of DeltaNet).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, o_ref, s_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    Q = q_ref[...]
+    K = k_ref[...]
+    V = v_ref[...]
+    S = s_ref[...]
+
+    attn = jnp.tril(jnp.dot(Q, K.T))
+    o_ref[...] = jnp.dot(Q, S) + jnp.dot(attn, V)
+    s_ref[...] = S + jnp.dot(K.T, V)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def linear_attn_chunkwise(q, k, v, chunk_size: int = 64):
+    """q, k : [L, d_k]  v : [L, d_v];  returns (o, final_state)."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+
+    o, s = pl.pallas_call(
+        _chunk_kernel,
+        grid=(L // C,),
+        in_specs=[
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((d_k, d_v), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_v), q.dtype),
+            jax.ShapeDtypeStruct((d_k, d_v), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, s
+
+
+def linear_attn_chunkwise_jnp(q, k, v, chunk_size: int = 64,
+                              initial_state=None):
+    """Plain-jnp twin (scan over chunks) — oracle + custom-VJP bwd body."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+    n = L // C
+    qc, kc = q.reshape(n, C, d_k), k.reshape(n, C, d_k)
+    vc = v.reshape(n, C, d_v)
+    S0 = (jnp.zeros((d_k, d_v), q.dtype)
+          if initial_state is None else initial_state)
+
+    def chunk_step(S, inp):
+        Qt, Kt, Vt = inp
+        o = Qt @ S + jnp.tril(Qt @ Kt.T) @ Vt
+        return S + Kt.T @ Vt, o
+
+    S, oc = jax.lax.scan(chunk_step, S0, (qc, kc, vc))
+    return oc.reshape(L, d_v), S
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_attn_ad(q, k, v, chunk_size: int = 64):
+    """Differentiable wrapper: Pallas forward, recompute-jnp backward."""
+    return linear_attn_chunkwise(q, k, v, chunk_size)[0]
+
+
+def _la_fwd(q, k, v, chunk_size):
+    return linear_attn_chunkwise(q, k, v, chunk_size)[0], (q, k, v)
+
+
+def _la_bwd(chunk_size, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: linear_attn_chunkwise_jnp(q, k, v, chunk_size)[0],
+        q, k, v)
+    return vjp(g)
+
+
+linear_attn_ad.defvjp(_la_fwd, _la_bwd)

@@ -1,0 +1,194 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+Every operator in this library has a step-by-step recurrent oracle here,
+written for clarity (lax.scan over time steps, explicit state updates).
+pytest compares the Pallas/chunkwise implementations against these — this is
+the CORE correctness signal of the whole stack.
+
+Conventions (single head; batching/heads are vmapped at L2):
+  q, k : [L, d_k]      v : [L, d_v]      beta/gamma : [L]
+  State S : [d_k, d_v] (row convention, as in the paper's Listing 1):
+      o_t = q_t @ S_t
+      paper's S_t = S_{t-1}(I − β k kᵀ) + β v kᵀ  becomes, transposed,
+      S_t = (I − β k kᵀ) S_{t-1} + β k v_tᵀ.
+All recurrent oracles return (outputs [L, d_v], final_state [d_k, d_v]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_rule_recurrent(q, k, v, beta, initial_state=None):
+    """DeltaNet (Schlag et al. 2021) — the delta-rule recurrence, step by step.
+
+    Retrieval/update form: v_old = S k; v_new = β v + (1−β) v_old;
+    S ← S − k v_oldᵀ + k v_newᵀ (in [d_k, d_v] layout)."""
+    d_k, d_v = q.shape[-1], v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(S, qkvb):
+        q_t, k_t, v_t, b_t = qkvb
+        v_old = k_t @ S                      # [d_v]
+        v_new = b_t * v_t + (1.0 - b_t) * v_old
+        S = S - jnp.outer(k_t, v_old) + jnp.outer(k_t, v_new)
+        o_t = q_t @ S
+        return S, o_t
+
+    S, o = jax.lax.scan(step, S0, (q, k, v, beta))
+    return o, S
+
+
+def linear_attn_recurrent(q, k, v, initial_state=None):
+    """Vanilla (unnormalized) linear attention: S_t = S_{t-1} + k_t v_tᵀ."""
+    d_k, d_v = q.shape[-1], v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(S, qkv):
+        q_t, k_t, v_t = qkv
+        S = S + jnp.outer(k_t, v_t)
+        return S, q_t @ S
+
+    S, o = jax.lax.scan(step, S0, (q, k, v))
+    return o, S
+
+
+def gla_recurrent(q, k, v, alpha, initial_state=None):
+    """Gated linear attention (Yang et al. 2023): S_t = diag(α_t) S_{t-1} + k_t v_tᵀ.
+
+    alpha : [L, d_k], per-channel data-dependent decay in (0, 1)."""
+    d_k, d_v = q.shape[-1], v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(S, qkva):
+        q_t, k_t, v_t, a_t = qkva
+        S = a_t[:, None] * S + jnp.outer(k_t, v_t)
+        return S, q_t @ S
+
+    S, o = jax.lax.scan(step, S0, (q, k, v, alpha))
+    return o, S
+
+
+def retnet_recurrent(q, k, v, gamma, initial_state=None):
+    """RetNet (Sun et al. 2023): S_t = γ S_{t-1} + k_t v_tᵀ, fixed scalar γ."""
+    d_k, d_v = q.shape[-1], v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(S, qkv):
+        q_t, k_t, v_t = qkv
+        S = gamma * S + jnp.outer(k_t, v_t)
+        return S, q_t @ S
+
+    S, o = jax.lax.scan(step, S0, (q, k, v))
+    return o, S
+
+
+def mamba2_recurrent(q, k, v, gamma, initial_state=None):
+    """Mamba-2-style (Dao & Gu 2024): S_t = γ_t S_{t-1} + k_t v_tᵀ,
+    data-dependent scalar decay γ_t ∈ (0, 1) per step.  gamma : [L]."""
+    d_k, d_v = q.shape[-1], v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(S, qkvg):
+        q_t, k_t, v_t, g_t = qkvg
+        S = g_t * S + jnp.outer(k_t, v_t)
+        return S, q_t @ S
+
+    S, o = jax.lax.scan(step, S0, (q, k, v, gamma))
+    return o, S
+
+
+def softmax_attention(q, k, v, scale=None):
+    """Causal softmax attention (single head). Returns [L, d_v]."""
+    L = q.shape[0]
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    logits = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+def sliding_window_attention(q, k, v, window, scale=None):
+    """Causal sliding-window attention: position i attends to [i−window+1, i]."""
+    L = q.shape[0]
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    logits = (q @ k.T) * scale
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    mask = (j <= i) & (j > i - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+def delta_rule_wy(q, k, v, beta, initial_state=None):
+    """DeltaNet via the *sequential* WY recurrence (Eq. 3 / Eq. 7 with one
+    chunk = the whole sequence).  Middle oracle: validates the WY
+    reparameterization u_t = β_t (v_t − Σ_{i<t} (k_iᵀ k_t) u_i) and
+    w_t = β_t (k_t − Σ_{i<t} (k_iᵀ k_t) w_i) independently of chunking."""
+    L, d_k = k.shape
+    d_v = v.shape[-1]
+    S0 = jnp.zeros((d_k, d_v), q.dtype) if initial_state is None else initial_state
+
+    def step(carry, t):
+        u_acc, w_acc = carry                              # rows < t are valid
+        kkt = k @ k[t]                                    # [L]
+        mask = (jnp.arange(L) < t)
+        corr_u = (u_acc * jnp.where(mask, kkt, 0.0)[:, None]).sum(0)
+        corr_w = (w_acc * jnp.where(mask, kkt, 0.0)[:, None]).sum(0)
+        u_acc = u_acc.at[t].set(beta[t] * (v[t] - corr_u))
+        w_acc = w_acc.at[t].set(beta[t] * (k[t] - corr_w))
+        return (u_acc, w_acc), None
+
+    (u, w), _ = jax.lax.scan(
+        step,
+        (jnp.zeros((L, d_v), q.dtype), jnp.zeros((L, d_k), q.dtype)),
+        jnp.arange(L))
+
+    # With initial state: S_L = S0 P + H  ⇒  u̅ = u − W S0 (rows).
+    u_bar = u - w @ S0
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    attn = jnp.where(mask, q @ k.T, 0.0)
+    o = q @ S0 + attn @ u_bar
+    S = S0 + k.T @ u_bar
+    return o, S
+
+
+def delta_attention_matrix(q, k, beta):
+    """The paper's fully-parallel-form 'attention matrix' (§3.2):
+    A = (QKᵀ ⊙ M) T with T = (I + tril(diag(β)KKᵀ, −1))⁻¹ diag(β).
+    A_ij is the weight of v_j in o_i.  O(L³) — interpretability tooling."""
+    L = q.shape[0]
+    kb = k * beta[:, None]
+    A_strict = jnp.tril(kb @ k.T, -1)
+    Tmat = jnp.linalg.inv(jnp.eye(L, dtype=q.dtype) + A_strict) * beta[None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, q @ k.T, 0.0) @ Tmat
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode steps (used by the L2 decode_step artifacts and tests).
+# Each takes (S, q_t, k_t, v_t, ...) and returns (o_t, S_new).
+# ---------------------------------------------------------------------------
+
+def delta_step(S, q_t, k_t, v_t, b_t):
+    v_old = k_t @ S
+    v_new = b_t * v_t + (1.0 - b_t) * v_old
+    S = S + jnp.outer(k_t, v_new - v_old)
+    return q_t @ S, S
+
+
+def linear_attn_step(S, q_t, k_t, v_t):
+    S = S + jnp.outer(k_t, v_t)
+    return q_t @ S, S
+
+
+def gla_step(S, q_t, k_t, v_t, a_t):
+    S = a_t[:, None] * S + jnp.outer(k_t, v_t)
+    return q_t @ S, S
+
+
+def scalar_decay_step(S, q_t, k_t, v_t, g_t):
+    """Shared by RetNet (fixed γ) and Mamba-2 (data-dependent γ_t)."""
+    S = g_t * S + jnp.outer(k_t, v_t)
+    return q_t @ S, S

@@ -1,0 +1,123 @@
+"""Chunkwise scalar-decay linear attention — shared kernel for two baselines:
+
+  * RetNet (Sun et al. 2023):  S_t = γ S_{t-1} + k_t v_tᵀ, γ fixed per head
+  * Mamba-2 (Dao & Gu 2024):   S_t = γ_t S_{t-1} + k_t v_tᵀ, γ_t = f(x_t)
+
+Both are the α_t = γ_t·1 specialization of GLA, but the scalar structure
+admits a cheaper kernel (decay enters as a C-vector, not a C×d_k matrix):
+
+  Λ_r  = ∏_{i≤r} γ_i
+  o_r  = Λ_r (q_r S₀) + Σ_{j≤r} (Λ_r/Λ_j)(q_r·k_j) v_j
+  S_C  = Λ_C S₀ + Σ_j (Λ_C/Λ_j) k_j v_jᵀ
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, s_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    Q = q_ref[...]
+    K = k_ref[...]
+    V = v_ref[...]
+    g = g_ref[...]                        # [C]
+    S = s_ref[...]
+
+    lam = jnp.cumprod(g)                  # [C], Λ_r inclusive
+    lam_C = lam[-1]
+
+    # decay ratio matrix D_rj = Λ_r/Λ_j for j ≤ r, 0 otherwise
+    attn = jnp.dot(Q, K.T) * jnp.tril(lam[:, None] / lam[None, :])
+    o_ref[...] = lam[:, None] * jnp.dot(Q, S) + jnp.dot(attn, V)
+    s_ref[...] = lam_C * S + jnp.dot((K * (lam_C / lam)[:, None]).T, V)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def scalar_decay_chunkwise(q, k, v, gamma, chunk_size: int = 64):
+    """q, k : [L, d_k]  v : [L, d_v]  gamma : [L] ∈ (0,1].
+    RetNet: pass gamma = γ·ones(L).  Mamba-2: gamma = σ-gated per token.
+    Returns (o [L, d_v], final_state [d_k, d_v])."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+
+    o, s = pl.pallas_call(
+        _chunk_kernel,
+        grid=(L // C,),
+        in_specs=[
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_k), lambda t: (t, 0)),
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((C,), lambda t: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, d_v), lambda t: (t, 0)),
+            pl.BlockSpec((d_k, d_v), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_v), q.dtype),
+            jax.ShapeDtypeStruct((d_k, d_v), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, gamma)
+    return o, s
+
+
+def scalar_decay_chunkwise_jnp(q, k, v, gamma, chunk_size: int = 64,
+                               initial_state=None):
+    """Plain-jnp twin (scan over chunks) — oracle + custom-VJP bwd body."""
+    L, d_k = q.shape
+    d_v = v.shape[-1]
+    C = chunk_size
+    assert L % C == 0
+    n = L // C
+    qc, kc = q.reshape(n, C, d_k), k.reshape(n, C, d_k)
+    vc, gc = v.reshape(n, C, d_v), gamma.reshape(n, C)
+    S0 = (jnp.zeros((d_k, d_v), q.dtype)
+          if initial_state is None else initial_state)
+
+    def chunk_step(S, inp):
+        Qt, Kt, Vt, gt = inp
+        lam = jnp.cumprod(gt)
+        lam_C = lam[-1]
+        attn = (Qt @ Kt.T) * jnp.tril(lam[:, None] / lam[None, :])
+        o = lam[:, None] * (Qt @ S) + attn @ Vt
+        S = lam_C * S + (Kt * (lam_C / lam)[:, None]).T @ Vt
+        return S, o
+
+    S, oc = jax.lax.scan(chunk_step, S0, (qc, kc, vc, gc))
+    return oc.reshape(L, d_v), S
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def scalar_decay_ad(q, k, v, gamma, chunk_size: int = 64):
+    """Differentiable wrapper: Pallas forward, recompute-jnp backward."""
+    return scalar_decay_chunkwise(q, k, v, gamma, chunk_size)[0]
+
+
+def _sd_fwd(q, k, v, gamma, chunk_size):
+    return (scalar_decay_chunkwise(q, k, v, gamma, chunk_size)[0],
+            (q, k, v, gamma))
+
+
+def _sd_bwd(chunk_size, res, g):
+    q, k, v, gamma = res
+    _, vjp = jax.vjp(
+        lambda q, k, v, gm:
+        scalar_decay_chunkwise_jnp(q, k, v, gm, chunk_size)[0],
+        q, k, v, gamma)
+    return vjp(g)
+
+
+scalar_decay_ad.defvjp(_sd_fwd, _sd_bwd)

@@ -1,0 +1,75 @@
+"""Shared WY-representation / UT-transform building blocks (paper §3.2).
+
+The UT transform (Eq. 10–11, sign convention of Listing 1) turns the
+intra-chunk recurrences for the pseudo-values u and transition vectors w
+into matmuls plus one unit-lower-triangular inverse:
+
+    A    = tril(diag(β) K Kᵀ, −1)            strictly lower, nilpotent
+    Tmat = (I + A)⁻¹                          unit lower triangular
+    W    = Tmat diag(β) K,   U = Tmat diag(β) V
+
+(the paper's Eq. 10 writes (I − tril(·, −1))⁻¹; its Listing 1 initializes
+T = −(K_β Kᵀ) — i.e. the inverse of (I + A) — which is the convention that
+matches the recurrences in Eq. 7.  We follow Listing 1 and verify against
+the Eq. 7 recurrence directly in pytest.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tri_inv_unit_lower(A):
+    """Invert (I + A) for strictly-lower-triangular A ∈ R^{C×C}.
+
+    A is nilpotent (A^C = 0), so
+
+        (I + A)⁻¹ = (I − A)(I + A²)(I + A⁴)(I + A⁸)…
+
+    — ⌈log₂ C⌉ dense C×C matmuls.  This is the matmul-rich ("tensor-core
+    friendly") counterpart of the forward-substitution loop in Listing 1;
+    on the MXU each factor is one systolic pass.
+    """
+    C = A.shape[-1]
+    eye = jnp.eye(C, dtype=A.dtype)
+    X = eye - A
+    P = -A  # holds (−A)^(2^i)
+    p = 1
+    while p < C - 1:
+        P = P @ P                  # (−A)^(2^(i+1)) == (A²)^(2^i)
+        X = (eye + P) @ X          # all factors are polynomials in A: commute
+        p *= 2
+    return X
+
+
+def tri_inv_forward_substitution(A):
+    """Reference forward-substitution inverse of (I + A) — the exact loop of
+    Listing 1 (row i updated from rows < i).  O(C) sequential steps; used as
+    an oracle for tri_inv_unit_lower and in the recurrent-form kernel."""
+    C = A.shape[-1]
+    T = -A
+    for i in range(1, C):
+        # T[i, :i] += Σ_{j<i} T[i, j] · T[j, :i]
+        T = T.at[i, :i].add(T[i, :i] @ T[:i, :i])
+    return T + jnp.eye(C, dtype=A.dtype)
+
+
+def ut_transform(K, V, beta, tri_inv=tri_inv_unit_lower):
+    """UT transform for one chunk: returns (W, U) with
+
+        w_r = β_r (k_r − Σ_{i<r} (k_iᵀ k_r) w_i)
+        u_r = β_r (v_r − Σ_{i<r} (k_iᵀ k_r) u_i)
+
+    K : [C, d_k], V : [C, d_v], beta : [C].
+    """
+    Kb = K * beta[:, None]
+    A = jnp.tril(Kb @ K.T, -1)
+    Tmat = tri_inv(A)
+    W = Tmat @ Kb
+    U = Tmat @ (V * beta[:, None])
+    return W, U
+
+
+def causal_mask(C, dtype):
+    """Lower-triangular (inclusive) mask as dtype — M_C in Eq. 2/9."""
+    return jnp.tril(jnp.ones((C, C), dtype))

@@ -1,0 +1,89 @@
+"""L2 building blocks: norms, FFN, short convolution, rotary, feature maps.
+
+Everything is a pure function over explicit parameter dicts (no flax/haiku)
+so that the parameter pytree ↔ manifest mapping stays trivial for the Rust
+side, which constructs and owns the actual parameter buffers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, g, eps: float = 1e-6):
+    """RMSNorm over the last axis with learned gain g."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def swiglu_ffn(x, p):
+    """SwiGLU feed-forward (Shazeer 2020): down(silu(gate(x)) * up(x)).
+    p: {w_gate [d,f], w_up [d,f], w_down [f,d]} — the paper's 8d² block
+    when f = 8d/3·… (we use f = 8d/3 rounded to a multiple of 64)."""
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def short_conv(x, w):
+    """Depthwise causal short convolution (Mamba-style, §3.4), kernel size
+    K: y_t = Σ_{j=0..K-1} w_j · x_{t-K+1+j}, per channel, then SiLU.
+
+    x : [L, d]   w : [K, d].  Expressed as K shifted multiplies — cheap,
+    differentiable, and trivially fusable by XLA."""
+    K = w.shape[0]
+    y = jnp.zeros_like(x)
+    for j in range(K):
+        shift = K - 1 - j  # how far in the past tap j looks
+        xs = jnp.pad(x, ((shift, 0), (0, 0)))[: x.shape[0]]
+        y = y + xs * w[j]
+    return jax.nn.silu(y)
+
+
+def short_conv_step(state, x_t, w):
+    """Single-token short conv for decoding.  state : [K-1, d] holds the
+    previous K-1 inputs (oldest first); returns (y_t, new_state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[None]], axis=0)      # [K, d]
+    y_t = (window * w).sum(0)
+    return jax.nn.silu(y_t), window[1:]
+
+
+def rotary(x, pos0: int = 0, base: float = 10000.0):
+    """Rotary position embedding over the last axis. x : [L, d] (d even)."""
+    L, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    t = (jnp.arange(L, dtype=jnp.float32) + pos0)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(t), jnp.sin(t)
+    x1, x2 = x[:, :half], x[:, half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def feature_map(x, kind: str):
+    """Query/key nonlinearity φ (§3.3 ablation: {SiLU, ReLU, 1+ELU})."""
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "elu1":
+        return jax.nn.elu(x) + 1.0
+    if kind == "identity":
+        return x
+    raise ValueError(f"unknown feature map {kind!r}")
+
+
+def key_normalize(x, kind: str, eps: float = 1e-6):
+    """Key/query normalization (§3.3 ablation: L2 vs L1).  L2 makes
+    I − βkkᵀ an exact projection at β=1; L1 is the Schlag et al. choice."""
+    if kind == "l2":
+        return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+    if kind == "l1":
+        return x / (jnp.abs(x).sum(-1, keepdims=True) + eps)
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown key norm {kind!r}")
+
+
+def retnet_gammas(n_heads: int):
+    """RetNet's fixed per-head decay: γ_h = 1 − 2^(−5−h)."""
+    return 1.0 - 2.0 ** (-5.0 - jnp.arange(n_heads, dtype=jnp.float32))

@@ -1,0 +1,454 @@
+"""L2 — the DeltaNet transformer and all baseline architectures (§3.3–3.4).
+
+LLaMA-style (Transformer++) blocks: pre-RMSNorm, token mixer (4d²), SwiGLU
+FFN (8d²).  The token mixer is pluggable per layer:
+
+    deltanet  — the paper's layer: SiLU+L2-norm q/k, σ writing strength β,
+                chunkwise-parallel delta-rule kernel (Pallas)
+    gla       — gated linear attention (per-channel data-dependent decay)
+    retnet    — fixed per-head exponential decay
+    mamba2    — scalar data-dependent decay
+    linattn   — vanilla linear attention
+    attn      — causal softmax attention + rotary (Transformer++ / hybrids)
+    swa       — sliding-window attention + rotary (hybrids)
+
+Hybrid layouts (§3.4): `hybrid_swa` interleaves deltanet/swa every other
+layer; `hybrid_global` replaces layer 2 and layer N/2+1 with global attn.
+
+Parameters are a FLAT dict {dotted-name: array}; sorted-key order is the
+manifest order the Rust side relies on.  All functions are pure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import (delta_chunkwise, delta_chunkwise_ad,
+                      gla_chunkwise, gla_ad,
+                      linear_attn_chunkwise, linear_attn_ad,
+                      scalar_decay_chunkwise, scalar_decay_ad,
+                      causal_attention, sliding_window_attention, ref)
+
+Params = Dict[str, jnp.ndarray]
+
+LINEAR_MIXERS = ("deltanet", "gla", "retnet", "mamba2", "linattn")
+ATTN_MIXERS = ("attn", "swa")
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    vocab_size: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    # architecture: one of deltanet/gla/retnet/mamba2/linattn/transformer/
+    # hybrid_swa/hybrid_global — expanded to a per-layer mixer list
+    arch: str = "deltanet"
+    use_conv: bool = True
+    conv_size: int = 4
+    feature_map: str = "silu"     # silu | relu | elu1 | identity
+    key_norm: str = "l2"          # l2 | l1 | none
+    chunk_size: int = 16
+    swa_window: int = 32
+    max_seq_len: int = 256        # decode-time KV-cache bound for attn layers
+    ffn_mult: float = 8.0 / 3.0   # SwiGLU hidden = ffn_mult * d (→ 8d² FLOPs)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def ffn_dim(self) -> int:
+        f = int(self.d_model * self.ffn_mult)
+        return max(64, (f + 63) // 64 * 64)
+
+    def mixers(self) -> List[str]:
+        """Expand `arch` into the per-layer mixer list."""
+        n = self.n_layers
+        if self.arch == "transformer":
+            return ["attn"] * n
+        if self.arch in LINEAR_MIXERS:
+            return [self.arch] * n
+        if self.arch == "hybrid_swa":
+            # Griffin/Samba-style interleave: delta, swa, delta, swa, ...
+            return ["deltanet" if i % 2 == 0 else "swa" for i in range(n)]
+        if self.arch == "hybrid_global":
+            # H3-style: global attention at layer index 1 and N//2 + 1
+            attn_at = {1, n // 2 + 1} if n > 2 else {1}
+            return ["attn" if i in attn_at else "deltanet" for i in range(n)]
+        raise ValueError(f"unknown arch {self.arch!r}")
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification — single source of truth for shapes + init.
+# Rust initializes buffers from the manifest generated off this spec.
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Returns ordered list of (name, shape, init) for all parameters.
+    init ∈ {"normal:<std>", "zeros", "ones", "const:<v>"}."""
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    hd = H * dh
+    spec = [("embed", (cfg.vocab_size, d), "normal:0.02")]
+    proj_init = f"normal:{0.02}"
+    out_init = f"normal:{0.02 / (2 * cfg.n_layers) ** 0.5}"  # GPT-2-style
+    for i, mixer in enumerate(cfg.mixers()):
+        L = f"L{i:02d}"
+        spec += [(f"{L}.norm1", (d,), "ones"), (f"{L}.norm2", (d,), "ones")]
+        spec += [
+            (f"{L}.mix.wq", (d, hd), proj_init),
+            (f"{L}.mix.wk", (d, hd), proj_init),
+            (f"{L}.mix.wv", (d, hd), proj_init),
+            (f"{L}.mix.wo", (hd, d), out_init),
+        ]
+        if mixer in LINEAR_MIXERS:
+            spec += [(f"{L}.mix.onorm", (hd,), "ones")]
+            if cfg.use_conv:
+                for s in ("q", "k", "v"):
+                    spec += [(f"{L}.mix.conv_{s}", (cfg.conv_size, hd),
+                              f"normal:{1.0 / cfg.conv_size}")]
+        if mixer == "deltanet":
+            spec += [(f"{L}.mix.wbeta", (d, H), proj_init),
+                     (f"{L}.mix.bbeta", (H,), "zeros")]
+        elif mixer == "gla":
+            spec += [(f"{L}.mix.walpha", (d, hd), proj_init),
+                     (f"{L}.mix.balpha", (hd,), "const:2.0")]
+        elif mixer == "mamba2":
+            spec += [(f"{L}.mix.wgamma", (d, H), proj_init),
+                     (f"{L}.mix.bgamma", (H,), "const:2.0")]
+        f = cfg.ffn_dim
+        spec += [
+            (f"{L}.ffn.w_gate", (d, f), proj_init),
+            (f"{L}.ffn.w_up", (d, f), proj_init),
+            (f"{L}.ffn.w_down", (f, d), out_init),
+        ]
+    spec += [("final_norm", (d,), "ones")]
+    # sorted-by-name: the exact order jax.jit flattens a flat dict, which is
+    # the order the manifest (and hence the Rust runtime) relies on
+    return sorted(spec, key=lambda e: e[0])
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Reference initializer (tests + aot sanity; Rust owns the real init)."""
+    params = {}
+    for name, shape, init in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if init.startswith("normal:"):
+            std = float(init.split(":")[1])
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+        elif init == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif init.startswith("const:"):
+            params[name] = jnp.full(shape, float(init.split(":")[1]),
+                                    jnp.float32)
+        else:
+            raise ValueError(init)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Token mixers (single sequence [L, d]; batch is vmapped at the top).
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, prefix, x, conv: bool):
+    """q/k/v projections with optional short conv, reshaped to [H, L, dh]."""
+    L = x.shape[0]
+    H, dh = cfg.n_heads, cfg.head_dim
+    out = []
+    for s, w in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        h = x @ p[f"{prefix}.{w}"]
+        if conv:
+            h = layers.short_conv(h, p[f"{prefix}.conv_{s}"])
+        out.append(h.reshape(L, H, dh).transpose(1, 0, 2))
+    return out  # each [H, L, dh]
+
+
+def _head_rms(o, g, H, dh):
+    """Per-head RMSNorm before the output projection (§3.3 stability)."""
+    gh = g.reshape(H, 1, dh)
+    var = jnp.mean(jnp.square(o), axis=-1, keepdims=True)
+    return o * jax.lax.rsqrt(var + 1e-6) * gh
+
+
+def mixer_forward(cfg: ModelConfig, mixer: str, p: Params, prefix: str, x,
+                  differentiable: bool = True):
+    """One token-mixing layer.  x : [L, d] → [L, d]."""
+    L = x.shape[0]
+    H, dh = cfg.n_heads, cfg.head_dim
+    C = cfg.chunk_size
+
+    if mixer in ATTN_MIXERS:
+        q, k, v = _project_qkv(cfg, p, prefix, x, conv=False)
+        q = jax.vmap(layers.rotary)(q)
+        k = jax.vmap(layers.rotary)(k)
+        if mixer == "attn":
+            o = jax.vmap(causal_attention)(q, k, v)
+        else:
+            o = jax.vmap(lambda q, k, v: sliding_window_attention(
+                q, k, v, cfg.swa_window))(q, k, v)
+        o = o.transpose(1, 0, 2).reshape(L, H * dh)
+        return o @ p[f"{prefix}.wo"]
+
+    q, k, v = _project_qkv(cfg, p, prefix, x, conv=cfg.use_conv)
+
+    # pad the sequence up to a chunk multiple (padding is causal-safe: it
+    # sits at the end, and pad β=0 / decay=1 leaves the state untouched)
+    Lp = (L + C - 1) // C * C
+    pad = Lp - L
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+
+    if mixer == "deltanet":
+        q = layers.key_normalize(layers.feature_map(q, cfg.feature_map),
+                                 cfg.key_norm)
+        k = layers.key_normalize(layers.feature_map(k, cfg.feature_map),
+                                 cfg.key_norm)
+        beta = jax.nn.sigmoid(
+            x @ p[f"{prefix}.wbeta"] + p[f"{prefix}.bbeta"]).T    # [H, L]
+        if pad:
+            beta = jnp.pad(beta, ((0, 0), (0, pad)))              # β=0: no-op
+        if differentiable:
+            o = jax.vmap(lambda q, k, v, b:
+                         delta_chunkwise_ad(q, k, v, b, C))(q, k, v, beta)
+        else:
+            o = jax.vmap(lambda q, k, v, b:
+                         delta_chunkwise(q, k, v, b, C)[0])(q, k, v, beta)
+    elif mixer == "gla":
+        q = layers.feature_map(q, cfg.feature_map) * dh ** -0.5
+        k = layers.feature_map(k, cfg.feature_map)
+        alpha = jax.nn.sigmoid(
+            x @ p[f"{prefix}.walpha"] + p[f"{prefix}.balpha"]) ** (1 / 16)
+        alpha = alpha.reshape(L, H, dh).transpose(1, 0, 2)        # [H, L, dh]
+        if pad:
+            alpha = jnp.pad(alpha, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=1.0)                  # decay 1
+        fn = gla_ad if differentiable else (
+            lambda q, k, v, a, C: gla_chunkwise(q, k, v, a, C)[0])
+        o = jax.vmap(lambda q, k, v, a: fn(q, k, v, a, C))(q, k, v, alpha)
+    elif mixer == "retnet":
+        q = layers.feature_map(q, cfg.feature_map) * dh ** -0.5
+        k = layers.feature_map(k, cfg.feature_map)
+        gam = layers.retnet_gammas(H)                             # [H]
+        gseq = jnp.broadcast_to(gam[:, None], (H, Lp))
+        fn = scalar_decay_ad if differentiable else (
+            lambda q, k, v, g, C: scalar_decay_chunkwise(q, k, v, g, C)[0])
+        o = jax.vmap(lambda q, k, v, g: fn(q, k, v, g, C))(q, k, v, gseq)
+    elif mixer == "mamba2":
+        q = layers.feature_map(q, cfg.feature_map) * dh ** -0.5
+        k = layers.feature_map(k, cfg.feature_map)
+        gamma = jax.nn.sigmoid(
+            x @ p[f"{prefix}.wgamma"] + p[f"{prefix}.bgamma"]) ** (1 / 16)
+        if pad:
+            gamma = jnp.pad(gamma, ((0, pad), (0, 0)),
+                            constant_values=1.0)                  # decay 1
+        fn = scalar_decay_ad if differentiable else (
+            lambda q, k, v, g, C: scalar_decay_chunkwise(q, k, v, g, C)[0])
+        o = jax.vmap(lambda q, k, v, g: fn(q, k, v, g, C))(q, k, v, gamma.T)
+    elif mixer == "linattn":
+        q = layers.feature_map(q, cfg.feature_map) * dh ** -0.5
+        k = layers.feature_map(k, cfg.feature_map)
+        fn = linear_attn_ad if differentiable else (
+            lambda q, k, v, C: linear_attn_chunkwise(q, k, v, C)[0])
+        o = jax.vmap(lambda q, k, v: fn(q, k, v, C))(q, k, v)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    if pad:
+        o = o[:, :L]
+    o = _head_rms(o, p[f"{prefix}.onorm"], H, dh)
+    o = o.transpose(1, 0, 2).reshape(L, H * dh)
+    return o @ p[f"{prefix}.wo"]
+
+
+# ---------------------------------------------------------------------------
+# Full LM forward / loss
+# ---------------------------------------------------------------------------
+
+def lm_forward(cfg: ModelConfig, params: Params, tokens,
+               differentiable: bool = True):
+    """tokens : [L] int32 → logits [L, V] (embeddings tied to the LM head)."""
+    x = params["embed"][tokens]
+    for i, mixer in enumerate(cfg.mixers()):
+        Lp = f"L{i:02d}"
+        h = layers.rms_norm(x, params[f"{Lp}.norm1"])
+        x = x + mixer_forward(cfg, mixer, params, f"{Lp}.mix", h,
+                              differentiable)
+        h = layers.rms_norm(x, params[f"{Lp}.norm2"])
+        x = x + layers.swiglu_ffn(h, {
+            "w_gate": params[f"{Lp}.ffn.w_gate"],
+            "w_up": params[f"{Lp}.ffn.w_up"],
+            "w_down": params[f"{Lp}.ffn.w_down"]})
+    x = layers.rms_norm(x, params["final_norm"])
+    return x @ params["embed"].T
+
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens, mask,
+            differentiable: bool = True):
+    """tokens : [B, L+1] int32, mask : [B, L] f32 over target positions.
+    Returns mean masked next-token cross-entropy."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = jax.vmap(lambda t: lm_forward(cfg, params, t, differentiable)
+                      )(inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_eval(cfg: ModelConfig, params: Params, tokens, mask):
+    """Eval metrics: (masked nll sum, masked argmax-correct sum,
+    argmax predictions [B, L] i32).  Feeds both perplexity and the
+    synthetic-task accuracy harnesses on the Rust side."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = jax.vmap(lambda t: lm_forward(cfg, params, t, False))(inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = (preds == targets).astype(jnp.float32)
+    return (nll * mask).sum(), (correct * mask).sum(), preds
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode path (constant-memory inference) + prefill
+# ---------------------------------------------------------------------------
+
+def state_spec(cfg: ModelConfig, batch: int):
+    """Ordered (name, shape) list of decode-state tensors (flat dict)."""
+    H, dh = cfg.n_heads, cfg.head_dim
+    hd = H * dh
+    Kc = cfg.conv_size - 1
+    spec = []
+    for i, mixer in enumerate(cfg.mixers()):
+        L = f"L{i:02d}"
+        if mixer in LINEAR_MIXERS:
+            spec.append((f"{L}.S", (batch, H, dh, dh)))
+            if cfg.use_conv:
+                for s in ("q", "k", "v"):
+                    spec.append((f"{L}.conv_{s}", (batch, Kc, hd)))
+        else:
+            spec.append((f"{L}.kcache", (batch, cfg.max_seq_len, hd)))
+            spec.append((f"{L}.vcache", (batch, cfg.max_seq_len, hd)))
+    return spec
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    return {n: jnp.zeros(s, jnp.float32) for n, s in state_spec(cfg, batch)}
+
+
+def _mixer_decode_step(cfg, mixer, params, prefix, sname, state, x_t, pos):
+    """Single-token mixer step for one sequence.  x_t : [d]."""
+    H, dh = cfg.n_heads, cfg.head_dim
+    hd = H * dh
+    new_state = {}
+
+    def proj(s, w):
+        h = x_t @ params[f"{prefix}.{w}"]
+        if mixer in LINEAR_MIXERS and cfg.use_conv:
+            h, cs = layers.short_conv_step(
+                state[f"{sname}.conv_{s}"], h, params[f"{prefix}.conv_{s}"])
+            new_state[f"{sname}.conv_{s}"] = cs
+        return h
+
+    q = proj("q", "wq")
+    k = proj("k", "wk")
+    v = proj("v", "wv")
+
+    if mixer in ATTN_MIXERS:
+        kc = jax.lax.dynamic_update_slice(
+            state[f"{sname}.kcache"], k[None], (pos, 0))
+        vc = jax.lax.dynamic_update_slice(
+            state[f"{sname}.vcache"], v[None], (pos, 0))
+        new_state[f"{sname}.kcache"] = kc
+        new_state[f"{sname}.vcache"] = vc
+        qh = q.reshape(H, dh)
+        qh = jax.vmap(lambda h: layers.rotary(h[None], pos0=pos)[0])(qh)
+        kh = kc.reshape(cfg.max_seq_len, H, dh).transpose(1, 0, 2)
+        kh = jax.vmap(lambda h: layers.rotary(h))(kh)
+        vh = vc.reshape(cfg.max_seq_len, H, dh).transpose(1, 0, 2)
+        j = jnp.arange(cfg.max_seq_len)
+        if mixer == "swa":
+            valid = (j <= pos) & (j > pos - cfg.swa_window)
+        else:
+            valid = j <= pos
+        logits = jnp.einsum("hd,htd->ht", qh, kh) * dh ** -0.5
+        logits = jnp.where(valid[None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("ht,htd->hd", w, vh).reshape(hd)
+        return o @ params[f"{prefix}.wo"], new_state
+
+    qh, kh, vh = (t.reshape(H, dh) for t in (q, k, v))
+    S = state[f"{sname}.S"]                                    # [H, dh, dh]
+
+    if mixer == "deltanet":
+        qh = layers.key_normalize(layers.feature_map(qh, cfg.feature_map),
+                                  cfg.key_norm)
+        kh = layers.key_normalize(layers.feature_map(kh, cfg.feature_map),
+                                  cfg.key_norm)
+        beta = jax.nn.sigmoid(x_t @ params[f"{prefix}.wbeta"]
+                              + params[f"{prefix}.bbeta"])     # [H]
+        o, S = jax.vmap(ref.delta_step)(S, qh, kh, vh, beta)
+    elif mixer == "gla":
+        qh = layers.feature_map(qh, cfg.feature_map) * dh ** -0.5
+        kh = layers.feature_map(kh, cfg.feature_map)
+        alpha = jax.nn.sigmoid(x_t @ params[f"{prefix}.walpha"]
+                               + params[f"{prefix}.balpha"]) ** (1 / 16)
+        o, S = jax.vmap(ref.gla_step)(S, qh, kh, vh, alpha.reshape(H, dh))
+    elif mixer == "retnet":
+        qh = layers.feature_map(qh, cfg.feature_map) * dh ** -0.5
+        kh = layers.feature_map(kh, cfg.feature_map)
+        o, S = jax.vmap(ref.scalar_decay_step)(S, qh, kh, vh,
+                                               layers.retnet_gammas(H))
+    elif mixer == "mamba2":
+        qh = layers.feature_map(qh, cfg.feature_map) * dh ** -0.5
+        kh = layers.feature_map(kh, cfg.feature_map)
+        gamma = jax.nn.sigmoid(x_t @ params[f"{prefix}.wgamma"]
+                               + params[f"{prefix}.bgamma"]) ** (1 / 16)
+        o, S = jax.vmap(ref.scalar_decay_step)(S, qh, kh, vh, gamma)
+    else:  # linattn
+        qh = layers.feature_map(qh, cfg.feature_map) * dh ** -0.5
+        kh = layers.feature_map(kh, cfg.feature_map)
+        o, S = jax.vmap(ref.linear_attn_step)(S, qh, kh, vh)
+
+    new_state[f"{sname}.S"] = S
+    o = _head_rms(o[:, None, :], params[f"{prefix}.onorm"], H, dh)[:, 0, :]
+    return o.reshape(hd) @ params[f"{prefix}.wo"], new_state
+
+
+def decode_step(cfg: ModelConfig, params: Params, state, token, pos):
+    """One decoding step for a batch.  token : [B] i32, pos : scalar i32
+    (shared position — the serve engine batches same-length sequences).
+    Returns (logits [B, V], new_state)."""
+
+    def one(tok, st):
+        x = params["embed"][tok]
+        new_st = {}
+        for i, mixer in enumerate(cfg.mixers()):
+            Lp = f"L{i:02d}"
+            h = layers.rms_norm(x, params[f"{Lp}.norm1"])
+            o, ns = _mixer_decode_step(cfg, mixer, params, f"{Lp}.mix",
+                                       Lp, st, h, pos)
+            x = x + o
+            new_st.update(ns)
+            h = layers.rms_norm(x, params[f"{Lp}.norm2"])
+            x = x + layers.swiglu_ffn(h, {
+                "w_gate": params[f"{Lp}.ffn.w_gate"],
+                "w_up": params[f"{Lp}.ffn.w_up"],
+                "w_down": params[f"{Lp}.ffn.w_down"]})
+        x = layers.rms_norm(x, params["final_norm"])
+        return x @ params["embed"].T, new_st
+
+    return jax.vmap(one)(token, state)

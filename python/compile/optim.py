@@ -1,0 +1,45 @@
+"""AdamW + gradient clipping (the paper's §D training recipe).
+
+The learning-rate *schedule* (cosine with warmup) lives on the Rust side —
+`lr` enters the train-step artifact as a scalar input every step, so the
+coordinator owns scheduling without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return {k: g * scale for k, g in grads.items()}, norm
+
+
+def adamw_update(params, grads, m, v, step, lr, *, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.01, clip=1.0):
+    """One AdamW step over flat param/grad/moment dicts.
+
+    step : f32 scalar (1-based).  Weight decay is decoupled and applied only
+    to matrices (ndim ≥ 2), never to gains/biases — matching the paper's
+    0.01 decay + 1.0 clip recipe."""
+    grads, _ = clip_by_global_norm(grads, clip)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k]
+        mk = beta1 * m[k] + (1.0 - beta1) * g
+        vk = beta2 * v[k] + (1.0 - beta2) * jnp.square(g)
+        update = (mk / bc1) / (jnp.sqrt(vk / bc2) + eps)
+        if p.ndim >= 2 and weight_decay > 0.0:
+            update = update + weight_decay * p
+        new_p[k] = p - lr * update
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v

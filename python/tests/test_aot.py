@@ -1,0 +1,110 @@
+"""Exporter contract tests: the manifest must describe the lowered program
+exactly (names, order, shapes) — the Rust runtime trusts it blindly."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.model import ModelConfig
+
+
+class TestPresets:
+    @pytest.mark.parametrize("preset", list(aot.PRESETS))
+    @pytest.mark.parametrize("arch", aot.ARCHS)
+    def test_make_config_valid(self, preset, arch):
+        cfg = aot.make_config(preset, arch)
+        assert cfg.d_model % cfg.n_heads == 0
+        assert len(cfg.mixers()) == cfg.n_layers
+        # seq_len must be chunk-padding friendly at export shapes
+        L = aot.PRESETS[preset]["seq_len"]
+        assert L >= cfg.chunk_size
+
+    def test_tiny_vocab_fits_all_tasks(self):
+        # mirror of the Rust-side invariant (prop_data): every synthetic
+        # task's alphabet must fit the tiny artifact vocab
+        assert aot.PRESETS["tiny"]["vocab_size"] >= 98  # mqar:16
+
+
+class TestManifestContract:
+    def test_entries_order_matches_jit_flatten(self):
+        """_entries must enumerate leaves in the exact order jax.jit
+        flattens a flat dict (sorted keys)."""
+        cfg = aot.make_config("tiny", "deltanet")
+        pa = aot.param_abstract(cfg)
+        entries = aot._entries(pa, "params", "param",
+                               {n: i for n, _, i in M.param_spec(cfg)})
+        names = [e["name"].split(".", 1)[1] for e in entries]
+        leaves, treedef = jax.tree_util.tree_flatten(pa)
+        assert names == sorted(pa)           # sorted-key flatten order
+        assert len(names) == len(leaves)
+        # shapes line up leaf-by-leaf
+        for e, leaf in zip(entries, leaves):
+            assert tuple(e["shape"]) == tuple(leaf.shape), e["name"]
+
+    def test_param_spec_is_sorted(self):
+        for arch in aot.ARCHS:
+            cfg = aot.make_config("tiny", arch)
+            names = [n for n, _, _ in M.param_spec(cfg)]
+            assert names == sorted(names), arch
+
+    def test_state_spec_covers_all_mixers(self):
+        cfg = aot.make_config("tiny", "hybrid_global")
+        names = [n for n, _ in M.state_spec(cfg, 2)]
+        mixers = cfg.mixers()
+        for i, m in enumerate(mixers):
+            Lp = f"L{i:02d}"
+            if m in ("attn", "swa"):
+                assert f"{Lp}.kcache" in names
+            else:
+                assert f"{Lp}.S" in names
+
+    def test_written_artifact_matches_lowered_program(self, tmp_path):
+        """Build one real artifact and verify manifest ↔ HLO agreement
+        (input count equals the program's parameter count)."""
+        name = aot.build_eval(str(tmp_path), "deltanet", "tiny")
+        man = json.load(open(tmp_path / f"{name}.manifest.json"))
+        hlo = open(tmp_path / f"{name}.hlo.txt").read()
+        # count parameter(...) declarations inside the ENTRY computation
+        # only (nested while/fusion computations declare their own)
+        entry = hlo[hlo.index("ENTRY "):]
+        entry = entry[:entry.index("\n}")]
+        n_params = entry.count("parameter(")
+        assert n_params == len(man["inputs"]), \
+            f"manifest {len(man['inputs'])} vs program {n_params}"
+        assert man["kind"] == "eval"
+        assert man["config"]["arch"] == "deltanet"
+
+    def test_artifact_roles_complete(self, tmp_path):
+        name = aot.build_train(str(tmp_path), "linattn", "tiny")
+        man = json.load(open(tmp_path / f"{name}.manifest.json"))
+        roles = {e["role"] for e in man["inputs"]}
+        assert roles == {"param", "opt_m", "opt_v", "data"}
+        # every param has an init and every init parses
+        for e in man["inputs"]:
+            if e["role"] == "param":
+                init = e["init"]
+                assert (init in ("zeros", "ones")
+                        or init.startswith(("normal:", "const:"))), e
+        # outputs: one carried tensor per param/m/v plus the loss
+        n_par = sum(1 for e in man["inputs"] if e["role"] == "param")
+        assert len(man["outputs"]) == 3 * n_par + 1
+
+
+class TestLoweringNumerics:
+    def test_eval_fn_counts_and_preds(self):
+        """The eval computation's outputs obey their definitions."""
+        cfg = ModelConfig(vocab_size=32, d_model=32, n_layers=1, n_heads=2,
+                          chunk_size=8, max_seq_len=32, arch="deltanet")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 32)
+        mask = jnp.ones((2, 8)).at[0, 0].set(0.0)
+        nll, correct, preds = M.lm_eval(cfg, params, tokens, mask)
+        assert nll > 0 and jnp.isfinite(nll)
+        assert 0 <= correct <= mask.sum()
+        assert preds.shape == (2, 8) and preds.dtype == jnp.int32
+        # recompute correct from preds
+        want = ((preds == tokens[:, 1:]) * mask).sum()
+        assert jnp.allclose(correct, want)

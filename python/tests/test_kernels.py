@@ -1,0 +1,343 @@
+"""Kernel vs oracle — the core correctness signal (pytest + hypothesis).
+
+Every chunkwise/Pallas kernel is checked against the step-by-step recurrent
+oracle in kernels.ref, across shapes, chunk sizes and input regimes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref, wy
+
+jax.config.update("jax_enable_x64", False)
+
+ATOL, RTOL = 2e-4, 2e-4
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def make_qkvb(seed, L, dk, dv, normalize_k=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(ks[0], L, dk)
+    k = rand(ks[1], L, dk)
+    if normalize_k:
+        k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    v = rand(ks[2], L, dv)
+    beta = jax.nn.sigmoid(rand(ks[3], L))
+    return q, k, v, beta
+
+
+# ---------------------------------------------------------------------------
+# WY / UT-transform algebra
+# ---------------------------------------------------------------------------
+
+class TestWY:
+    @pytest.mark.parametrize("C", [2, 3, 4, 8, 16])
+    def test_tri_inv_matches_linalg(self, C):
+        A = jnp.tril(rand(jax.random.PRNGKey(C), C, C), -1)
+        want = np.linalg.inv(np.eye(C) + np.asarray(A))
+        got = wy.tri_inv_unit_lower(A)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("C", [64, 128])
+    def test_tri_inv_realistic_regime(self, C):
+        """Large chunks with the A the kernel actually sees:
+        A = tril(diag(β)KKᵀ, −1) with L2-normalized keys, β ∈ (0,1)."""
+        _, k, _, beta = make_qkvb(C, C, 32, 32)
+        A = jnp.tril((k * beta[:, None]) @ k.T, -1)
+        want = np.linalg.inv(np.eye(C) + np.asarray(A, np.float64))
+        got = wy.tri_inv_unit_lower(A)
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+    @pytest.mark.parametrize("C", [2, 5, 16])
+    def test_forward_substitution_matches_doubling(self, C):
+        A = jnp.tril(rand(jax.random.PRNGKey(C + 100), C, C), -1)
+        np.testing.assert_allclose(
+            wy.tri_inv_forward_substitution(A),
+            wy.tri_inv_unit_lower(A), atol=1e-4, rtol=1e-4)
+
+    def test_ut_transform_matches_eq7_recurrence(self):
+        """W, U from the UT transform == the Eq. 7 sequential recurrences."""
+        C, dk, dv = 16, 8, 8
+        _, k, v, beta = make_qkvb(0, C, dk, dv)
+        W, U = wy.ut_transform(k, v, beta)
+
+        w_seq = np.zeros((C, dk), np.float32)
+        u_seq = np.zeros((C, dv), np.float32)
+        kn, vn, bn = map(np.asarray, (k, v, beta))
+        for r in range(C):
+            corr_w = sum(w_seq[i] * (kn[i] @ kn[r]) for i in range(r))
+            corr_u = sum(u_seq[i] * (kn[i] @ kn[r]) for i in range(r))
+            w_seq[r] = bn[r] * (kn[r] - corr_w)
+            u_seq[r] = bn[r] * (vn[r] - corr_u)
+        np.testing.assert_allclose(W, w_seq, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(U, u_seq, atol=1e-4, rtol=1e-4)
+
+    def test_wy_p_matrix_is_householder_product(self):
+        """P = I − Σ w_t k_tᵀ equals ∏ (I − β_t k_t k_tᵀ) (appendix A)."""
+        C, dk = 12, 6
+        _, k, v, beta = make_qkvb(1, C, dk, dk)
+        W, _ = wy.ut_transform(k, v, beta)
+        P_wy = np.eye(dk) - np.asarray(W).T @ np.asarray(k)
+        P_prod = np.eye(dk)
+        for t in range(C):
+            kt = np.asarray(k)[t]
+            # row convention: transitions accumulate on the left
+            P_prod = P_prod @ (np.eye(dk) - float(beta[t]) * np.outer(kt, kt))
+        np.testing.assert_allclose(P_wy, P_prod, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DeltaNet: recurrent oracle == WY oracle == jnp chunkwise == Pallas kernel
+# ---------------------------------------------------------------------------
+
+class TestDeltaNet:
+    @pytest.mark.parametrize("L,dk,dv,C", [
+        (64, 16, 16, 16), (64, 16, 16, 64), (128, 32, 32, 32),
+        (64, 8, 24, 16), (128, 64, 64, 64), (64, 16, 16, 1),
+    ])
+    def test_chunkwise_pallas_vs_recurrent(self, L, dk, dv, C):
+        q, k, v, beta = make_qkvb(L + dk, L, dk, dv)
+        o_ref, s_ref = ref.delta_rule_recurrent(q, k, v, beta)
+        o, s = kernels.delta_chunkwise(q, k, v, beta, chunk_size=C)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    def test_wy_oracle_vs_recurrent(self):
+        q, k, v, beta = make_qkvb(7, 48, 16, 16)
+        o1, s1 = ref.delta_rule_recurrent(q, k, v, beta)
+        o2, s2 = ref.delta_rule_wy(q, k, v, beta)
+        np.testing.assert_allclose(o1, o2, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s1, s2, atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("C", [8, 16, 32, 64])
+    def test_chunk_size_invariance(self, C):
+        """Output must not depend on the chunk size (C=L is the parallel
+        form, small C approaches the recurrent form)."""
+        q, k, v, beta = make_qkvb(3, 64, 16, 16)
+        o_base, s_base = kernels.delta_chunkwise(q, k, v, beta, chunk_size=64)
+        o, s = kernels.delta_chunkwise(q, k, v, beta, chunk_size=C)
+        np.testing.assert_allclose(o, o_base, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_base, atol=ATOL, rtol=RTOL)
+
+    def test_jnp_chunkwise_matches_pallas(self):
+        q, k, v, beta = make_qkvb(11, 128, 32, 32)
+        o1, s1 = kernels.delta_chunkwise_jnp(q, k, v, beta, chunk_size=32)
+        o2, s2 = kernels.delta_chunkwise(q, k, v, beta, chunk_size=32)
+        np.testing.assert_allclose(o1, o2, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s1, s2, atol=ATOL, rtol=RTOL)
+
+    def test_recurrent_pallas_kernel(self):
+        q, k, v, beta = make_qkvb(13, 32, 16, 16)
+        o_ref, s_ref = ref.delta_rule_recurrent(q, k, v, beta)
+        o, s = kernels.delta_recurrent(q, k, v, beta)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    def test_initial_state_chaining(self):
+        """Running two halves with state chaining == one full pass (the
+        prefill/decode contract the serving path depends on)."""
+        q, k, v, beta = make_qkvb(17, 64, 16, 16)
+        o_full, s_full = kernels.delta_chunkwise_jnp(q, k, v, beta, 16)
+        o1, s1 = kernels.delta_chunkwise_jnp(
+            q[:32], k[:32], v[:32], beta[:32], 16)
+        o2, s2 = kernels.delta_chunkwise_jnp(
+            q[32:], k[32:], v[32:], beta[32:], 16, initial_state=s1)
+        np.testing.assert_allclose(
+            jnp.concatenate([o1, o2]), o_full, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s2, s_full, atol=ATOL, rtol=RTOL)
+
+    def test_beta_zero_freezes_memory(self):
+        """β = 0 ⇒ S never changes ⇒ output 0 (identity transition)."""
+        q, k, v, _ = make_qkvb(19, 32, 8, 8)
+        o, s = kernels.delta_chunkwise(q, k, v, jnp.zeros(32), chunk_size=16)
+        np.testing.assert_allclose(o, jnp.zeros_like(o), atol=1e-6)
+        np.testing.assert_allclose(s, jnp.zeros_like(s), atol=1e-6)
+
+    def test_beta_one_is_projection_write(self):
+        """β = 1 with repeated unit key: second write fully replaces the
+        first association (exact retrieval property of the delta rule)."""
+        dk = dv = 8
+        k1 = jnp.zeros(dk).at[0].set(1.0)
+        v1 = jnp.arange(dv, dtype=jnp.float32)
+        v2 = -v1
+        q = jnp.stack([k1, k1])
+        k = jnp.stack([k1, k1])
+        v = jnp.stack([v1, v2])
+        beta = jnp.ones(2)
+        o, s = kernels.delta_chunkwise(q, k, v, beta, chunk_size=2)
+        np.testing.assert_allclose(o[0], v1, atol=1e-5)
+        np.testing.assert_allclose(o[1], v2, atol=1e-5)  # overwritten
+
+    def test_grad_matches_autodiff_oracle(self):
+        """custom-VJP (Pallas fwd + recompute bwd) == autodiff of oracle."""
+        q, k, v, beta = make_qkvb(23, 64, 16, 16)
+
+        def loss_ad(q, k, v, b):
+            return kernels.delta_chunkwise_ad(q, k, v, b, 16).sum()
+
+        def loss_ref(q, k, v, b):
+            return ref.delta_rule_recurrent(q, k, v, b)[0].sum()
+
+        g1 = jax.grad(loss_ad, argnums=(0, 1, 2, 3))(q, k, v, beta)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, beta)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-4)
+
+    def test_attention_matrix_form(self):
+        """Fully-parallel form A = (QKᵀ⊙M)T reproduces the output O = A V."""
+        q, k, v, beta = make_qkvb(29, 32, 8, 8)
+        A = ref.delta_attention_matrix(q, k, beta)
+        o_ref, _ = ref.delta_rule_recurrent(q, k, v, beta)
+        np.testing.assert_allclose(A @ v, o_ref, atol=1e-3, rtol=1e-3)
+
+    def test_eigenvalue_stability_bound(self):
+        """With L2-normalized keys and β∈(0,1): ‖S‖ stays bounded (the §3.3
+        stability argument — eigenvalues of I−βkkᵀ are 1 and 1−β‖k‖²)."""
+        q, k, v, beta = make_qkvb(31, 512, 16, 16)  # long roll-out
+        _, s = kernels.delta_chunkwise_jnp(q, k, v, beta, 64)
+        assert jnp.isfinite(s).all()
+        assert jnp.abs(s).max() < 1e3
+
+
+# ---------------------------------------------------------------------------
+# Baseline kernels vs their oracles
+# ---------------------------------------------------------------------------
+
+class TestBaselines:
+    @pytest.mark.parametrize("C", [16, 32, 64])
+    def test_linear_attn(self, C):
+        q, k, v, _ = make_qkvb(41, 64, 16, 16)
+        o_ref, s_ref = ref.linear_attn_recurrent(q, k, v)
+        o, s = kernels.linear_attn_chunkwise(q, k, v, chunk_size=C)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("C", [16, 64])
+    def test_gla(self, C):
+        q, k, v, _ = make_qkvb(43, 64, 16, 16)
+        # decay in [0.9, 1): the regime GLA operates in
+        alpha = 0.9 + 0.1 * jax.nn.sigmoid(
+            rand(jax.random.PRNGKey(5), 64, 16))
+        o_ref, s_ref = ref.gla_recurrent(q, k, v, alpha)
+        o, s = kernels.gla_chunkwise(q, k, v, alpha, chunk_size=C)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    def test_retnet(self):
+        q, k, v, _ = make_qkvb(47, 64, 16, 16)
+        gamma = 0.97
+        o_ref, s_ref = ref.retnet_recurrent(q, k, v, gamma)
+        o, s = kernels.scalar_decay_chunkwise(
+            q, k, v, jnp.full(64, gamma), chunk_size=16)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    def test_mamba2(self):
+        q, k, v, _ = make_qkvb(53, 64, 16, 16)
+        gamma = 0.9 + 0.1 * jax.nn.sigmoid(rand(jax.random.PRNGKey(6), 64))
+        o_ref, s_ref = ref.mamba2_recurrent(q, k, v, gamma)
+        o, s = kernels.scalar_decay_chunkwise(q, k, v, gamma, chunk_size=16)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s, s_ref, atol=ATOL, rtol=RTOL)
+
+    def test_gla_reduces_to_retnet(self):
+        """GLA with α_t = γ·1 must equal RetNet."""
+        q, k, v, _ = make_qkvb(59, 32, 8, 8)
+        gamma = 0.95
+        o1, s1 = kernels.gla_chunkwise(
+            q, k, v, jnp.full((32, 8), gamma), chunk_size=16)
+        o2, s2 = kernels.scalar_decay_chunkwise(
+            q, k, v, jnp.full(32, gamma), chunk_size=16)
+        np.testing.assert_allclose(o1, o2, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s1, s2, atol=ATOL, rtol=RTOL)
+
+    def test_linear_attn_is_delta_with_beta1_orthogonal_keys(self):
+        """With orthonormal keys (≤ d of them) and β=1, DeltaNet's pseudo-
+        values equal the raw values ⇒ identical to linear attention."""
+        d = 16
+        k = jnp.eye(d)                       # 16 orthonormal keys
+        q = rand(jax.random.PRNGKey(9), d, d)
+        v = rand(jax.random.PRNGKey(10), d, d)
+        o1, s1 = kernels.delta_chunkwise(q, k, v, jnp.ones(d), chunk_size=8)
+        o2, s2 = kernels.linear_attn_chunkwise(q, k, v, chunk_size=8)
+        np.testing.assert_allclose(o1, o2, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(s1, s2, atol=ATOL, rtol=RTOL)
+
+    def test_flash_attention(self):
+        q, k, v, _ = make_qkvb(61, 128, 32, 32)
+        o_ref = ref.softmax_attention(q, k, v)
+        o = kernels.flash_attention(q, k, v, block=32)
+        np.testing.assert_allclose(o, o_ref, atol=1e-4, rtol=1e-4)
+
+    def test_swa_window_equals_full_when_window_ge_L(self):
+        q, k, v, _ = make_qkvb(67, 32, 16, 16)
+        o1 = kernels.sliding_window_attention(q, k, v, window=32)
+        o2 = kernels.causal_attention(q, k, v)
+        np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
+
+    def test_swa_locality(self):
+        """Changing a key/value outside the window must not change o_i."""
+        q, k, v, _ = make_qkvb(71, 64, 8, 8)
+        w = 8
+        o = kernels.sliding_window_attention(q, k, v, window=w)
+        k2 = k.at[0].set(k[0] + 10.0)
+        v2 = v.at[0].set(v[0] - 5.0)
+        o2 = kernels.sliding_window_attention(q, k2, v2, window=w)
+        np.testing.assert_allclose(o[w:], o2[w:], atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, chunk sizes, input regimes
+# ---------------------------------------------------------------------------
+
+class TestHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        log_l=st.integers(4, 7),           # L ∈ {16..128}
+        dk=st.sampled_from([4, 8, 16, 32]),
+        dv=st.sampled_from([4, 8, 16, 32]),
+        log_c=st.integers(0, 5),
+    )
+    def test_delta_chunkwise_random(self, seed, log_l, dk, dv, log_c):
+        L = 2 ** log_l
+        C = min(2 ** log_c, L)
+        q, k, v, beta = make_qkvb(seed, L, dk, dv)
+        o_ref, s_ref = ref.delta_rule_recurrent(q, k, v, beta)
+        o, s = kernels.delta_chunkwise_jnp(q, k, v, beta, chunk_size=C)
+        np.testing.assert_allclose(o, o_ref, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s, s_ref, atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           beta_mode=st.sampled_from(["zeros", "ones", "half", "random"]))
+    def test_delta_beta_regimes(self, seed, beta_mode):
+        L, d = 32, 8
+        q, k, v, _ = make_qkvb(seed, L, d, d)
+        beta = {
+            "zeros": jnp.zeros(L), "ones": jnp.ones(L),
+            "half": jnp.full(L, 0.5),
+            "random": jax.nn.sigmoid(rand(jax.random.PRNGKey(seed), L)),
+        }[beta_mode]
+        o_ref, s_ref = ref.delta_rule_recurrent(q, k, v, beta)
+        o, s = kernels.delta_chunkwise(q, k, v, beta, chunk_size=8)
+        np.testing.assert_allclose(o, o_ref, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s, s_ref, atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_unnormalized_keys_still_exact(self, seed):
+        """The algorithm is exact for any keys (normalization is a modeling
+        choice, not an algorithmic requirement)."""
+        q, k, v, beta = make_qkvb(seed, 32, 8, 8, normalize_k=False)
+        beta = beta * 0.5  # keep ‖I−βkkᵀ‖ bounded for numerical sanity
+        o_ref, s_ref = ref.delta_rule_recurrent(q, k, v, beta)
+        o, s = kernels.delta_chunkwise(q, k, v, beta, chunk_size=16)
+        np.testing.assert_allclose(o, o_ref, atol=5e-3, rtol=5e-3)

@@ -1,0 +1,163 @@
+"""L2 model tests: shapes, gradients, decode≡parallel equivalence, export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optim
+from compile.model import ModelConfig
+
+
+def tiny_cfg(arch="deltanet", **kw):
+    base = dict(vocab_size=32, d_model=32, n_layers=2, n_heads=2,
+                chunk_size=8, swa_window=8, max_seq_len=32, arch=arch)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+ALL_ARCHS = ["deltanet", "gla", "retnet", "mamba2", "linattn",
+             "transformer", "hybrid_swa", "hybrid_global"]
+
+
+class TestForward:
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = tiny_cfg(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (16,), 0,
+                                    cfg.vocab_size)
+        logits = M.lm_forward(cfg, params, tokens)
+        assert logits.shape == (16, cfg.vocab_size)
+        assert jnp.isfinite(logits).all()
+
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_loss_and_grads_finite(self, arch):
+        cfg = tiny_cfg(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                                    cfg.vocab_size)
+        mask = jnp.ones((2, 16))
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, tokens, mask))(params)
+        assert jnp.isfinite(loss)
+        assert set(grads) == set(params)
+        for k, g in grads.items():
+            assert jnp.isfinite(g).all(), k
+
+    def test_mixer_list_expansion(self):
+        assert tiny_cfg("hybrid_swa", n_layers=4).mixers() == [
+            "deltanet", "swa", "deltanet", "swa"]
+        assert tiny_cfg("hybrid_global", n_layers=6).mixers() == [
+            "deltanet", "attn", "deltanet", "deltanet", "attn", "deltanet"]
+        assert tiny_cfg("transformer").mixers() == ["attn", "attn"]
+
+    def test_loss_mask_excludes_positions(self):
+        """Loss must ignore masked positions entirely."""
+        cfg = tiny_cfg()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 17), 0, 32)
+        t2 = t1.at[0, -1].set((t1[0, -1] + 5) % 32)  # differ in last target
+        mask = jnp.ones((1, 16)).at[0, -1].set(0.0)
+        l1 = M.lm_loss(cfg, params, t1, mask)
+        l2 = M.lm_loss(cfg, params, t2, mask)
+        np.testing.assert_allclose(l1, l2, atol=1e-6)
+
+    def test_feature_map_and_norm_variants(self):
+        for fm, kn in (("silu", "l2"), ("elu1", "l1"), ("relu", "l2")):
+            cfg = tiny_cfg(feature_map=fm, key_norm=kn)
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            tokens = jnp.arange(16) % 32
+            assert jnp.isfinite(M.lm_forward(cfg, params, tokens)).all()
+
+
+class TestTraining:
+    @pytest.mark.parametrize("arch", ["deltanet", "hybrid_swa"])
+    def test_loss_decreases_on_fixed_batch(self, arch):
+        """Overfit one batch for a few steps: loss must drop (the full
+        fwd+bwd+AdamW loop works end to end)."""
+        cfg = tiny_cfg(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        m = {k: jnp.zeros_like(p) for k, p in params.items()}
+        v = {k: jnp.zeros_like(p) for k, p in params.items()}
+        tokens = jax.random.randint(jax.random.PRNGKey(7), (4, 17), 0, 32)
+        mask = jnp.ones((4, 16))
+
+        @jax.jit
+        def step(params, m, v, i):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.lm_loss(cfg, p, tokens, mask))(params)
+            params, m, v = optim.adamw_update(params, grads, m, v, i, 1e-2)
+            return params, m, v, loss
+
+        losses = []
+        for i in range(8):
+            params, m, v, loss = step(params, m, v, jnp.float32(i + 1))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_adamw_weight_decay_only_on_matrices(self):
+        cfg = tiny_cfg()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        zeros = {k: jnp.zeros_like(p) for k, p in params.items()}
+        # zero grads: update is wd·p for matrices, 0 for vectors
+        new_p, _, _ = optim.adamw_update(params, zeros, zeros, zeros,
+                                         jnp.float32(1), 1e-2)
+        for k, p in params.items():
+            if p.ndim >= 2:
+                np.testing.assert_allclose(new_p[k], p * (1 - 1e-2 * 1e-2),
+                                           rtol=1e-5)
+            else:
+                np.testing.assert_allclose(new_p[k], p, rtol=1e-6)
+
+
+class TestDecode:
+    @pytest.mark.parametrize("arch", ["deltanet", "gla", "retnet", "mamba2",
+                                      "linattn", "hybrid_swa",
+                                      "hybrid_global", "transformer"])
+    def test_decode_matches_parallel_forward(self, arch):
+        """Token-by-token decoding must produce the same logits as the
+        parallel (training) forward — the core serving-path contract."""
+        cfg = tiny_cfg(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        L = 12
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (L,), 0, 32)
+        want = M.lm_forward(cfg, params, tokens, differentiable=False)
+
+        state = M.init_state(cfg, batch=1)
+        got = []
+        step = jax.jit(lambda s, t, p: M.decode_step(cfg, params, s, t, p))
+        for pos in range(L):
+            logits, state = step(state, tokens[pos][None],
+                                 jnp.int32(pos))
+            got.append(logits[0])
+        got = jnp.stack(got)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_state_spec_matches_init_state(self):
+        cfg = tiny_cfg("hybrid_global", n_layers=4)
+        spec = dict(M.state_spec(cfg, 3))
+        state = M.init_state(cfg, 3)
+        assert set(spec) == set(state)
+        for k, s in spec.items():
+            assert state[k].shape == tuple(s)
+
+
+class TestParamSpec:
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_spec_matches_init(self, arch):
+        cfg = tiny_cfg(arch)
+        spec = M.param_spec(cfg)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        assert [n for n, _, _ in spec] == sorted(params)  # sorted = jit order
+        for n, s, _ in spec:
+            assert params[n].shape == tuple(s), n
+
+    def test_param_count_scaling(self):
+        """DeltaNet layer ≈ 4d² mixer + 8d² FFN (paper §3.3)."""
+        cfg = tiny_cfg("deltanet", d_model=64, n_layers=1, vocab_size=0 or 1)
+        n = sum(np.prod(s) for nm, s, _ in M.param_spec(cfg)
+                if nm.startswith("L00"))
+        d = 64
+        assert 11.5 * d * d < n < 13.5 * d * d, n / d / d

@@ -1,0 +1,43 @@
+//! Bench: recurrent decode step latency + generation throughput — the
+//! constant-memory serving path.  `cargo bench --bench bench_decode`
+
+use deltanet::coordinator::generate::Sampling;
+use deltanet::coordinator::DecodeEngine;
+use deltanet::runtime::Runtime;
+use deltanet::util::bench::bench_result;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    for artifact in ["deltanet_tiny", "hybrid_swa_tiny", "deltanet_small"] {
+        if !rt.has_artifact(&format!("{artifact}.decode")) {
+            continue;
+        }
+        let mut engine = DecodeEngine::new(&rt, artifact, 0)?;
+        let b = engine.batch;
+        let tokens = vec![1i32; b];
+        let mut pos = 0usize;
+        let max = engine.max_seq_len;
+        let r = bench_result(&format!("{artifact}.decode_step(B={b})"),
+                             3, 20, || {
+                                 engine.step(&tokens, pos % max)?;
+                                 pos += 1;
+                                 Ok(())
+                             })?;
+        println!("  -> per-token decode latency {:.2} ms, {:.0} tok/s \
+                  across the batch",
+                 r.median_s * 1e3, b as f64 / r.median_s);
+
+        // whole-generation throughput (prompt 4, 32 new tokens)
+        let prompts: Vec<Vec<i32>> = (0..b).map(|i| vec![1 + i as i32 % 8,
+                                                         2, 3, 4]).collect();
+        let r = bench_result(&format!("{artifact}.generate(32 new)"),
+                             1, 3, || {
+                                 engine.generate(&prompts, 32,
+                                                 Sampling::Greedy, 0)?;
+                                 Ok(())
+                             })?;
+        println!("  -> {:.0} tok/s generation",
+                 (b * 32) as f64 / r.median_s);
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Bench: Figure 1 — chunkwise-parallel vs recurrent DeltaNet kernels
+//! across (L, d_head) at fixed B·L = 4096 tokens, plus the chunk-size
+//! sweep.  `cargo bench --bench bench_fig1_forms`
+
+use deltanet::runtime::{HostValue, Runtime};
+use deltanet::tensor::rng::Rng;
+use deltanet::util::bench::bench_result;
+
+fn inputs(b: usize, l: usize, d: usize, seed: u64) -> Vec<xla::Literal> {
+    let mut rng = Rng::new(seed);
+    let mut t = |shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        HostValue::from_f32(shape, (0..n).map(|_| rng.normal()).collect())
+            .unwrap().to_literal().unwrap()
+    };
+    let q = t(&[b, l, d]);
+    let k = t(&[b, l, d]);
+    let v = t(&[b, l, d]);
+    let mut rng2 = Rng::new(seed ^ 1);
+    let beta = HostValue::from_f32(&[b, l], (0..b * l)
+        .map(|_| 1.0 / (1.0 + (-rng2.normal()).exp())).collect())
+        .unwrap().to_literal().unwrap();
+    vec![q, k, v, beta]
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("# Figure 1: forms comparison (B·L = 4096 tokens, C = 64)");
+    for d in [32, 64] {
+        for l in [256, 512, 1024, 2048, 4096] {
+            let b = 4096 / l;
+            let mut results = vec![];
+            for form in ["recurrent", "chunkwise"] {
+                let name = format!("kernel_{form}_L{l}_d{d}_C64_B{b}");
+                let exe = rt.load(&name)?;
+                let args = inputs(b, l, d, 7);
+                let r = bench_result(&name, 1, 5, || {
+                    exe.execute(&args)?;
+                    Ok(())
+                })?;
+                results.push(r.median_s);
+            }
+            println!("speedup L={l} d={d}: {:.1}x",
+                     results[0] / results[1]);
+        }
+    }
+
+    println!("\n# chunk-size sweep (L=1024, d=64, B=4)");
+    for c in [16, 32, 64, 128] {
+        let name = format!("kernel_chunkwise_L1024_d64_C{c}_B4");
+        let exe = rt.load(&name)?;
+        let args = inputs(4, 1024, 64, 7);
+        bench_result(&name, 1, 5, || {
+            exe.execute(&args)?;
+            Ok(())
+        })?;
+    }
+    Ok(())
+}

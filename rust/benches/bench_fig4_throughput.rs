@@ -1,0 +1,33 @@
+//! Bench: Figure 4 — end-to-end training throughput (tokens/sec) per
+//! architecture family.  `cargo bench --bench bench_fig4_throughput`
+
+use deltanet::config::DataConfig;
+use deltanet::coordinator::Trainer;
+use deltanet::data::build_task;
+use deltanet::runtime::Runtime;
+use deltanet::util::bench::bench_result;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("# Figure 4: train-step wall time per architecture");
+    for preset in ["tiny", "small"] {
+        for arch in ["transformer", "retnet", "mamba2", "gla", "linattn",
+                     "deltanet", "hybrid_swa", "hybrid_global"] {
+            let artifact = format!("{arch}_{preset}");
+            if !rt.has_artifact(&format!("{artifact}.train")) {
+                continue;
+            }
+            let mut trainer = Trainer::new(&rt, &artifact, 0)?;
+            let mut task = build_task(&DataConfig::Corpus { seed: 0 });
+            let tokens = trainer.batch * trainer.seq_len;
+            let batch = task.sample(trainer.batch, trainer.seq_len);
+            let r = bench_result(&format!("{artifact}.train_step"), 2, 8,
+                                 || {
+                                     trainer.train_step(&batch, 1e-4)?;
+                                     Ok(())
+                                 })?;
+            println!("  -> {:.0} tokens/sec", tokens as f64 / r.median_s);
+        }
+    }
+    Ok(())
+}

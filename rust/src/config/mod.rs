@@ -1,0 +1,311 @@
+//! Run configuration (JSON-loadable; offline build — no serde/toml).
+//!
+//! The model *shape* lives inside each artifact's manifest (fixed at AOT
+//! time); this config selects which artifact to run and owns everything the
+//! coordinator controls at run time: schedules, step counts, data sources,
+//! logging.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// Learning-rate schedule (the paper: cosine with warmup, peak 3e-4,
+/// floor 3e-5).
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant { lr: f64 },
+    Cosine { peak: f64, floor: f64, warmup_steps: usize, total_steps: usize },
+    Linear { start: f64, end: f64, total_steps: usize },
+}
+
+impl LrSchedule {
+    /// lr at a 0-based step index.
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::Cosine { peak, floor, warmup_steps, total_steps } => {
+                if warmup_steps > 0 && step < warmup_steps {
+                    return floor
+                        + (peak - floor) * (step as f64 / warmup_steps as f64);
+                }
+                let t = (step - warmup_steps) as f64
+                    / (total_steps.saturating_sub(warmup_steps)).max(1) as f64;
+                let t = t.min(1.0);
+                floor + 0.5 * (peak - floor)
+                    * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::Linear { start, end, total_steps } => {
+                let t = (step as f64 / total_steps.max(1) as f64).min(1.0);
+                start + (end - start) * t
+            }
+        }
+    }
+
+    pub fn paper_default(total_steps: usize) -> Self {
+        LrSchedule::Cosine {
+            peak: 3e-4,
+            floor: 3e-5,
+            warmup_steps: (total_steps / 30).max(1),
+            total_steps,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            LrSchedule::Constant { lr } => Json::obj(vec![
+                ("kind", Json::str("constant")), ("lr", Json::num(*lr))]),
+            LrSchedule::Cosine { peak, floor, warmup_steps, total_steps } =>
+                Json::obj(vec![
+                    ("kind", Json::str("cosine")),
+                    ("peak", Json::num(*peak)),
+                    ("floor", Json::num(*floor)),
+                    ("warmup_steps", Json::num(*warmup_steps as f64)),
+                    ("total_steps", Json::num(*total_steps as f64))]),
+            LrSchedule::Linear { start, end, total_steps } => Json::obj(vec![
+                ("kind", Json::str("linear")),
+                ("start", Json::num(*start)),
+                ("end", Json::num(*end)),
+                ("total_steps", Json::num(*total_steps as f64))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(match v.req("kind")?.as_str()? {
+            "constant" => LrSchedule::Constant {
+                lr: v.req("lr")?.as_f64()?,
+            },
+            "cosine" => LrSchedule::Cosine {
+                peak: v.req("peak")?.as_f64()?,
+                floor: v.req("floor")?.as_f64()?,
+                warmup_steps: v.req("warmup_steps")?.as_usize()?,
+                total_steps: v.req("total_steps")?.as_usize()?,
+            },
+            "linear" => LrSchedule::Linear {
+                start: v.req("start")?.as_f64()?,
+                end: v.req("end")?.as_f64()?,
+                total_steps: v.req("total_steps")?.as_usize()?,
+            },
+            other => bail!("unknown lr schedule {other:?}"),
+        })
+    }
+}
+
+/// What to train on.
+#[derive(Debug, Clone)]
+pub enum DataConfig {
+    /// The synthetic text corpus (LM pretraining path).
+    Corpus { seed: u64 },
+    /// Multi-query associative recall (Fig. 2).
+    Mqar { num_pairs: usize, seed: u64 },
+    /// One of the MAD tasks (Table 1).
+    Mad { task: String, seed: u64 },
+    /// RegBench in-context language learning (Fig. 3).
+    RegBench { seed: u64 },
+    /// Recall-intensive kv-extraction (SWDE/SQuAD/FDA analogs, Table 2).
+    Recall { style: String, seed: u64 },
+}
+
+impl DataConfig {
+    pub fn to_json(&self) -> Json {
+        match self {
+            DataConfig::Corpus { seed } => Json::obj(vec![
+                ("kind", Json::str("corpus")),
+                ("seed", Json::num(*seed as f64))]),
+            DataConfig::Mqar { num_pairs, seed } => Json::obj(vec![
+                ("kind", Json::str("mqar")),
+                ("num_pairs", Json::num(*num_pairs as f64)),
+                ("seed", Json::num(*seed as f64))]),
+            DataConfig::Mad { task, seed } => Json::obj(vec![
+                ("kind", Json::str("mad")),
+                ("task", Json::str(task.clone())),
+                ("seed", Json::num(*seed as f64))]),
+            DataConfig::RegBench { seed } => Json::obj(vec![
+                ("kind", Json::str("regbench")),
+                ("seed", Json::num(*seed as f64))]),
+            DataConfig::Recall { style, seed } => Json::obj(vec![
+                ("kind", Json::str("recall")),
+                ("style", Json::str(style.clone())),
+                ("seed", Json::num(*seed as f64))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let seed = v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0);
+        Ok(match v.req("kind")?.as_str()? {
+            "corpus" => DataConfig::Corpus { seed },
+            "mqar" => DataConfig::Mqar {
+                num_pairs: v.req("num_pairs")?.as_usize()?,
+                seed,
+            },
+            "mad" => DataConfig::Mad {
+                task: v.req("task")?.as_str()?.to_string(),
+                seed,
+            },
+            "regbench" => DataConfig::RegBench { seed },
+            "recall" => DataConfig::Recall {
+                style: v.req("style")?.as_str()?.to_string(),
+                seed,
+            },
+            other => bail!("unknown data kind {other:?}"),
+        })
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact base name, e.g. "deltanet_tiny" — `.train`/`.eval`/`.decode`
+    /// suffixes are appended per phase
+    pub artifact: String,
+    pub artifacts_dir: PathBuf,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub data: DataConfig,
+    /// evaluate every N steps (0 = only at the end)
+    pub eval_every: usize,
+    /// number of eval batches per evaluation
+    pub eval_batches: usize,
+    /// write run metrics JSONL here
+    pub log_path: Option<PathBuf>,
+    /// save a checkpoint here at the end (npz)
+    pub checkpoint_path: Option<PathBuf>,
+}
+
+impl RunConfig {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().render())?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifact", Json::str(self.artifact.clone())),
+            ("artifacts_dir",
+             Json::str(self.artifacts_dir.display().to_string())),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", self.lr.to_json()),
+            ("data", self.data.to_json()),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("log_path", match &self.log_path {
+                Some(p) => Json::str(p.display().to_string()),
+                None => Json::Null,
+            }),
+            ("checkpoint_path", match &self.checkpoint_path {
+                Some(p) => Json::str(p.display().to_string()),
+                None => Json::Null,
+            }),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let opt_path = |key: &str| -> Option<PathBuf> {
+            v.get(key).and_then(|x| x.as_str().ok().map(PathBuf::from))
+        };
+        Ok(RunConfig {
+            artifact: v.req("artifact")?.as_str()?.to_string(),
+            artifacts_dir: PathBuf::from(
+                v.get("artifacts_dir").and_then(|x| x.as_str().ok())
+                    .unwrap_or("artifacts")),
+            steps: v.req("steps")?.as_usize()?,
+            seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
+            lr: LrSchedule::from_json(v.req("lr")?)?,
+            data: DataConfig::from_json(v.req("data")?)?,
+            eval_every: v.get("eval_every").map(|x| x.as_usize())
+                .transpose()?.unwrap_or(0),
+            eval_batches: v.get("eval_batches").map(|x| x.as_usize())
+                .transpose()?.unwrap_or(4),
+            log_path: opt_path("log_path"),
+            checkpoint_path: opt_path("checkpoint_path"),
+        })
+    }
+
+    pub fn quick(artifact: &str, steps: usize, data: DataConfig) -> Self {
+        RunConfig {
+            artifact: artifact.into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            steps,
+            seed: 0,
+            lr: LrSchedule::paper_default(steps),
+            data,
+            eval_every: 0,
+            eval_batches: 4,
+            log_path: None,
+            checkpoint_path: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = LrSchedule::Cosine {
+            peak: 3e-4, floor: 3e-5, warmup_steps: 10, total_steps: 110,
+        };
+        assert!((s.at(0) - 3e-5).abs() < 1e-9);
+        assert!((s.at(10) - 3e-4).abs() < 1e-9);       // peak after warmup
+        assert!(s.at(60) < 3e-4 && s.at(60) > 3e-5);   // mid-decay
+        assert!((s.at(110) - 3e-5).abs() < 1e-9);      // floor at end
+        assert!((s.at(10_000) - 3e-5).abs() < 1e-9);   // clamped past end
+        for i in 10..109 {
+            assert!(s.at(i) >= s.at(i + 1), "not monotone at {i}");
+        }
+    }
+
+    #[test]
+    fn linear_and_constant() {
+        let c = LrSchedule::Constant { lr: 1e-3 };
+        assert_eq!(c.at(0), 1e-3);
+        assert_eq!(c.at(999), 1e-3);
+        let l = LrSchedule::Linear { start: 1.0, end: 0.0, total_steps: 10 };
+        assert!((l.at(5) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = RunConfig::quick("deltanet_tiny", 100,
+                                   DataConfig::Mqar { num_pairs: 4, seed: 1 });
+        let text = cfg.to_json().render();
+        let back = RunConfig::from_json(
+            &crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.artifact, "deltanet_tiny");
+        assert_eq!(back.steps, 100);
+        match back.data {
+            DataConfig::Mqar { num_pairs, seed } => {
+                assert_eq!(num_pairs, 4);
+                assert_eq!(seed, 1);
+            }
+            _ => panic!("wrong data kind"),
+        }
+        match back.lr {
+            LrSchedule::Cosine { warmup_steps, .. } =>
+                assert!(warmup_steps >= 1),
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("deltanet_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        let cfg = RunConfig::quick("x", 5, DataConfig::Corpus { seed: 2 });
+        cfg.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back.steps, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

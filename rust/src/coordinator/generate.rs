@@ -1,0 +1,229 @@
+//! Batched recurrent decoding — the constant-memory inference path that is
+//! the whole point of linear-attention models (no KV cache for DeltaNet
+//! layers; state is a fixed d_k×d_v matrix per head).
+//!
+//! The `.decode` artifact steps a whole batch one token forward:
+//! (params, state, token[B], pos) → (logits[B,V], state').  The engine owns
+//! sampling and the prompt/generation bookkeeping: rows of a batch may have
+//! prompts of different lengths — all rows step together from pos 0, each
+//! row feeds prompt tokens until its prompt is exhausted, then feeds its own
+//! previous sample (standard static-batch decoding).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+use xla::Literal;
+
+use crate::runtime::{Executable, Role, Runtime};
+use crate::tensor::rng::Rng;
+
+/// Sampling policy.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    Greedy,
+    /// temperature > 0; top_k = 0 disables the filter
+    TopK { temperature: f32, k: usize },
+}
+
+pub struct DecodeEngine {
+    exe: Arc<Executable>,
+    /// full decode input vector (params + state + token + pos)
+    inputs: Vec<Literal>,
+    carry: Vec<(usize, usize)>, // output idx -> input idx (state tensors)
+    idx_token: usize,
+    idx_pos: usize,
+    state_inputs: Vec<usize>,
+    pub batch: usize,
+    pub vocab: usize,
+    pub max_seq_len: usize,
+}
+
+impl DecodeEngine {
+    /// Build from an artifact; params default to manifest init under `seed`
+    /// (use [`Self::set_params`] to install trained weights).
+    pub fn new(runtime: &Runtime, artifact: &str, seed: u64) -> crate::Result<Self> {
+        let exe = runtime.load(&format!("{artifact}.decode"))?;
+        let man = &exe.manifest;
+        let host = exe.init_inputs(seed)?;
+        let inputs: Vec<Literal> = host.iter()
+            .map(|v| v.to_literal())
+            .collect::<crate::Result<_>>()?;
+        let carry = man.carry_map().into_iter().collect();
+        let idx_token = man.input_index("token")?;
+        let idx_pos = man.input_index("pos")?;
+        let state_inputs = man.inputs_with_role(Role::State)
+            .into_iter().map(|(i, _)| i).collect();
+        let vocab = man.config.as_ref()
+            .map(|c| c.vocab_size)
+            .context("decode artifact missing model config")?;
+        let batch = man.batch;
+        let max_seq_len = man.config.as_ref().unwrap().max_seq_len;
+        Ok(DecodeEngine {
+            exe,
+            inputs,
+            carry,
+            idx_token,
+            idx_pos,
+            state_inputs,
+            batch,
+            vocab,
+            max_seq_len,
+        })
+    }
+
+    /// Install trained parameters (full names, e.g. "params.embed").
+    pub fn set_params(&mut self, params: &[(String, Literal)]) -> crate::Result<()> {
+        let man = self.exe.manifest.clone();
+        for (name, lit) in params {
+            let i = man.input_index(name)?;
+            self.inputs[i] = lit.clone();
+        }
+        Ok(())
+    }
+
+    /// Zero all recurrent state (start fresh sequences).
+    pub fn reset_state(&mut self) -> crate::Result<()> {
+        let man = self.exe.manifest.clone();
+        for &i in &self.state_inputs {
+            let spec = &man.inputs[i];
+            let zeros = vec![0f32; spec.element_count()];
+            self.inputs[i].copy_raw_from(&zeros)?;
+        }
+        Ok(())
+    }
+
+    /// One decode step: feed `tokens` ([batch] ids) at position `pos`,
+    /// return flattened logits [batch * vocab].
+    pub fn step(&mut self, tokens: &[i32], pos: usize) -> crate::Result<Vec<f32>> {
+        if tokens.len() != self.batch {
+            bail!("decode batch is {}, got {} tokens", self.batch, tokens.len());
+        }
+        if pos >= self.max_seq_len {
+            bail!("pos {} exceeds decode cache bound {}", pos, self.max_seq_len);
+        }
+        self.inputs[self.idx_token].copy_raw_from(tokens)?;
+        self.inputs[self.idx_pos].copy_raw_from(&[pos as i32])?;
+        let mut outs = self.exe.execute(&self.inputs)?;
+        let man = &self.exe.manifest;
+        let logits = outs[man.output_index("logits")?].to_vec::<f32>()?;
+        for &(o, i) in &self.carry {
+            self.inputs[i] = std::mem::replace(&mut outs[o], Literal::scalar(0f32));
+        }
+        Ok(logits)
+    }
+
+    /// Generate continuations for a batch of prompts (token ids).  Returns
+    /// one Vec per row containing ONLY the newly generated tokens.
+    pub fn generate(&mut self, prompts: &[Vec<i32>], max_new: usize,
+                    sampling: Sampling, seed: u64)
+                    -> crate::Result<Vec<Vec<i32>>> {
+        if prompts.len() > self.batch {
+            bail!("{} prompts > engine batch {}", prompts.len(), self.batch);
+        }
+        if prompts.iter().any(|p| p.is_empty()) {
+            bail!("empty prompt");
+        }
+        self.reset_state()?;
+        let mut rng = Rng::new(seed);
+        let n = prompts.len();
+        let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap();
+        let total_steps = (max_prompt + max_new).min(self.max_seq_len);
+
+        let mut generated: Vec<Vec<i32>> = vec![vec![]; n];
+        let mut feed = vec![0i32; self.batch];
+        for (b, p) in prompts.iter().enumerate() {
+            feed[b] = p[0];
+        }
+        for pos in 0..total_steps {
+            let logits = self.step(&feed, pos)?;
+            for b in 0..n {
+                let next_pos = pos + 1;
+                let row = &logits[b * self.vocab..(b + 1) * self.vocab];
+                if next_pos < prompts[b].len() {
+                    // still consuming the prompt
+                    feed[b] = prompts[b][next_pos];
+                } else if generated[b].len() < max_new {
+                    let tok = sample_from(row, sampling, &mut rng);
+                    generated[b].push(tok);
+                    feed[b] = tok;
+                }
+            }
+            if (0..n).all(|b| generated[b].len() >= max_new) {
+                break;
+            }
+        }
+        Ok(generated)
+    }
+}
+
+/// Sample a token id from a logits row.
+pub fn sample_from(logits: &[f32], sampling: Sampling, rng: &mut Rng) -> i32 {
+    match sampling {
+        Sampling::Greedy => argmax(logits) as i32,
+        Sampling::TopK { temperature, k } => {
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if k > 0 && k < logits.len() {
+                idx.sort_unstable_by(|&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap()
+                });
+                idx.truncate(k);
+            }
+            let t = temperature.max(1e-4);
+            let mx = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
+            let weights: Vec<f32> = idx.iter()
+                .map(|&i| ((logits[i] - mx) / t).exp())
+                .collect();
+            idx[rng.categorical(&weights)] as i32
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(1);
+        let l = vec![0.0, 10.0, 5.0];
+        assert_eq!(sample_from(&l, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Rng::new(2);
+        let l = vec![0.0, 10.0, 9.0, -50.0];
+        for _ in 0..100 {
+            let t = sample_from(
+                &l, Sampling::TopK { temperature: 1.0, k: 2 }, &mut rng);
+            assert!(t == 1 || t == 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(3);
+        let l = vec![1.0, 2.0, 3.0];
+        let hits = (0..200)
+            .filter(|_| sample_from(
+                &l, Sampling::TopK { temperature: 0.01, k: 0 }, &mut rng) == 2)
+            .count();
+        assert!(hits > 195);
+    }
+}

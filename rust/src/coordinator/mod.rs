@@ -1,0 +1,14 @@
+//! L3 coordination: the training loop, the evaluator driver, the batched
+//! recurrent-decoding engine, and the async serving front-end.
+//!
+//! The coordinator owns everything the paper's §D recipe puts outside the
+//! compiled step function: LR scheduling, data, logging, checkpoints,
+//! batching policy — while the compiled artifacts own fwd+bwd+AdamW.
+
+pub mod generate;
+pub mod server;
+pub mod trainer;
+
+pub use generate::DecodeEngine;
+pub use server::{ServeEngine, ServeStats};
+pub use trainer::{EvalOutcome, TrainReport, Trainer};

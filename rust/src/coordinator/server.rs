@@ -1,0 +1,219 @@
+//! Serving front-end over the decode engine (std threads; tokio is not
+//! available in the offline build — documented in DESIGN.md §Substitutions).
+//!
+//! A minimal but real request path: clients submit `GenRequest`s through an
+//! mpsc queue; a dedicated engine thread drains the queue into fixed-size
+//! groups (static batching, vLLM-router style admission), runs batched
+//! recurrent decoding, and resolves each request's reply channel with the
+//! generated tokens plus a latency breakdown.  New requests join at group
+//! boundaries — the admission policy the bench harness sweeps.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::generate::{DecodeEngine, Sampling};
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    /// time from submission to batch start
+    pub queue_ms: f64,
+    /// time inside the decode loop (whole batch)
+    pub decode_ms: f64,
+}
+
+struct Pending {
+    req: GenRequest,
+    submitted: Instant,
+    reply: mpsc::Sender<crate::Result<GenResponse>>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub tokens_generated: usize,
+    /// per-request sums (for mean latency)
+    pub total_queue_ms: f64,
+    pub total_decode_ms: f64,
+    /// wall time spent decoding, counted once per batch (for throughput)
+    pub batch_decode_ms: f64,
+    pub batches: usize,
+}
+
+impl ServeStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        (self.total_queue_ms + self.total_decode_ms)
+            / self.requests.max(1) as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_generated as f64 / (self.batch_decode_ms / 1e3).max(1e-9)
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.requests as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// A handle to a submitted request; `wait()` blocks for the response.
+pub struct Ticket {
+    rx: mpsc::Receiver<crate::Result<GenResponse>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> crate::Result<GenResponse> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+}
+
+pub struct ServeEngine {
+    tx: Option<mpsc::Sender<Pending>>,
+    stats: Arc<Mutex<ServeStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Spawn the engine loop on a dedicated thread.  PJRT handles are not
+    /// `Send`, so the decode engine is constructed INSIDE the worker via
+    /// `factory` (build the runtime + engine there).  `group_timeout` is
+    /// how long the batcher waits to fill a group before running a partial
+    /// one.
+    pub fn spawn<F>(factory: F, sampling: Sampling, group_timeout: Duration)
+                    -> Self
+    where
+        F: FnOnce() -> crate::Result<DecodeEngine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats2 = stats.clone();
+
+        let worker = std::thread::spawn(move || {
+            let mut engine = match factory() {
+                Ok(e) => e,
+                Err(e) => {
+                    // drain the queue, failing every request
+                    let msg = format!("engine init failed: {e:#}");
+                    while let Ok(p) = rx.recv() {
+                        let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                    return;
+                }
+            };
+            let cap = engine.batch;
+            while let Ok(first) = rx.recv() {
+                // collect a group: block on the first request, then fill
+                // until timeout or capacity
+                let mut group = vec![first];
+                let deadline = Instant::now() + group_timeout;
+                while group.len() < cap {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(p) => group.push(p),
+                        Err(_) => break,
+                    }
+                }
+                let t0 = Instant::now();
+                let prompts: Vec<Vec<i32>> =
+                    group.iter().map(|p| p.req.prompt.clone()).collect();
+                let max_new =
+                    group.iter().map(|p| p.req.max_new).max().unwrap_or(0);
+                let result = engine.generate(&prompts, max_new, sampling, 0);
+                let decode_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+                let mut st = stats2.lock().unwrap();
+                st.batches += 1;
+                st.batch_decode_ms += decode_ms;
+                match result {
+                    Ok(gens) => {
+                        for (p, g) in group.into_iter().zip(gens) {
+                            let queue_ms = t0.duration_since(p.submitted)
+                                .as_secs_f64() * 1e3;
+                            let mut tokens = g;
+                            tokens.truncate(p.req.max_new);
+                            st.requests += 1;
+                            st.tokens_generated += tokens.len();
+                            st.total_queue_ms += queue_ms;
+                            st.total_decode_ms += decode_ms;
+                            let _ = p.reply.send(Ok(GenResponse {
+                                tokens,
+                                queue_ms,
+                                decode_ms,
+                            }));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("decode failed: {e:#}");
+                        for p in group {
+                            let _ = p.reply
+                                .send(Err(anyhow::anyhow!(msg.clone())));
+                        }
+                    }
+                }
+            }
+        });
+
+        ServeEngine { tx: Some(tx), stats, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns a ticket to wait on.
+    pub fn submit(&self, req: GenRequest) -> crate::Result<Ticket> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.as_ref().unwrap()
+            .send(Pending { req, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(Ticket { rx: reply_rx })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests and join the engine thread.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let st = ServeStats {
+            requests: 4,
+            tokens_generated: 64,
+            total_queue_ms: 4.0,
+            total_decode_ms: 36.0,
+            batch_decode_ms: 16.0,
+            batches: 2,
+        };
+        assert!((st.mean_latency_ms() - 10.0).abs() < 1e-9);
+        assert!((st.tokens_per_sec() - 4000.0).abs() < 1.0);
+        assert!((st.mean_batch_occupancy() - 2.0).abs() < 1e-9);
+    }
+}

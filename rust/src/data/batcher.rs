@@ -1,0 +1,113 @@
+//! Batching utilities: deterministic batch streams over a [`TaskGen`] and
+//! a held-out split discipline (train stream vs eval stream drawn from
+//! independently-seeded generators of the same task).
+
+use super::{Batch, TaskGen};
+
+/// A (train, eval) pair of generators for the same task with disjoint RNG
+/// streams — the split discipline every experiment harness uses.
+pub struct Split {
+    pub train: Box<dyn TaskGen>,
+    pub eval: Box<dyn TaskGen>,
+}
+
+impl Split {
+    pub fn from_config(cfg: &crate::config::DataConfig) -> Self {
+        let train = super::build_task(cfg);
+        // re-seed the eval stream; only the HIGH bits change so identity
+        // that tasks derive from the low bits (e.g. MAD-memorize's fixed
+        // map) is shared between the splits
+        let eval_cfg = bump_seed(cfg, 0x5eed << 32);
+        let eval = super::build_task(&eval_cfg);
+        Split { train, eval }
+    }
+}
+
+fn bump_seed(cfg: &crate::config::DataConfig, delta: u64) -> crate::config::DataConfig {
+    use crate::config::DataConfig as D;
+    match cfg.clone() {
+        D::Corpus { seed } => D::Corpus { seed: seed ^ delta },
+        D::Mqar { num_pairs, seed } => D::Mqar { num_pairs, seed: seed ^ delta },
+        D::Mad { task, seed } => D::Mad { task, seed: seed ^ delta },
+        D::RegBench { seed } => D::RegBench { seed: seed ^ delta },
+        D::Recall { style, seed } => D::Recall { style, seed: seed ^ delta },
+    }
+}
+
+/// Simple prefetching batch stream (synchronous; the PJRT step dominates,
+/// generation is micro-seconds — kept synchronous after profiling showed
+/// no win from a thread, see EXPERIMENTS.md §Perf).
+pub struct BatchStream<'a> {
+    gen: &'a mut dyn TaskGen,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl<'a> BatchStream<'a> {
+    pub fn new(gen: &'a mut dyn TaskGen, batch: usize, seq_len: usize) -> Self {
+        BatchStream { gen, batch, seq_len }
+    }
+}
+
+impl Iterator for BatchStream<'_> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        Some(self.gen.sample(self.batch, self.seq_len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+
+    #[test]
+    fn split_streams_differ() {
+        let split = Split::from_config(
+            &DataConfig::Mqar { num_pairs: 4, seed: 1 });
+        let mut tr = split.train;
+        let mut ev = split.eval;
+        let a = tr.sample(2, 32);
+        let b = ev.sample(2, 32);
+        assert_ne!(a.tokens, b.tokens, "train and eval must not coincide");
+    }
+
+    #[test]
+    fn memorize_split_shares_the_map() {
+        // MAD-memorize must use the SAME fixed map in train and eval (the
+        // point is recall-from-weights on fresh samples)
+        let split = Split::from_config(
+            &DataConfig::Mad { task: "memorize".into(), seed: 7 });
+        let mut tr = split.train;
+        let mut ev = split.eval;
+        let a = tr.sample(4, 32);
+        let b = ev.sample(4, 32);
+        assert_ne!(a.tokens, b.tokens, "streams must differ");
+        // but key→value bindings must agree across the splits
+        let mut map = std::collections::HashMap::new();
+        for batch in [&a, &b] {
+            for bi in 0..4 {
+                for pos in 0..32 {
+                    if batch.mask[bi * 32 + pos] > 0.0 {
+                        let k = batch.token(bi, pos);
+                        let v = batch.token(bi, pos + 1);
+                        let prev = map.insert(k, v);
+                        assert!(prev.is_none() || prev == Some(v),
+                                "map diverged between splits");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_yields_batches() {
+        let mut gen = crate::data::mqar::Mqar::new(4, 2);
+        let batches: Vec<_> =
+            BatchStream::new(&mut gen, 2, 32).take(3).collect();
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|b| b.masked_positions() > 0));
+        assert_ne!(batches[0].tokens, batches[1].tokens);
+    }
+}

@@ -1,0 +1,351 @@
+//! MAD — Mechanistic Architecture Design benchmark (Poli et al. 2024),
+//! the paper's Table 1: six synthetic token-manipulation probes.
+//!
+//! Faithful reimplementations of the task *mechanics* at this testbed's
+//! scale (the MAD spec fixes the probe structure, not absolute sizes):
+//!
+//!   in-context recall   kv pairs then queries (recall from context)
+//!   fuzzy recall        multi-token keys/values (recall with binding)
+//!   noisy recall        recall with irrelevant noise tokens interleaved
+//!   selective copy      reproduce content tokens, skipping noise, in order
+//!   memorize            a FIXED global kv map (recall from weights)
+//!   compress            reproduce the full prefix after a trigger token
+//!                       (context compression probe)
+//!
+//! Shared token map: 0 pad, 1 separator/trigger, then task alphabets.
+
+use super::{Batch, TaskGen};
+use crate::tensor::rng::Rng;
+
+const KEYS: usize = 16;
+const VALS: usize = 16;
+const NOISE: usize = 8;
+
+fn key_tok(k: usize) -> i32 {
+    2 + k as i32
+}
+
+fn val_tok(v: usize) -> i32 {
+    (2 + KEYS + v) as i32
+}
+
+fn noise_tok(n: usize) -> i32 {
+    (2 + KEYS + VALS + n) as i32
+}
+
+pub const VOCAB: usize = 2 + KEYS + VALS + NOISE;
+
+pub fn build(task: &str, seed: u64) -> Box<dyn TaskGen> {
+    match task {
+        "in_context_recall" => Box::new(InContextRecall { rng: Rng::new(seed), noisy: false }),
+        "noisy_recall" => Box::new(InContextRecall { rng: Rng::new(seed), noisy: true }),
+        "fuzzy_recall" => Box::new(FuzzyRecall { rng: Rng::new(seed) }),
+        "selective_copy" => Box::new(SelectiveCopy { rng: Rng::new(seed) }),
+        "memorize" => Box::new(Memorize::new(seed)),
+        "compress" => Box::new(Compress { rng: Rng::new(seed) }),
+        other => panic!("unknown MAD task {other:?}"),
+    }
+}
+
+pub const ALL_TASKS: [&str; 6] = [
+    "compress", "fuzzy_recall", "in_context_recall", "memorize",
+    "noisy_recall", "selective_copy",
+];
+
+// ---------------------------------------------------------------------------
+
+pub struct InContextRecall {
+    rng: Rng,
+    noisy: bool,
+}
+
+impl TaskGen for InContextRecall {
+    fn vocab_required(&self) -> usize {
+        VOCAB
+    }
+
+    fn name(&self) -> &str {
+        if self.noisy { "noisy_recall" } else { "in_context_recall" }
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let mut out = Batch::new(batch, seq_len);
+        let n = ((seq_len - 2) / 4).clamp(2, KEYS); // pairs
+        for b in 0..batch {
+            let keys = self.rng.sample_distinct(KEYS, n);
+            let vals: Vec<usize> = (0..n).map(|_| self.rng.below(VALS)).collect();
+            let mut pos = 0;
+            for i in 0..n {
+                if self.noisy && self.rng.coin(0.3) && pos + 3 < seq_len {
+                    out.set_token(b, pos, noise_tok(self.rng.below(NOISE)));
+                    pos += 1;
+                }
+                out.set_token(b, pos, key_tok(keys[i]));
+                out.set_token(b, pos + 1, val_tok(vals[i]));
+                pos += 2;
+            }
+            out.set_token(b, pos, 1);
+            pos += 1;
+            while pos + 1 <= seq_len {
+                if self.noisy && self.rng.coin(0.3) && pos + 2 <= seq_len {
+                    out.set_token(b, pos, noise_tok(self.rng.below(NOISE)));
+                    pos += 1;
+                    continue;
+                }
+                let i = self.rng.below(n);
+                out.set_token(b, pos, key_tok(keys[i]));
+                out.set_token(b, pos + 1, val_tok(vals[i]));
+                out.set_mask(b, pos);
+                pos += 2;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Fuzzy recall: keys and values are 2-token tuples; the model must bind
+/// across multi-token units.
+pub struct FuzzyRecall {
+    rng: Rng,
+}
+
+impl TaskGen for FuzzyRecall {
+    fn vocab_required(&self) -> usize {
+        VOCAB
+    }
+
+    fn name(&self) -> &str {
+        "fuzzy_recall"
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let mut out = Batch::new(batch, seq_len);
+        let n = ((seq_len - 2) / 8).clamp(2, KEYS / 2);
+        for b in 0..batch {
+            // 2-token keys: (k1, k2); distinct first components
+            let k1s = self.rng.sample_distinct(KEYS, n);
+            let k2s: Vec<usize> = (0..n).map(|_| self.rng.below(KEYS)).collect();
+            let v1s: Vec<usize> = (0..n).map(|_| self.rng.below(VALS)).collect();
+            let v2s: Vec<usize> = (0..n).map(|_| self.rng.below(VALS)).collect();
+            let mut pos = 0;
+            for i in 0..n {
+                out.set_token(b, pos, key_tok(k1s[i]));
+                out.set_token(b, pos + 1, key_tok(k2s[i]));
+                out.set_token(b, pos + 2, val_tok(v1s[i]));
+                out.set_token(b, pos + 3, val_tok(v2s[i]));
+                pos += 4;
+            }
+            out.set_token(b, pos, 1);
+            pos += 1;
+            while pos + 3 <= seq_len {
+                let i = self.rng.below(n);
+                out.set_token(b, pos, key_tok(k1s[i]));
+                out.set_token(b, pos + 1, key_tok(k2s[i]));
+                out.set_token(b, pos + 2, val_tok(v1s[i]));
+                out.set_token(b, pos + 3, val_tok(v2s[i]));
+                out.set_mask(b, pos + 1); // predict v1 after full key
+                out.set_mask(b, pos + 2); // predict v2 after v1
+                pos += 4;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Selective copy: content tokens scattered among noise; after the trigger,
+/// reproduce the content tokens in order.
+pub struct SelectiveCopy {
+    rng: Rng,
+}
+
+impl TaskGen for SelectiveCopy {
+    fn vocab_required(&self) -> usize {
+        VOCAB
+    }
+
+    fn name(&self) -> &str {
+        "selective_copy"
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let mut out = Batch::new(batch, seq_len);
+        let n_content = (seq_len / 4).clamp(2, 12);
+        let prefix_len = seq_len - n_content - 1;
+        for b in 0..batch {
+            let content: Vec<i32> =
+                (0..n_content).map(|_| val_tok(self.rng.below(VALS))).collect();
+            // choose positions for content within the prefix, in order
+            let mut slots = self.rng.sample_distinct(prefix_len, n_content);
+            slots.sort_unstable();
+            let mut ci = 0;
+            for pos in 0..prefix_len {
+                if ci < n_content && slots[ci] == pos {
+                    out.set_token(b, pos, content[ci]);
+                    ci += 1;
+                } else {
+                    out.set_token(b, pos, noise_tok(self.rng.below(NOISE)));
+                }
+            }
+            out.set_token(b, prefix_len, 1); // trigger
+            for (i, &c) in content.iter().enumerate() {
+                out.set_token(b, prefix_len + 1 + i, c);
+                out.set_mask(b, prefix_len + i);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Memorize: one FIXED random key→value map shared by every sample (drawn
+/// from the task seed).  Recall must come from the weights, not the context
+/// — DeltaNet's known weak spot in Table 1.
+pub struct Memorize {
+    map: Vec<usize>,
+    rng: Rng,
+}
+
+impl Memorize {
+    pub fn new(seed: u64) -> Self {
+        // The fixed map is derived from the LOW 32 bits only: the train/eval
+        // split bumps the high bits (see data::batcher::bump_seed), which
+        // must change the sample stream but keep the memorized map — the
+        // whole point of the task is recall-from-weights on unseen samples.
+        let mut map_rng =
+            Rng::new((seed & 0xFFFF_FFFF) ^ 0x4d45_4d4f_5249_5a45);
+        let map = (0..KEYS).map(|_| map_rng.below(VALS)).collect();
+        Memorize { map, rng: Rng::new(seed) }
+    }
+}
+
+impl TaskGen for Memorize {
+    fn vocab_required(&self) -> usize {
+        VOCAB
+    }
+
+    fn name(&self) -> &str {
+        "memorize"
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let mut out = Batch::new(batch, seq_len);
+        for b in 0..batch {
+            let mut pos = 0;
+            while pos + 1 <= seq_len {
+                let k = self.rng.below(KEYS);
+                out.set_token(b, pos, key_tok(k));
+                out.set_token(b, pos + 1, val_tok(self.map[k]));
+                out.set_mask(b, pos);
+                pos += 2;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Compress: random prefix, trigger, then the model reproduces the entire
+/// prefix (forces the state to compress the whole context).
+pub struct Compress {
+    rng: Rng,
+}
+
+impl TaskGen for Compress {
+    fn vocab_required(&self) -> usize {
+        VOCAB
+    }
+
+    fn name(&self) -> &str {
+        "compress"
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let m = (seq_len - 1) / 2;
+        let mut out = Batch::new(batch, seq_len);
+        for b in 0..batch {
+            let prefix: Vec<i32> =
+                (0..m).map(|_| val_tok(self.rng.below(VALS))).collect();
+            for (i, &t) in prefix.iter().enumerate() {
+                out.set_token(b, i, t);
+            }
+            out.set_token(b, m, 1);
+            for (i, &t) in prefix.iter().enumerate() {
+                out.set_token(b, m + 1 + i, t);
+                out.set_mask(b, m + i);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_build_and_sample() {
+        for task in ALL_TASKS {
+            let mut g = build(task, 5);
+            let b = g.sample(4, 48);
+            assert!(b.masked_positions() > 0, "{task} produced no targets");
+            let v = g.vocab_required() as i32;
+            assert!(b.tokens.iter().all(|&t| t >= 0 && t < v), "{task}");
+        }
+    }
+
+    #[test]
+    fn memorize_map_consistent_across_samples() {
+        let mut g = Memorize::new(3);
+        let b1 = g.sample(2, 32);
+        let b2 = g.sample(2, 32);
+        let mut map = std::collections::HashMap::new();
+        for b in [&b1, &b2] {
+            for bi in 0..2 {
+                for pos in 0..32 {
+                    if b.mask[bi * 32 + pos] > 0.0 {
+                        let k = b.token(bi, pos);
+                        let v = b.token(bi, pos + 1);
+                        let prev = map.insert(k, v);
+                        assert!(prev.is_none() || prev == Some(v),
+                                "memorize map changed");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selective_copy_targets_match_content_order() {
+        let mut g = build("selective_copy", 11);
+        let b = g.sample(1, 40);
+        // find trigger
+        let trig = (0..40).find(|&p| b.token(0, p) == 1).unwrap();
+        // content tokens in prefix (value-alphabet tokens)
+        let lo = val_tok(0);
+        let hi = val_tok(VALS - 1);
+        let content: Vec<i32> = (0..trig)
+            .map(|p| b.token(0, p))
+            .filter(|&t| t >= lo && t <= hi)
+            .collect();
+        for (i, &c) in content.iter().enumerate() {
+            assert_eq!(b.token(0, trig + 1 + i), c);
+        }
+    }
+
+    #[test]
+    fn compress_reproduces_prefix() {
+        let mut g = build("compress", 13);
+        let b = g.sample(1, 21);
+        let m = 10;
+        assert_eq!(b.token(0, m), 1);
+        for i in 0..m {
+            assert_eq!(b.token(0, i), b.token(0, m + 1 + i));
+        }
+    }
+}

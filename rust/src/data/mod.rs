@@ -1,0 +1,156 @@
+//! Data pipeline + every synthetic benchmark the paper evaluates on.
+//!
+//! All generators are deterministic under a seed and produce [`Batch`]es in
+//! the exact layout the train/eval artifacts expect: `tokens` [B, L+1] i32
+//! (inputs = tokens[:, :-1], targets = tokens[:, 1:]) and a `mask` [B, L]
+//! over *target* positions that contribute to the loss / accuracy.
+
+pub mod batcher;
+pub mod corpus;
+pub mod mad;
+pub mod mqar;
+pub mod recall;
+pub mod regbench;
+pub mod tokenizer;
+
+use crate::runtime::HostValue;
+
+/// One batch of sequences in train/eval-artifact layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize, // number of TARGET positions (tokens row = L+1)
+    /// [B, L+1] row-major
+    pub tokens: Vec<i32>,
+    /// [B, L] row-major, 1.0 where the target counts
+    pub mask: Vec<f32>,
+    /// Optional per-position acceptable-token sets (RegBench-style scoring:
+    /// a prediction is correct if it is *any* valid continuation).
+    /// Indexed [b * L + pos]; empty vec = only the literal target counts.
+    pub accept: Option<Vec<Vec<i32>>>,
+}
+
+impl Batch {
+    pub fn new(batch: usize, seq_len: usize) -> Self {
+        Batch {
+            batch,
+            seq_len,
+            tokens: vec![0; batch * (seq_len + 1)],
+            mask: vec![0.0; batch * seq_len],
+            accept: None,
+        }
+    }
+
+    pub fn tokens_value(&self) -> crate::Result<HostValue> {
+        HostValue::from_i32(&[self.batch, self.seq_len + 1],
+                            self.tokens.clone())
+    }
+
+    pub fn mask_value(&self) -> crate::Result<HostValue> {
+        HostValue::from_f32(&[self.batch, self.seq_len], self.mask.clone())
+    }
+
+    pub fn set_token(&mut self, b: usize, pos: usize, tok: i32) {
+        self.tokens[b * (self.seq_len + 1) + pos] = tok;
+    }
+
+    pub fn token(&self, b: usize, pos: usize) -> i32 {
+        self.tokens[b * (self.seq_len + 1) + pos]
+    }
+
+    /// Mark target position `pos` (i.e. the model must predict
+    /// tokens[b][pos+1] from prefix tokens[b][..=pos]).
+    pub fn set_mask(&mut self, b: usize, pos: usize) {
+        self.mask[b * self.seq_len + pos] = 1.0;
+    }
+
+    pub fn masked_positions(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Score externally-computed argmax predictions ([B, L] i32) against
+    /// this batch: returns (correct, total) over masked positions,
+    /// honouring `accept` sets when present.
+    pub fn score_preds(&self, preds: &[i32]) -> (usize, usize) {
+        assert_eq!(preds.len(), self.batch * self.seq_len);
+        let mut correct = 0;
+        let mut total = 0;
+        for b in 0..self.batch {
+            for pos in 0..self.seq_len {
+                let i = b * self.seq_len + pos;
+                if self.mask[i] == 0.0 {
+                    continue;
+                }
+                total += 1;
+                let target = self.tokens[b * (self.seq_len + 1) + pos + 1];
+                let p = preds[i];
+                let ok = if let Some(acc) = &self.accept {
+                    if acc[i].is_empty() { p == target } else { acc[i].contains(&p) }
+                } else {
+                    p == target
+                };
+                if ok {
+                    correct += 1;
+                }
+            }
+        }
+        (correct, total)
+    }
+}
+
+/// A task that can emit train/eval batches.  All synthetic benchmarks and
+/// the LM corpus implement this.
+pub trait TaskGen: Send {
+    /// Smallest vocab the task's token ids fit in (must be ≤ artifact vocab).
+    fn vocab_required(&self) -> usize;
+    /// Sample a fresh batch.
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch;
+    fn name(&self) -> &str;
+}
+
+/// Build a generator from a [`crate::config::DataConfig`].
+pub fn build_task(cfg: &crate::config::DataConfig) -> Box<dyn TaskGen> {
+    use crate::config::DataConfig as D;
+    match cfg {
+        D::Corpus { seed } => Box::new(corpus::MarkovCorpus::new(128, *seed)),
+        D::Mqar { num_pairs, seed } =>
+            Box::new(mqar::Mqar::new(*num_pairs, *seed)),
+        D::Mad { task, seed } => mad::build(task, *seed),
+        D::RegBench { seed } => Box::new(regbench::RegBench::new(*seed)),
+        D::Recall { style, seed } => Box::new(recall::Recall::new(style, *seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_layout() {
+        let mut b = Batch::new(2, 4);
+        b.set_token(1, 2, 7);
+        assert_eq!(b.token(1, 2), 7);
+        assert_eq!(b.tokens.len(), 2 * 5);
+        b.set_mask(1, 3);
+        assert_eq!(b.masked_positions(), 1);
+    }
+
+    #[test]
+    fn score_preds_literal_and_accept() {
+        let mut b = Batch::new(1, 3);
+        // tokens: [5, 6, 7, 8]; mask target positions 0 and 2
+        for (i, t) in [5, 6, 7, 8].iter().enumerate() {
+            b.set_token(0, i, *t);
+        }
+        b.set_mask(0, 0); // target 6
+        b.set_mask(0, 2); // target 8
+        let (c, t) = b.score_preds(&[6, 0, 9]);
+        assert_eq!((c, t), (1, 2));
+        // with accept sets: position 2 also accepts 9
+        let mut acc = vec![vec![]; 3];
+        acc[2] = vec![8, 9];
+        b.accept = Some(acc);
+        let (c, t) = b.score_preds(&[6, 0, 9]);
+        assert_eq!((c, t), (2, 2));
+    }
+}

@@ -1,0 +1,199 @@
+//! RegBench — in-context language learning (Akyürek et al. 2024), the
+//! paper's Figure 3.
+//!
+//! Each sequence concatenates 10–20 strings sampled from ONE random
+//! probabilistic finite automaton (PFA); the model must infer the language
+//! on the fly and predict continuations of the final string.  Scoring: a
+//! prediction is correct if it is *any* symbol with nonzero probability
+//! from the current PFA state (the benchmark's validity criterion), which
+//! we express through [`Batch::accept`].
+//!
+//! Token map: 0 pad, 1 string separator, 2.. symbol alphabet.
+
+use super::{Batch, TaskGen};
+use crate::tensor::rng::Rng;
+
+const MAX_SYMBOLS: usize = 18;
+
+/// One random PFA: states × symbols → next state (partial).
+#[derive(Debug, Clone)]
+pub struct Pfa {
+    pub n_states: usize,
+    pub n_symbols: usize,
+    /// trans[state] = list of (symbol, next_state); nonempty for all states
+    pub trans: Vec<Vec<(usize, usize)>>,
+}
+
+impl Pfa {
+    pub fn random(rng: &mut Rng) -> Self {
+        let n_states = rng.range(4, 13);
+        let n_symbols = rng.range(4, MAX_SYMBOLS + 1);
+        let trans = (0..n_states)
+            .map(|_| {
+                let deg = rng.range(1, 4.min(n_symbols) + 1);
+                let syms = rng.sample_distinct(n_symbols, deg);
+                syms.into_iter()
+                    .map(|s| (s, rng.below(n_states)))
+                    .collect()
+            })
+            .collect();
+        Pfa { n_states, n_symbols, trans }
+    }
+
+    /// Random walk of `len` symbols from state 0.
+    pub fn walk(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut state = 0;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            let opts = &self.trans[state];
+            let (sym, next) = opts[rng.below(opts.len())];
+            out.push(sym);
+            state = next;
+        }
+        out
+    }
+
+    /// Symbols with nonzero probability from the state reached by `prefix`
+    /// (walked from state 0).  Returns None if the prefix is invalid.
+    pub fn valid_next(&self, prefix: &[usize]) -> Option<Vec<usize>> {
+        let mut state = 0;
+        for &sym in prefix {
+            let next = self.trans[state].iter()
+                .find(|(s, _)| *s == sym)
+                .map(|(_, n)| *n)?;
+            state = next;
+        }
+        Some(self.trans[state].iter().map(|(s, _)| *s).collect())
+    }
+}
+
+pub struct RegBench {
+    rng: Rng,
+}
+
+impl RegBench {
+    pub fn new(seed: u64) -> Self {
+        RegBench { rng: Rng::new(seed) }
+    }
+}
+
+fn sym_tok(s: usize) -> i32 {
+    2 + s as i32
+}
+
+impl TaskGen for RegBench {
+    fn vocab_required(&self) -> usize {
+        2 + MAX_SYMBOLS
+    }
+
+    fn name(&self) -> &str {
+        "regbench"
+    }
+
+    fn sample(&mut self, batch: usize, seq_len: usize) -> Batch {
+        let mut out = Batch::new(batch, seq_len);
+        let mut accept = vec![vec![]; batch * seq_len];
+        for b in 0..batch {
+            let pfa = Pfa::random(&mut self.rng);
+            let mut pos = 0;
+            let mut cur_string: Vec<usize> = vec![];
+            // fill the sequence with separator-delimited walks
+            while pos + 1 <= seq_len {
+                let remaining = seq_len + 1 - pos;
+                if remaining < 3 {
+                    break;
+                }
+                let len = self.rng.range(2, 9.min(remaining - 1).max(3));
+                let s = pfa.walk(len, &mut self.rng);
+                for (i, &sym) in s.iter().enumerate() {
+                    if pos > seq_len {
+                        break;
+                    }
+                    out.set_token(b, pos, sym_tok(sym));
+                    // mark targets on continuation positions (pos-1 predicts
+                    // this symbol): any valid next symbol is accepted
+                    if i > 0 && pos >= 1 && pos - 1 < seq_len {
+                        out.set_mask(b, pos - 1);
+                        let valid = pfa.valid_next(&s[..i]).unwrap();
+                        accept[b * seq_len + pos - 1] =
+                            valid.into_iter().map(sym_tok).collect();
+                    }
+                    pos += 1;
+                }
+                cur_string = s;
+                if pos <= seq_len {
+                    out.set_token(b, pos, 1);
+                    pos += 1;
+                }
+            }
+            let _ = cur_string;
+        }
+        out.accept = Some(accept);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pfa_walks_are_valid() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let pfa = Pfa::random(&mut rng);
+            let w = pfa.walk(10, &mut rng);
+            // every prefix must be walkable and each next symbol valid
+            for i in 1..w.len() {
+                let valid = pfa.valid_next(&w[..i]).expect("prefix valid");
+                assert!(valid.contains(&w[i]), "walk emitted invalid symbol");
+            }
+        }
+    }
+
+    #[test]
+    fn accept_sets_contain_targets() {
+        let mut g = RegBench::new(7);
+        let b = g.sample(4, 64);
+        let acc = b.accept.as_ref().unwrap();
+        let mut checked = 0;
+        for bi in 0..4 {
+            for pos in 0..64 {
+                let i = bi * 64 + pos;
+                if b.mask[i] > 0.0 {
+                    let target = b.token(bi, pos + 1);
+                    assert!(acc[i].contains(&target),
+                            "target must always be acceptable");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 20);
+    }
+
+    #[test]
+    fn different_sequences_use_different_pfas() {
+        // (statistically) two rows shouldn't have identical token streams
+        let mut g = RegBench::new(3);
+        let b = g.sample(2, 64);
+        let row0: Vec<i32> = (0..65).map(|p| b.token(0, p)).collect();
+        let row1: Vec<i32> = (0..65).map(|p| b.token(1, p)).collect();
+        assert_ne!(row0, row1);
+    }
+
+    #[test]
+    fn perfect_oracle_scores_100() {
+        // predictions = literal targets must score 100% under accept sets
+        let mut g = RegBench::new(5);
+        let b = g.sample(2, 48);
+        let mut preds = vec![0i32; 2 * 48];
+        for bi in 0..2 {
+            for pos in 0..48 {
+                preds[bi * 48 + pos] = b.token(bi, pos + 1);
+            }
+        }
+        let (c, t) = b.score_preds(&preds);
+        assert_eq!(c, t);
+        assert!(t > 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Tokenization: byte-level base + a mini BPE trainer.
+//!
+//! The paper uses the Mistral tokenizer over SlimPajama; offline we provide
+//! the same *interface*: train a BPE vocabulary on a corpus, encode text to
+//! ids, decode ids to text, round-trip exactly.  Used by the text path of
+//! the data tools and exercised heavily in tests; the synthetic Markov
+//! corpus path bypasses it (already token ids).
+
+use std::collections::HashMap;
+
+/// Byte-pair-encoding tokenizer over raw bytes.
+///
+/// Vocabulary layout: ids 0..256 are the raw bytes; ids 256.. are merges in
+/// creation order.  Encoding applies merges greedily in rank order (the
+/// standard BPE inference rule).
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge list: (left id, right id) → new id = 256 + index
+    merges: Vec<(u32, u32)>,
+    rank: HashMap<(u32, u32), u32>,
+}
+
+impl Bpe {
+    /// Byte-level tokenizer with no merges (vocab = 256).
+    pub fn byte_level() -> Self {
+        Bpe { merges: vec![], rank: HashMap::new() }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Train `n_merges` BPE merges on a corpus.
+    pub fn train(corpus: &str, n_merges: usize) -> Self {
+        let mut ids: Vec<u32> = corpus.bytes().map(|b| b as u32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut rank = HashMap::new();
+        for step in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else { break };
+            if cnt < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = 256 + step as u32;
+            merges.push(pair);
+            rank.insert(pair, step as u32);
+            // apply the merge
+            ids = merge_pass(&ids, pair, new_id);
+        }
+        Bpe { merges, rank }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None; // (rank, pos)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&r) = self.rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((r, _)) = best else { break };
+            let pair = self.merges[r as usize];
+            ids = merge_pass(&ids, pair, 256 + r);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        bytes
+    }
+
+    pub fn decode_string(&self, ids: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode(ids)).into_owned()
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+}
+
+fn merge_pass(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SAMPLE_TEXT;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Bpe::byte_level();
+        let ids = t.encode(SAMPLE_TEXT);
+        assert_eq!(ids.len(), SAMPLE_TEXT.len());
+        assert_eq!(t.decode_string(&ids), SAMPLE_TEXT);
+    }
+
+    #[test]
+    fn trained_bpe_roundtrip_and_compresses() {
+        let t = Bpe::train(SAMPLE_TEXT, 100);
+        assert!(t.vocab_size() > 256);
+        let ids = t.encode(SAMPLE_TEXT);
+        assert!(ids.len() < SAMPLE_TEXT.len(), "merges should compress");
+        assert_eq!(t.decode_string(&ids), SAMPLE_TEXT);
+    }
+
+    #[test]
+    fn roundtrip_on_unseen_text() {
+        let t = Bpe::train(SAMPLE_TEXT, 60);
+        let unseen = "Chunkwise parallel training of the delta rule!";
+        assert_eq!(t.decode_string(&t.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Bpe::train(SAMPLE_TEXT, 30);
+        let s = "naïve façade — ∆-rule ≠ additive";
+        assert_eq!(t.decode(&t.encode(s)), s.as_bytes());
+    }
+
+    #[test]
+    fn merge_pass_merges_all_occurrences() {
+        let ids = vec![1, 2, 1, 2, 3, 1, 2];
+        let out = merge_pass(&ids, (1, 2), 99);
+        assert_eq!(out, vec![99, 99, 3, 99]);
+    }
+
+    #[test]
+    fn training_deterministic() {
+        let a = Bpe::train(SAMPLE_TEXT, 50);
+        let b = Bpe::train(SAMPLE_TEXT, 50);
+        assert_eq!(a.encode(SAMPLE_TEXT), b.encode(SAMPLE_TEXT));
+    }
+}

@@ -1,0 +1,28 @@
+//! DeltaNet — parallelizing linear transformers with the delta rule over
+//! sequence length (Yang et al., NeurIPS 2024): Rust+JAX+Pallas three-layer
+//! reproduction.
+//!
+//! Layer 3 (this crate) is the coordinator: it owns the PJRT runtime that
+//! loads AOT-compiled HLO artifacts (`runtime`), the data pipeline and
+//! synthetic benchmark generators (`data`), the training/eval/serving
+//! orchestration (`coordinator`), the experiment harnesses that regenerate
+//! every table and figure of the paper (`repro`), and a pure-Rust reference
+//! implementation of the paper's algorithm used for cross-checking PJRT
+//! numerics and property-based testing (`reference`).
+//!
+//! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
+//! binary produced from this crate is self-contained at run time.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod reference;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenient result alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;

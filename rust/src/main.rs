@@ -1,0 +1,232 @@
+//! `deltanet` — the L3 coordinator CLI.
+//!
+//! Self-contained after `make artifacts`: loads AOT-compiled HLO artifacts
+//! via PJRT and never touches Python.
+//!
+//! ```text
+//! deltanet train      --artifact deltanet_tiny --task mqar --steps 300
+//! deltanet eval       --artifact deltanet_tiny --task mqar
+//! deltanet generate   --artifact deltanet_tiny --prompt 1,2,3 --max-new 16
+//! deltanet serve-demo --artifact deltanet_tiny --requests 32
+//! deltanet reproduce  fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|chunks|all
+//! deltanet inspect    [--artifact NAME]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use deltanet::config::{DataConfig, LrSchedule, RunConfig};
+use deltanet::coordinator::generate::Sampling;
+use deltanet::coordinator::server::GenRequest;
+use deltanet::coordinator::{DecodeEngine, ServeEngine, Trainer};
+use deltanet::data::batcher::Split;
+use deltanet::repro::{self, ReproOpts};
+use deltanet::runtime::Runtime;
+use deltanet::util::args::Args;
+
+const USAGE: &str = "\
+deltanet — DeltaNet (NeurIPS 2024) Rust+JAX+Pallas reproduction
+
+USAGE: deltanet <command> [--artifacts DIR] [options]
+
+COMMANDS:
+  train       --artifact NAME --task TASK --steps N [--seed S]
+              [--eval-every N] [--log PATH] [--checkpoint PATH]
+              [--resume PATH]
+  eval        --artifact NAME --task TASK [--batches N] [--checkpoint PATH]
+  generate    --artifact NAME --prompt 1,2,3 --max-new N [--temperature T]
+              [--checkpoint PATH]
+  serve-demo  --artifact NAME [--requests N] [--max-new N]
+  reproduce   fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|chunks|all
+              [--steps N] [--seed S] [--eval-batches N]
+  inspect     [--artifact NAME]
+
+TASKS: corpus | mqar | mqar:<pairs> | mad:<task> | regbench | recall:<style>
+  mad tasks: compress fuzzy_recall in_context_recall memorize noisy_recall
+             selective_copy
+  recall styles: swde squad fda";
+
+fn parse_task(task: &str, seed: u64) -> anyhow::Result<DataConfig> {
+    Ok(match task {
+        "corpus" => DataConfig::Corpus { seed },
+        "mqar" => DataConfig::Mqar { num_pairs: 8, seed },
+        "regbench" => DataConfig::RegBench { seed },
+        t if t.starts_with("mad:") =>
+            DataConfig::Mad { task: t[4..].to_string(), seed },
+        t if t.starts_with("recall:") =>
+            DataConfig::Recall { style: t[7..].to_string(), seed },
+        t if t.starts_with("mqar:") =>
+            DataConfig::Mqar { num_pairs: t[5..].parse()?, seed },
+        other => anyhow::bail!("unknown task {other:?}\n\n{USAGE}"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let runtime = Runtime::new(&artifacts).context("creating PJRT runtime")?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+
+    match cmd {
+        "train" => {
+            let artifact = args.get_or("artifact", "deltanet_tiny");
+            let task = args.get_or("task", "corpus");
+            let steps: usize = args.get_parse("steps", 300)?;
+            let data = parse_task(&task, seed)?;
+            let mut trainer = Trainer::new(&runtime, &artifact, seed)?;
+            if let Some(ckpt) = args.get("resume") {
+                trainer.load_checkpoint(std::path::Path::new(ckpt))?;
+                println!("resumed from {ckpt}");
+            }
+            println!("training {artifact} on {task}: {} params, {}x{} batch",
+                     trainer.param_count(), trainer.batch, trainer.seq_len);
+            let cfg = RunConfig {
+                artifact: artifact.clone(),
+                artifacts_dir: artifacts.clone(),
+                steps,
+                seed,
+                lr: LrSchedule::paper_default(steps),
+                data: data.clone(),
+                eval_every: args.get_parse("eval-every", 0)?,
+                eval_batches: 8,
+                log_path: args.get("log").map(PathBuf::from),
+                checkpoint_path: args.get("checkpoint").map(PathBuf::from),
+            };
+            let split = Split::from_config(&data);
+            let mut train_task = split.train;
+            let mut eval_task = split.eval;
+            let report = trainer.train(&cfg, train_task.as_mut(),
+                                       Some(eval_task.as_mut()))?;
+            println!("loss {:.4} -> {:.4} | {:.0} tok/s | {:.1}s",
+                     report.first_loss, report.final_loss,
+                     report.tokens_per_sec, report.elapsed_secs);
+            for (step, e) in &report.evals {
+                println!("  eval@{step}: ppl {:.3} acc {:.1}%",
+                         e.ppl, 100.0 * e.accuracy);
+            }
+        }
+        "eval" => {
+            let artifact = args.get_or("artifact", "deltanet_tiny");
+            let task = args.get_or("task", "corpus");
+            let data = parse_task(&task, seed)?;
+            let mut trainer = Trainer::new(&runtime, &artifact, seed)?;
+            if let Some(ckpt) = args.get("checkpoint") {
+                trainer.load_checkpoint(std::path::Path::new(ckpt))?;
+            }
+            let mut task_gen = deltanet::data::build_task(&data);
+            let batches: usize = args.get_parse("batches", 8)?;
+            let e = trainer.evaluate(task_gen.as_mut(), batches)?;
+            println!("{artifact} on {task}: nll {:.4} ppl {:.3} acc {:.1}%",
+                     e.nll, e.ppl, 100.0 * e.accuracy);
+        }
+        "generate" => {
+            let artifact = args.get_or("artifact", "deltanet_tiny");
+            let mut engine = DecodeEngine::new(&runtime, &artifact, 0)?;
+            if let Some(ckpt) = args.get("checkpoint") {
+                let mut t = Trainer::new(&runtime, &artifact, 0)?;
+                t.load_checkpoint(std::path::Path::new(ckpt))?;
+                engine.set_params(&t.param_literals()?)?;
+            }
+            let prompt: Vec<i32> = args.get_or("prompt", "1,2,3").split(',')
+                .map(|s| s.trim().parse::<i32>().context("prompt token"))
+                .collect::<anyhow::Result<_>>()?;
+            let temperature: f32 = args.get_parse("temperature", 0.0)?;
+            let max_new: usize = args.get_parse("max-new", 16)?;
+            let sampling = if temperature > 0.0 {
+                Sampling::TopK { temperature, k: 0 }
+            } else {
+                Sampling::Greedy
+            };
+            let out = engine.generate(&[prompt.clone()], max_new,
+                                      sampling, seed)?;
+            println!("prompt: {prompt:?}");
+            println!("generated: {:?}", out[0]);
+        }
+        "serve-demo" => {
+            let artifact = args.get_or("artifact", "deltanet_tiny");
+            let requests: usize = args.get_parse("requests", 32)?;
+            let max_new: usize = args.get_parse("max-new", 16)?;
+            // vocab from the manifest (the engine itself is built inside
+            // the serving thread — PJRT handles are not Send)
+            let man = deltanet::runtime::Manifest::load(
+                &artifacts.join(format!("{artifact}.decode.manifest.json")))?;
+            let vocab = man.config.as_ref()
+                .map(|c| c.vocab_size as i32)
+                .context("decode manifest missing config")?;
+            let dir = artifacts.clone();
+            let art2 = artifact.clone();
+            let serve = ServeEngine::spawn(
+                move || {
+                    let rt = Runtime::new(&dir)?;
+                    DecodeEngine::new(&rt, &art2, 0)
+                },
+                Sampling::Greedy,
+                std::time::Duration::from_millis(5));
+            let tickets: Vec<_> = (0..requests)
+                .map(|i| {
+                    let prompt: Vec<i32> = (0..4 + (i % 5))
+                        .map(|j| ((i + j) as i32) % vocab)
+                        .collect();
+                    serve.submit(GenRequest { prompt, max_new })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let mut ok = 0;
+            for t in tickets {
+                let resp = t.wait()?;
+                anyhow::ensure!(resp.tokens.len() <= max_new);
+                ok += 1;
+            }
+            let st = serve.shutdown();
+            println!("served {ok}/{requests} requests in {} batches \
+                      (mean occupancy {:.1})",
+                     st.batches, st.mean_batch_occupancy());
+            println!("mean latency {:.1} ms | decode throughput {:.0} tok/s",
+                     st.mean_latency_ms(), st.tokens_per_sec());
+        }
+        "reproduce" => {
+            let which = args.positional.get(1)
+                .map(|s| s.as_str()).unwrap_or("all");
+            let opts = ReproOpts {
+                steps: args.get_parse("steps", 300)?,
+                seed,
+                eval_batches: args.get_parse("eval-batches", 8)?,
+                lr_peak: args.get_parse("lr-peak", 1e-3)?,
+            };
+            if which == "chunks" {
+                repro::fig1::chunk_sweep(&runtime, &opts)?;
+            } else {
+                repro::run(&runtime, which, &opts)?;
+            }
+        }
+        "inspect" => match args.get("artifact") {
+            Some(name) => {
+                let exe = runtime.load(name)?;
+                let m = &exe.manifest;
+                println!("{} ({}): {} inputs, {} outputs, {} params, \
+                          batch {} × seq {} | compile {:.2}s",
+                         m.name, m.kind, m.inputs.len(), m.outputs.len(),
+                         m.param_count(), m.batch, m.seq_len,
+                         exe.compile_time.as_secs_f64());
+                if let Some(cfg) = &m.config {
+                    println!("  arch={} d={} layers={} heads={} chunk={}",
+                             cfg.arch, cfg.d_model, cfg.n_layers,
+                             cfg.n_heads, cfg.chunk_size);
+                }
+            }
+            None => {
+                for name in runtime.list_artifacts()? {
+                    println!("{name}");
+                }
+            }
+        },
+        other => {
+            anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}

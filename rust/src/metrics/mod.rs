@@ -1,0 +1,197 @@
+//! Run metrics: throughput meters, loss tracking, JSONL run logs.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Exponentially-weighted moving average.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Tokens/sec + step-time meter.
+pub struct Throughput {
+    started: Instant,
+    tokens: u64,
+    steps: u64,
+    step_time: Ewma,
+    last_step: Option<Instant>,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput {
+            started: Instant::now(),
+            tokens: 0,
+            steps: 0,
+            step_time: Ewma::new(0.1),
+            last_step: None,
+        }
+    }
+
+    pub fn record_step(&mut self, tokens: usize) {
+        let now = Instant::now();
+        if let Some(last) = self.last_step {
+            self.step_time.update(now.duration_since(last).as_secs_f64());
+        }
+        self.last_step = Some(now);
+        self.tokens += tokens as u64;
+        self.steps += 1;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn avg_step_time(&self) -> Option<f64> {
+        self.step_time.get()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// One JSONL record of a training run.
+#[derive(Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f64,
+    pub tokens_per_sec: f64,
+    pub elapsed_secs: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            ("lr", Json::num(self.lr)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("elapsed_secs", Json::num(self.elapsed_secs)),
+        ])
+    }
+}
+
+/// Append-only JSONL logger (None path = in-memory only).
+pub struct RunLog {
+    file: Option<std::fs::File>,
+    pub records: Vec<StepRecord>,
+}
+
+impl RunLog {
+    pub fn new(path: Option<&Path>) -> crate::Result<Self> {
+        let file = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(std::fs::File::create(p)?)
+            }
+            None => None,
+        };
+        Ok(RunLog { file, records: vec![] })
+    }
+
+    pub fn log(&mut self, rec: StepRecord) -> crate::Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", rec.to_json().render())?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Mean loss of the last `n` records (loss-curve summaries).
+    pub fn recent_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..20 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.record_step(100);
+        t.record_step(100);
+        assert_eq!(t.steps(), 2);
+        assert!(t.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn runlog_writes_jsonl() {
+        let dir = std::env::temp_dir().join("deltanet_test_log");
+        let path = dir.join("run.jsonl");
+        let mut log = RunLog::new(Some(&path)).unwrap();
+        log.log(StepRecord {
+            step: 1, loss: 2.5, lr: 1e-4,
+            tokens_per_sec: 10.0, elapsed_secs: 0.1,
+        }).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"loss\":2.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recent_loss_window() {
+        let mut log = RunLog::new(None).unwrap();
+        for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            log.log(StepRecord {
+                step: i, loss: *l, lr: 0.0,
+                tokens_per_sec: 0.0, elapsed_secs: 0.0,
+            }).unwrap();
+        }
+        assert_eq!(log.recent_loss(2), Some(1.5));
+        assert_eq!(log.recent_loss(100), Some(2.5));
+    }
+}

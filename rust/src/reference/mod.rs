@@ -1,0 +1,322 @@
+//! Pure-Rust reference implementation of the paper's algorithms.
+//!
+//! Three jobs:
+//!   1. cross-check PJRT numerics (integration tests execute the AOT kernel
+//!      artifacts and compare against this implementation);
+//!   2. proptest target for the WY-representation invariants (chunkwise ≡
+//!      recurrent, eigenvalue bounds, state chaining);
+//!   3. host-side baseline for the Figure-1 style speed comparison
+//!      (recurrent vs chunkwise work profile on the CPU).
+//!
+//! Layout matches the Python side: state S ∈ R^{d_k×d_v} (row convention),
+//! o_t = q_t S,  S_t = (I − β_t k_t k_tᵀ) S_{t-1} + β_t k_t v_tᵀ.
+
+use crate::tensor::{axpy, dot, Mat};
+
+/// Output of a sequence-level forward: per-token outputs + final state.
+pub struct Forward {
+    pub o: Mat,
+    pub state: Mat,
+}
+
+/// Token-by-token delta-rule recurrence (DeltaNet, Schlag et al. 2021).
+/// q,k: [L,dk], v: [L,dv], beta: [L].  O(L·dk·dv) work, O(L) steps.
+pub fn delta_recurrent(q: &Mat, k: &Mat, v: &Mat, beta: &[f32],
+                       initial_state: Option<&Mat>) -> Forward {
+    let (l, dk) = (q.rows, q.cols);
+    let dv = v.cols;
+    assert_eq!(k.rows, l);
+    assert_eq!(beta.len(), l);
+    let mut s = initial_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
+    let mut o = Mat::zeros(l, dv);
+    let mut v_old = vec![0.0f32; dv];
+    for t in 0..l {
+        let kt = k.row(t);
+        // v_old = kᵀ S
+        for j in 0..dv {
+            v_old[j] = 0.0;
+        }
+        for i in 0..dk {
+            let ki = kt[i];
+            if ki != 0.0 {
+                axpy(&mut v_old, ki, s.row(i));
+            }
+        }
+        // S += β k (v − v_old)ᵀ
+        let b = beta[t];
+        let vt = v.row(t);
+        for i in 0..dk {
+            let c = b * kt[i];
+            if c != 0.0 {
+                let srow = s.row_mut(i);
+                for j in 0..dv {
+                    srow[j] += c * (vt[j] - v_old[j]);
+                }
+            }
+        }
+        // o = q S
+        let qt = q.row(t);
+        let orow = o.row_mut(t);
+        for i in 0..dk {
+            let qi = qt[i];
+            if qi != 0.0 {
+                axpy(orow, qi, s.row(i));
+            }
+        }
+    }
+    Forward { o, state: s }
+}
+
+/// UT transform for one chunk (Eq. 10–11, Listing-1 sign convention):
+/// returns (W, U) with T = (I + tril(diag(β)KKᵀ, −1))⁻¹ diag(β).
+pub fn ut_transform(k: &Mat, v: &Mat, beta: &[f32]) -> (Mat, Mat) {
+    let c = k.rows;
+    // A = tril(diag(β) K Kᵀ, −1)
+    let mut a = Mat::zeros(c, c);
+    for i in 0..c {
+        for j in 0..i {
+            a[(i, j)] = beta[i] * dot(k.row(i), k.row(j));
+        }
+    }
+    // T = (I + A)⁻¹ by forward substitution (unit lower triangular):
+    // row i of T = e_i − Σ_{j<i} A[i,j]·T[j,:]
+    let t = tri_inv_unit_lower(&a);
+    // W = T diag(β) K, U = T diag(β) V
+    let mut kb = k.clone();
+    let mut vb = v.clone();
+    for i in 0..c {
+        for x in kb.row_mut(i) {
+            *x *= beta[i];
+        }
+        for x in vb.row_mut(i) {
+            *x *= beta[i];
+        }
+    }
+    (t.matmul(&kb), t.matmul(&vb))
+}
+
+/// Chunkwise-parallel DeltaNet forward (the paper's algorithm, Eq. 8–9).
+/// Exactly the computation the Pallas kernel performs, on the host.
+pub fn delta_chunkwise(q: &Mat, k: &Mat, v: &Mat, beta: &[f32],
+                       chunk: usize, initial_state: Option<&Mat>) -> Forward {
+    let (l, dk) = (q.rows, q.cols);
+    let dv = v.cols;
+    assert!(l % chunk == 0, "L={l} % C={chunk} != 0");
+    let mut s = initial_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
+    let mut o = Mat::zeros(l, dv);
+
+    for t0 in (0..l).step_by(chunk) {
+        let qc = slice_rows(q, t0, chunk);
+        let kc = slice_rows(k, t0, chunk);
+        let vc = slice_rows(v, t0, chunk);
+        let bc = &beta[t0..t0 + chunk];
+        let (w, u) = ut_transform(&kc, &vc, bc);
+        // U̅ = U − W S
+        let u_bar = u.sub(&w.matmul(&s));
+        // O = Q S + tril(Q Kᵀ) U̅
+        let attn = qc.matmul(&kc.transpose()).tril(0);
+        let oc = qc.matmul(&s).add(&attn.matmul(&u_bar));
+        for (i, row) in (t0..t0 + chunk).enumerate() {
+            o.row_mut(row).copy_from_slice(oc.row(i));
+        }
+        // S += Kᵀ U̅
+        s = s.add(&kc.transpose().matmul(&u_bar));
+    }
+    Forward { o, state: s }
+}
+
+/// Vanilla linear attention, recurrent (baseline in the family table).
+pub fn linear_attn_recurrent(q: &Mat, k: &Mat, v: &Mat) -> Forward {
+    let (l, dk) = (q.rows, q.cols);
+    let dv = v.cols;
+    let mut s = Mat::zeros(dk, dv);
+    let mut o = Mat::zeros(l, dv);
+    for t in 0..l {
+        let kt = k.row(t);
+        let vt = v.row(t);
+        for i in 0..dk {
+            let ki = kt[i];
+            if ki != 0.0 {
+                axpy(s.row_mut(i), ki, vt);
+            }
+        }
+        let qt = q.row(t);
+        let orow = o.row_mut(t);
+        for i in 0..dk {
+            axpy(orow, qt[i], s.row(i));
+        }
+    }
+    Forward { o, state: s }
+}
+
+/// The delta-rule "attention matrix" of the fully-parallel form (§3.2):
+/// A = (QKᵀ ⊙ M)(I + tril(diag(β)KKᵀ,−1))⁻¹ diag(β) — O(L³), for
+/// interpretability tooling and tests.
+pub fn delta_attention_matrix(q: &Mat, k: &Mat, beta: &[f32]) -> Mat {
+    let l = q.rows;
+    let mut a = Mat::zeros(l, l);
+    for i in 0..l {
+        for j in 0..i {
+            a[(i, j)] = beta[i] * dot(k.row(i), k.row(j));
+        }
+    }
+    let mut tm = tri_inv_unit_lower(&a);
+    // T·diag(β): scale columns by β
+    for i in 0..l {
+        for j in 0..l {
+            tm[(i, j)] *= beta[j];
+        }
+    }
+    q.matmul(&k.transpose()).tril(0).matmul(&tm)
+}
+
+/// (I + A)⁻¹ for strictly-lower-triangular A, by forward substitution:
+/// row i of the inverse = e_i − Σ_{j<i} A[i,j] · row j.
+pub fn tri_inv_unit_lower(a: &Mat) -> Mat {
+    let c = a.rows;
+    let mut t = Mat::eye(c);
+    for i in 0..c {
+        for j in 0..i {
+            let aij = a[(i, j)];
+            if aij != 0.0 {
+                let tj = t.row(j).to_vec();
+                let ti = t.row_mut(i);
+                for m in 0..c {
+                    ti[m] -= aij * tj[m];
+                }
+            }
+        }
+    }
+    t
+}
+
+fn slice_rows(m: &Mat, start: usize, n: usize) -> Mat {
+    Mat {
+        rows: n,
+        cols: m.cols,
+        data: m.data[start * m.cols..(start + n) * m.cols].to_vec(),
+    }
+}
+
+/// Convenience: generate a random (q, k, v, β) problem with L2-normalized
+/// keys — the regime the model layer produces.
+pub fn random_problem(l: usize, dk: usize, dv: usize, seed: u64)
+                      -> (Mat, Mat, Mat, Vec<f32>) {
+    let mut rng = crate::tensor::rng::Rng::new(seed);
+    let q = Mat::random(l, dk, &mut rng, 1.0);
+    let mut k = Mat::random(l, dk, &mut rng, 1.0);
+    for i in 0..l {
+        crate::tensor::l2_normalize(k.row_mut(i));
+    }
+    let v = Mat::random(l, dv, &mut rng, 1.0);
+    let beta: Vec<f32> = (0..l)
+        .map(|_| 1.0 / (1.0 + (-rng.normal()).exp()))
+        .collect();
+    (q, k, v, beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunkwise_equals_recurrent() {
+        let (q, k, v, beta) = random_problem(64, 16, 16, 7);
+        let a = delta_recurrent(&q, &k, &v, &beta, None);
+        for chunk in [1, 4, 16, 64] {
+            let b = delta_chunkwise(&q, &k, &v, &beta, chunk, None);
+            assert!(b.o.allclose(&a.o, 1e-4, 1e-4), "chunk={chunk}");
+            assert!(b.state.allclose(&a.state, 1e-4, 1e-4), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn state_chaining() {
+        let (q, k, v, beta) = random_problem(32, 8, 8, 9);
+        let full = delta_chunkwise(&q, &k, &v, &beta, 8, None);
+        let h1 = delta_chunkwise(&slice_rows(&q, 0, 16), &slice_rows(&k, 0, 16),
+                                 &slice_rows(&v, 0, 16), &beta[..16], 8, None);
+        let h2 = delta_chunkwise(&slice_rows(&q, 16, 16),
+                                 &slice_rows(&k, 16, 16),
+                                 &slice_rows(&v, 16, 16), &beta[16..], 8,
+                                 Some(&h1.state));
+        assert!(h2.state.allclose(&full.state, 1e-4, 1e-4));
+        for i in 0..16 {
+            assert_eq!(full.o.row(16 + i).len(), h2.o.row(i).len());
+            for (a, b) in full.o.row(16 + i).iter().zip(h2.o.row(i)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_one_overwrites_association() {
+        // write v1 under key e0 with β=1, then v2 under e0: retrieval gives v2
+        let dk = 4;
+        let mut k = Mat::zeros(2, dk);
+        k[(0, 0)] = 1.0;
+        k[(1, 0)] = 1.0;
+        let mut v = Mat::zeros(2, 3);
+        v.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        v.row_mut(1).copy_from_slice(&[-1.0, -2.0, -3.0]);
+        let q = k.clone();
+        let f = delta_recurrent(&q, &k, &v, &[1.0, 1.0], None);
+        assert_eq!(f.o.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(f.o.row(1), &[-1.0, -2.0, -3.0]);
+    }
+
+    #[test]
+    fn attention_matrix_reproduces_output() {
+        let (q, k, v, beta) = random_problem(24, 8, 8, 11);
+        let f = delta_recurrent(&q, &k, &v, &beta, None);
+        let a = delta_attention_matrix(&q, &k, &beta);
+        let o2 = a.matmul(&v);
+        assert!(o2.allclose(&f.o, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn ut_transform_matches_recurrence() {
+        // w_r = β_r(k_r − Σ_{i<r}(k_iᵀk_r) w_i) — Eq. 7
+        let (_, k, v, beta) = random_problem(12, 6, 6, 13);
+        let (w, u) = ut_transform(&k, &v, &beta);
+        let mut w_seq = Mat::zeros(12, 6);
+        let mut u_seq = Mat::zeros(12, 6);
+        for r in 0..12 {
+            let mut cw = vec![0.0; 6];
+            let mut cu = vec![0.0; 6];
+            for i in 0..r {
+                let kk = dot(k.row(i), k.row(r));
+                axpy(&mut cw, kk, w_seq.row(i));
+                axpy(&mut cu, kk, u_seq.row(i));
+            }
+            for j in 0..6 {
+                w_seq[(r, j)] = beta[r] * (k[(r, j)] - cw[j]);
+                u_seq[(r, j)] = beta[r] * (v[(r, j)] - cu[j]);
+            }
+        }
+        assert!(w.allclose(&w_seq, 1e-4, 1e-4));
+        assert!(u.allclose(&u_seq, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn linear_attention_is_prefix_sum() {
+        let (q, k, v, _) = random_problem(16, 4, 4, 17);
+        let f = linear_attn_recurrent(&q, &k, &v);
+        // o_t = q_t (Σ_{i≤t} k_i v_iᵀ)
+        let mut s = Mat::zeros(4, 4);
+        for t in 0..16 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    s[(i, j)] += k[(t, i)] * v[(t, j)];
+                }
+            }
+            let mut want = vec![0.0; 4];
+            for i in 0..4 {
+                axpy(&mut want, q[(t, i)], s.row(i));
+            }
+            for (a, b) in f.o.row(t).iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Figure 1 — speed-up of the chunkwise-parallel form over the recurrent
+//! form, across sequence length L and head dimension d (B·L fixed at 4096
+//! tokens, as the paper fixes batch×length).
+//!
+//! Both forms were AOT-lowered from the same Pallas kernels and run through
+//! the same PJRT pipeline, so the comparison isolates exactly what the
+//! paper isolates: O(L) sequential rank-1 steps vs O(L/C) matmul-dense
+//! steps.  The expected *shape*: speedup grows with L and with d.
+
+use std::time::Instant;
+
+use crate::eval::Table;
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::rng::Rng;
+
+use super::ReproOpts;
+
+const LS: [usize; 5] = [256, 512, 1024, 2048, 4096];
+const DS: [usize; 2] = [32, 64];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        "Figure 1: chunkwise-parallel vs recurrent DeltaNet forward \
+         (B·L = 4096 tokens, C = 64)",
+        &["L", "d_head", "recurrent_ms", "chunkwise_ms", "speedup"]);
+
+    for &d in &DS {
+        for &l in &LS {
+            let b = 4096 / l;
+            let rec = time_kernel(runtime, "recurrent", l, d, 64, b, opts)?;
+            let chk = time_kernel(runtime, "chunkwise", l, d, 64, b, opts)?;
+            table.row(vec![
+                l.to_string(),
+                d.to_string(),
+                format!("{:.1}", rec * 1e3),
+                format!("{:.1}", chk * 1e3),
+                format!("{:.1}x", rec / chk),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Median-of-N wall time for one kernel artifact execution (seconds).
+pub fn time_kernel(runtime: &Runtime, form: &str, l: usize, d: usize,
+                   c: usize, b: usize, opts: &ReproOpts)
+                   -> crate::Result<f64> {
+    let name = format!("kernel_{form}_L{l}_d{d}_C{c}_B{b}");
+    let exe = runtime.load(&name)?;
+    let mut rng = Rng::new(opts.seed);
+    let mk = |rng: &mut Rng, shape: &[usize]| -> crate::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        HostValue::from_f32(shape, data)?.to_literal()
+    };
+    let args = vec![
+        mk(&mut rng, &[b, l, d])?,
+        mk(&mut rng, &[b, l, d])?,
+        mk(&mut rng, &[b, l, d])?,
+        // β in (0,1)
+        {
+            let data: Vec<f32> = (0..b * l)
+                .map(|_| 1.0 / (1.0 + (-rng.normal()).exp()))
+                .collect();
+            HostValue::from_f32(&[b, l], data)?.to_literal()?
+        },
+    ];
+    // warmup
+    exe.execute(&args)?;
+    let reps = 5usize;
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| -> crate::Result<f64> {
+            let t0 = Instant::now();
+            exe.execute(&args)?;
+            Ok(t0.elapsed().as_secs_f64())
+        })
+        .collect::<crate::Result<_>>()?;
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(times[reps / 2])
+}
+
+/// Chunk-size sweep used by the perf study (EXPERIMENTS.md §Perf).
+pub fn chunk_sweep(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        "Chunk-size ablation: chunkwise kernel, L=1024, d=64, B=4",
+        &["C", "ms", "vs C=64"]);
+    let base = time_kernel(runtime, "chunkwise", 1024, 64, 64, 4, opts)?;
+    for c in [16, 32, 64, 128] {
+        let t = time_kernel(runtime, "chunkwise", 1024, 64, c, 4, opts)?;
+        table.row(vec![
+            c.to_string(),
+            format!("{:.1}", t * 1e3),
+            format!("{:.2}x", t / base),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

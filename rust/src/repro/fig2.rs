@@ -1,0 +1,36 @@
+//! Figure 2 — MQAR (multi-query associative recall) accuracy.
+//!
+//! The paper's grid: model dim × kv-pairs, DeltaNet vs Mamba vs others.
+//! Here: kv-pairs ∈ {4, 8, 16} × the four architecture families with tiny
+//! artifacts.  Expected shape: DeltaNet ≈ attention ≫ decay-based linear
+//! models as the number of pairs approaches state capacity.
+
+use crate::config::DataConfig;
+use crate::eval::{pct, Table};
+use crate::runtime::Runtime;
+
+use super::{tiny_artifact, train_cell, ReproOpts};
+
+pub const ARCHS: [&str; 4] = ["deltanet", "gla", "mamba2", "transformer"];
+pub const PAIRS: [usize; 3] = [4, 8, 16];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        &format!("Figure 2: MQAR accuracy (%) after {} steps", opts.steps),
+        &["model", "4 pairs", "8 pairs", "16 pairs"]);
+
+    for arch in ARCHS {
+        let mut cells = vec![arch.to_string()];
+        for pairs in PAIRS {
+            let (outcome, _) = train_cell(
+                runtime,
+                &tiny_artifact(arch),
+                DataConfig::Mqar { num_pairs: pairs, seed: opts.seed },
+                opts)?;
+            cells.push(pct(outcome.accuracy));
+        }
+        table.row(cells);
+    }
+    table.print();
+    Ok(())
+}

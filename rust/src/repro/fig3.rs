@@ -1,0 +1,33 @@
+//! Figure 3 — RegBench: in-context language learning over random PFAs.
+//!
+//! Accuracy counts a prediction correct when it is ANY valid next symbol
+//! under the sequence's PFA (the benchmark's scoring rule) — wired through
+//! Batch::accept.  Expected shape: DeltaNet and attention adapt to the
+//! held-out languages; pure-decay models trail.
+
+use crate::config::DataConfig;
+use crate::eval::{pct, Table};
+use crate::runtime::Runtime;
+
+use super::{tiny_artifact, train_cell, ReproOpts};
+
+pub const ARCHS: [&str; 5] = ["deltanet", "gla", "mamba2", "retnet",
+                              "transformer"];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        &format!("Figure 3: RegBench accuracy (%) after {} steps \
+                  (held-out PFAs)", opts.steps),
+        &["model", "accuracy"]);
+
+    for arch in ARCHS {
+        let (outcome, _) = train_cell(
+            runtime,
+            &tiny_artifact(arch),
+            DataConfig::RegBench { seed: opts.seed },
+            opts)?;
+        table.row(vec![arch.to_string(), pct(outcome.accuracy)]);
+    }
+    table.print();
+    Ok(())
+}

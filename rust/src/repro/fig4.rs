@@ -1,0 +1,70 @@
+//! Figure 4 — training throughput (tokens/sec) per architecture.
+//!
+//! The paper sweeps (seq-len, batch) at fixed tokens-per-batch on one H100.
+//! Here: tiny and small presets on the CPU PJRT backend, measuring the full
+//! train-step wall time (fwd + bwd + AdamW + host I/O — the honest number a
+//! user gets).  Expected shape: linear-time models hold throughput as L
+//! grows while the transformer degrades; DeltaNet lands between GLA and
+//! attention (the paper's §5.3 overhead discussion).
+
+use crate::config::DataConfig;
+use crate::data::build_task;
+use crate::eval::Table;
+use crate::runtime::Runtime;
+
+use super::ReproOpts;
+
+pub const TINY_ARCHS: [&str; 6] = ["transformer", "retnet", "mamba2", "gla",
+                                   "linattn", "deltanet"];
+pub const SMALL_ARCHS: [&str; 4] = ["transformer", "gla", "mamba2",
+                                    "deltanet"];
+
+pub const LONG_ARCHS: [&str; 3] = ["transformer", "gla", "deltanet"];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let steps = opts.steps.clamp(5, 30); // throughput needs few steps
+    let mut table = Table::new(
+        &format!("Figure 4: training throughput, tokens/sec \
+                  (median over {steps} steps)"),
+        &["model", "tiny (L=64)", "small (L=128)", "long (L=1024)"]);
+
+    for arch in TINY_ARCHS {
+        let tiny = measure(runtime, &format!("{arch}_tiny"), steps, opts)?;
+        let opt_col = |preset: &str, allowed: bool| {
+            if !allowed {
+                return "-".to_string();
+            }
+            measure(runtime, &format!("{arch}_{preset}"), steps, opts)
+                .map(|t| format!("{t:.0}"))
+                .unwrap_or_else(|_| "-".into())
+        };
+        let small = opt_col("small", SMALL_ARCHS.contains(&arch));
+        let long = opt_col("long", LONG_ARCHS.contains(&arch));
+        table.row(vec![arch.to_string(), format!("{tiny:.0}"), small, long]);
+    }
+    table.print();
+    println!("the paper's crossover: at L=1024 the O(L²) transformer \
+              falls behind the linear-time mixers.");
+    Ok(())
+}
+
+/// Median tokens/sec over `steps` train steps.
+pub fn measure(runtime: &Runtime, artifact: &str, steps: usize,
+               opts: &ReproOpts) -> crate::Result<f64> {
+    use crate::coordinator::Trainer;
+    let mut trainer = Trainer::new(runtime, artifact, opts.seed)?;
+    let mut task = build_task(&DataConfig::Corpus { seed: opts.seed });
+    let tokens = trainer.batch * trainer.seq_len;
+    // warmup (compile-cache fill + first-run allocation)
+    let b = task.sample(trainer.batch, trainer.seq_len);
+    trainer.train_step(&b, 1e-4)?;
+    let mut rates = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let b = task.sample(trainer.batch, trainer.seq_len);
+        let t0 = std::time::Instant::now();
+        trainer.train_step(&b, 1e-4)?;
+        rates.push(tokens as f64 / t0.elapsed().as_secs_f64());
+    }
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(rates[rates.len() / 2])
+}

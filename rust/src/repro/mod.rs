@@ -1,0 +1,112 @@
+//! Experiment harnesses: one per table/figure of the paper's evaluation.
+//!
+//! | harness | paper artifact | what it prints |
+//! |---------|----------------|----------------|
+//! | fig1    | Figure 1       | chunkwise vs recurrent kernel speedup grid |
+//! | fig2    | Figure 2       | MQAR accuracy across kv-pairs × archs |
+//! | tab1    | Table 1        | MAD: 6 synthetic tasks × archs |
+//! | fig3    | Figure 3       | RegBench in-context learning accuracy |
+//! | tab2    | Table 2        | LM ppl + recall-intensive task accuracy |
+//! | tab3    | Table 3        | zero-shot suite, 3 model families |
+//! | fig4    | Figure 4       | training throughput vs seq-len × archs |
+//! | ablate  | Table 2 (btm)  | feature-map / key-norm ablations |
+//!
+//! Numbers are produced on this testbed (CPU PJRT, tiny presets): the
+//! reproduction target is the *shape* — orderings, crossovers, rough
+//! factors — not the paper's absolute values (see DESIGN.md §Substitutions).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod tab1;
+pub mod tab2;
+pub mod tab3;
+
+use crate::config::{DataConfig, LrSchedule, RunConfig};
+use crate::coordinator::{EvalOutcome, Trainer};
+use crate::data::batcher::Split;
+use crate::runtime::Runtime;
+
+/// Options shared by all harnesses.
+#[derive(Debug, Clone)]
+pub struct ReproOpts {
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_batches: usize,
+    /// peak LR for the cosine schedule — tiny models train best around
+    /// 1e-3 (the paper's 3e-4 is tuned for 340M+)
+    pub lr_peak: f64,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts { steps: 300, seed: 0, eval_batches: 8, lr_peak: 1e-3 }
+    }
+}
+
+impl ReproOpts {
+    pub fn schedule(&self) -> LrSchedule {
+        LrSchedule::Cosine {
+            peak: self.lr_peak,
+            floor: self.lr_peak / 10.0,
+            warmup_steps: (self.steps / 30).max(1),
+            total_steps: self.steps,
+        }
+    }
+}
+
+/// Train `artifact` on `data` for `opts.steps` and return the final eval.
+/// The generic cell used by every accuracy table.
+pub fn train_cell(runtime: &Runtime, artifact: &str, data: DataConfig,
+                  opts: &ReproOpts) -> crate::Result<(EvalOutcome, f64)> {
+    let mut trainer = Trainer::new(runtime, artifact, opts.seed)?;
+    let split = Split::from_config(&data);
+    let mut train_task = split.train;
+    let mut eval_task = split.eval;
+    let cfg = RunConfig {
+        artifact: artifact.to_string(),
+        artifacts_dir: runtime.artifacts_dir().to_path_buf(),
+        steps: opts.steps,
+        seed: opts.seed,
+        lr: opts.schedule(),
+        data,
+        eval_every: 0,
+        eval_batches: opts.eval_batches,
+        log_path: None,
+        checkpoint_path: None,
+    };
+    let report = trainer.train(&cfg, train_task.as_mut(),
+                               Some(eval_task.as_mut()))?;
+    let (_, outcome) = *report.evals.last()
+        .ok_or_else(|| anyhow::anyhow!("no eval"))?;
+    Ok((outcome, report.tokens_per_sec))
+}
+
+/// Archs × artifact-name helper: which tiny artifacts exist for a family.
+pub fn tiny_artifact(arch: &str) -> String {
+    format!("{arch}_tiny")
+}
+
+/// Run a named harness.
+pub fn run(runtime: &Runtime, which: &str, opts: &ReproOpts) -> crate::Result<()> {
+    match which {
+        "fig1" => fig1::run(runtime, opts),
+        "fig2" => fig2::run(runtime, opts),
+        "fig3" => fig3::run(runtime, opts),
+        "fig4" => fig4::run(runtime, opts),
+        "tab1" => tab1::run(runtime, opts),
+        "tab2" => tab2::run(runtime, opts),
+        "tab3" => tab3::run(runtime, opts),
+        "ablate" => tab2::run_ablations(runtime, opts),
+        "all" => {
+            for w in ["fig1", "fig2", "tab1", "fig3", "tab2", "tab3",
+                      "fig4", "ablate"] {
+                run(runtime, w, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?} \
+            (fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|all)"),
+    }
+}

@@ -1,0 +1,130 @@
+//! Table 2 — the main language-modeling table: perplexity on the LM corpus
+//! plus the recall-intensive suite (SWDE / SQuAD / FDA analogs), across all
+//! architecture families and the two hybrids; plus the feature-map /
+//! key-norm ablation rows (paper Table 2, bottom block).
+//!
+//! Expected shape: all models reach similar ppl on the corpus (the paper's
+//! Wiki ppl gaps are small), while recall columns separate the families —
+//! DeltaNet > GLA/Mamba on recall, hybrids on top.
+
+use crate::config::DataConfig;
+use crate::eval::{f2, pct, Table};
+use crate::runtime::Runtime;
+
+use super::{tiny_artifact, train_cell, ReproOpts};
+
+pub const ARCHS: [&str; 8] = [
+    "transformer", "retnet", "mamba2", "gla", "linattn", "deltanet",
+    "hybrid_swa", "hybrid_global",
+];
+
+pub const RECALL_STYLES: [&str; 3] = ["swde", "squad", "fda"];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        &format!("Table 2: LM perplexity + recall-intensive accuracy (%) \
+                  after {} steps/task", opts.steps),
+        &["model", "corpus ppl", "swde", "squad", "fda", "recall avg"]);
+
+    for arch in ARCHS {
+        table.row(model_row(runtime, &tiny_artifact(arch), arch, opts)?);
+    }
+    table.print();
+    Ok(())
+}
+
+/// One table row: ppl on the corpus + accuracy per recall style.
+pub fn model_row(runtime: &Runtime, artifact: &str, label: &str,
+                 opts: &ReproOpts) -> crate::Result<Vec<String>> {
+    let (lm, _) = train_cell(
+        runtime, artifact,
+        DataConfig::Corpus { seed: opts.seed }, opts)?;
+    let mut cells = vec![label.to_string(), f2(lm.ppl)];
+    let mut sum = 0.0;
+    for style in RECALL_STYLES {
+        let (outcome, _) = train_cell(
+            runtime, artifact,
+            DataConfig::Recall { style: style.to_string(), seed: opts.seed },
+            opts)?;
+        sum += outcome.accuracy;
+        cells.push(pct(outcome.accuracy));
+    }
+    cells.push(pct(sum / RECALL_STYLES.len() as f64));
+    Ok(cells)
+}
+
+/// Paper Table 2 bottom block: DeltaNet feature-map / key-norm ablations.
+pub fn run_ablations(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        &format!("Table 2 (bottom): DeltaNet ablations after {} steps",
+                 opts.steps),
+        &["variant", "corpus ppl", "swde", "squad", "fda", "recall avg"]);
+
+    // (artifact, label); the default row is the standard deltanet artifact
+    let variants = [
+        ("deltanet_tiny".to_string(), "silu + L2 (default)"),
+        ("deltanet_abl_silu_l1_tiny".to_string(), "silu + L1"),
+        ("deltanet_abl_elu1_l2_tiny".to_string(), "1+elu + L2"),
+        ("deltanet_abl_elu1_l1_tiny".to_string(), "1+elu + L1"),
+        ("deltanet_abl_relu_l2_tiny".to_string(), "relu + L2"),
+    ];
+    for (artifact, label) in variants {
+        if !runtime.has_artifact(&format!("{artifact}.train")) {
+            eprintln!("(skipping {label}: artifact {artifact} not built)");
+            continue;
+        }
+        table.row(ablation_row(runtime, &artifact, label, opts)?);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Ablation artifacts have no .eval twin; train on the corpus and report
+/// the training-loss-derived ppl plus recall-task accuracy measured by
+/// training loss proxy.  For artifacts with an eval twin, defer to
+/// model_row.
+fn ablation_row(runtime: &Runtime, artifact: &str, label: &str,
+                opts: &ReproOpts) -> crate::Result<Vec<String>> {
+    if runtime.has_artifact(&format!("{artifact}.eval")) {
+        return model_row(runtime, artifact, label, opts);
+    }
+    use crate::config::{LrSchedule, RunConfig};
+    use crate::coordinator::Trainer;
+    use crate::data::build_task;
+
+    let mut cells = vec![label.to_string()];
+    // corpus ppl from final training loss (fresh stream each batch ⇒ an
+    // honest held-out estimate for ablation ranking)
+    let mut sums = vec![];
+    for data in [
+        DataConfig::Corpus { seed: opts.seed },
+        DataConfig::Recall { style: "swde".into(), seed: opts.seed },
+        DataConfig::Recall { style: "squad".into(), seed: opts.seed },
+        DataConfig::Recall { style: "fda".into(), seed: opts.seed },
+    ] {
+        let mut trainer = Trainer::new(runtime, artifact, opts.seed)?;
+        let mut task = build_task(&data);
+        let cfg = RunConfig {
+            artifact: artifact.to_string(),
+            artifacts_dir: runtime.artifacts_dir().to_path_buf(),
+            steps: opts.steps,
+            seed: opts.seed,
+            lr: LrSchedule::paper_default(opts.steps),
+            data,
+            eval_every: 0,
+            eval_batches: opts.eval_batches,
+            log_path: None,
+            checkpoint_path: None,
+        };
+        let report = trainer.train(&cfg, task.as_mut(), None)?;
+        sums.push(report.final_loss as f64);
+    }
+    cells.push(f2(sums[0].exp()));
+    for s in &sums[1..] {
+        // report exp(-loss) as a recall-quality proxy in (0,1]
+        cells.push(pct((-s).exp()));
+    }
+    let avg = sums[1..].iter().map(|s| (-s).exp()).sum::<f64>() / 3.0;
+    cells.push(pct(avg));
+    Ok(cells)
+}

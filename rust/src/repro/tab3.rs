@@ -1,0 +1,83 @@
+//! Table 3 — zero-shot suite at the "largest trained scale".
+//!
+//! The paper's Table 3 compares 3B models across six benchmarks.  At this
+//! testbed's scale the analog is: train the three families at the *small*
+//! preset (the largest default-built preset) on the LM corpus, then
+//! zero-shot them on the full task battery WITHOUT task-specific training
+//! — measuring how much task structure LM pretraining alone transfers,
+//! which is exactly what zero-shot columns measure.
+
+use crate::config::DataConfig;
+use crate::eval::{pct, Table};
+use crate::runtime::Runtime;
+
+use super::ReproOpts;
+
+pub const ARCHS: [&str; 3] = ["transformer", "mamba2", "deltanet"];
+
+pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
+    let mut table = Table::new(
+        &format!("Table 3: zero-shot task accuracy (%) after {} corpus \
+                  steps (small preset)", opts.steps),
+        &["model", "swde", "squad", "fda", "mqar", "average"]);
+
+    for arch in ARCHS {
+        let artifact = format!("{arch}_small");
+        if !runtime.has_artifact(&format!("{artifact}.train")) {
+            eprintln!("(skipping {arch}: {artifact} not built)");
+            continue;
+        }
+        table.row(zero_shot_row(runtime, &artifact, arch, opts)?);
+    }
+    table.print();
+    Ok(())
+}
+
+fn zero_shot_row(runtime: &Runtime, artifact: &str, label: &str,
+                 opts: &ReproOpts) -> crate::Result<Vec<String>> {
+    use crate::config::{LrSchedule, RunConfig};
+    use crate::coordinator::Trainer;
+    use crate::data::batcher::Split;
+
+    // 1. pretrain on the corpus only
+    let mut trainer = Trainer::new(runtime, artifact, opts.seed)?;
+    let corpus = DataConfig::Corpus { seed: opts.seed };
+    let split = Split::from_config(&corpus);
+    let mut train_task = split.train;
+    let cfg = RunConfig {
+        artifact: artifact.to_string(),
+        artifacts_dir: runtime.artifacts_dir().to_path_buf(),
+        steps: opts.steps,
+        seed: opts.seed,
+        lr: LrSchedule::paper_default(opts.steps),
+        data: corpus,
+        eval_every: 0,
+        eval_batches: opts.eval_batches,
+        log_path: None,
+        checkpoint_path: None,
+    };
+    trainer.train(&cfg, train_task.as_mut(), None)?;
+
+    // 2. zero-shot evaluate on the task battery
+    let mut cells = vec![label.to_string()];
+    let mut sum = 0.0;
+    let tasks = [
+        DataConfig::Recall { style: "swde".into(), seed: opts.seed ^ 1 },
+        DataConfig::Recall { style: "squad".into(), seed: opts.seed ^ 2 },
+        DataConfig::Recall { style: "fda".into(), seed: opts.seed ^ 3 },
+        DataConfig::Mqar { num_pairs: 8, seed: opts.seed ^ 4 },
+    ];
+    for t in tasks {
+        let mut task = crate::data::build_task(&t);
+        let outcome = trainer.evaluate(task.as_mut(), opts.eval_batches)?;
+        sum += outcome.accuracy;
+        cells.push(pct(outcome.accuracy));
+    }
+    cells.push(pct(sum / 4.0));
+    Ok(cells)
+}
+
+/// Convenience used by `repro::run("tab3")` tests: the arch list.
+pub fn arch_list() -> &'static [&'static str] {
+    &ARCHS
+}

@@ -1,0 +1,302 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Each `<name>.manifest.json` describes every input/output
+//! tensor of the lowered HLO in the exact flattened order jax.jit used.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// Tensor dtype as emitted by the exporter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Role of a tensor in the artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Model parameter (has an `init` spec).
+    Param,
+    /// AdamW first moment.
+    OptM,
+    /// AdamW second moment.
+    OptV,
+    /// Recurrent decode state (S matrices, conv tails, KV caches).
+    State,
+    /// Per-step data fed by the coordinator (tokens, masks, lr, ...).
+    Data,
+    /// Output-only metric (loss, nll sums, predictions, logits).
+    Metric,
+}
+
+impl Role {
+    fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "state" => Role::State,
+            "data" => Role::Data,
+            "metric" => Role::Metric,
+            other => bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+/// One tensor in the artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+    /// Init spec for params: "normal:<std>" | "zeros" | "ones" | "const:<v>"
+    pub init: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_arr()?
+                .iter().map(|d| d.as_usize()).collect::<crate::Result<_>>()?,
+            dtype: Dtype::parse(v.req("dtype")?.as_str()?)?,
+            role: Role::parse(v.req("role")?.as_str()?)?,
+            init: match v.get("init") {
+                Some(Json::Str(s)) => Some(s.clone()),
+                _ => None,
+            },
+        })
+    }
+}
+
+/// Model configuration echoed by the exporter (None for raw kernels).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub arch: String,
+    pub use_conv: bool,
+    pub conv_size: usize,
+    pub feature_map: String,
+    pub key_norm: String,
+    pub chunk_size: usize,
+    pub swa_window: usize,
+    pub max_seq_len: usize,
+    pub ffn_mult: f64,
+}
+
+impl ModelCfg {
+    fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(ModelCfg {
+            vocab_size: v.req("vocab_size")?.as_usize()?,
+            d_model: v.req("d_model")?.as_usize()?,
+            n_layers: v.req("n_layers")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            arch: v.req("arch")?.as_str()?.to_string(),
+            use_conv: v.req("use_conv")?.as_bool()?,
+            conv_size: v.req("conv_size")?.as_usize()?,
+            feature_map: v.req("feature_map")?.as_str()?.to_string(),
+            key_norm: v.req("key_norm")?.as_str()?.to_string(),
+            chunk_size: v.req("chunk_size")?.as_usize()?,
+            swa_window: v.req("swa_window")?.as_usize()?,
+            max_seq_len: v.req("max_seq_len")?.as_usize()?,
+            ffn_mult: v.req("ffn_mult")?.as_f64()?,
+        })
+    }
+}
+
+/// A full artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String, // train | eval | decode | kernel
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: Option<ModelCfg>,
+    pub batch: usize,
+    pub seq_len: usize,
+    // kernel artifacts carry their sweep parameters
+    pub form: Option<String>,
+    pub l: Option<usize>,
+    pub d: Option<usize>,
+    pub c: Option<usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let m = Self::parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let tensors = |key: &str| -> crate::Result<Vec<TensorSpec>> {
+            v.req(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        let opt_usize = |key: &str| -> Option<usize> {
+            v.get(key).and_then(|x| x.as_usize().ok())
+        };
+        Ok(Manifest {
+            name: v.req("name")?.as_str()?.to_string(),
+            kind: v.req("kind")?.as_str()?.to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+            config: match v.get("config") {
+                Some(c) if !c.is_null() => Some(ModelCfg::from_json(c)?),
+                _ => None,
+            },
+            batch: v.req("batch")?.as_usize()?,
+            seq_len: v.req("seq_len")?.as_usize()?,
+            form: v.get("form")
+                .and_then(|x| x.as_str().ok().map(|s| s.to_string())),
+            l: opt_usize("L"),
+            d: opt_usize("d"),
+            c: opt_usize("C"),
+        })
+    }
+
+    /// Basic consistency checks (roles/inits/shapes).
+    pub fn validate(&self) -> crate::Result<()> {
+        for t in &self.inputs {
+            if t.role == Role::Param && t.init.is_none() {
+                bail!("param input {} missing init spec", t.name);
+            }
+            if t.shape.iter().any(|&d| d == 0) {
+                bail!("zero-sized dim in {}", t.name);
+            }
+        }
+        if self.inputs.is_empty() || self.outputs.is_empty() {
+            bail!("manifest {} has empty signature", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn inputs_with_role(&self, role: Role) -> Vec<(usize, &TensorSpec)> {
+        self.inputs.iter().enumerate()
+            .filter(|(_, t)| t.role == role).collect()
+    }
+
+    pub fn outputs_with_role(&self, role: Role) -> Vec<(usize, &TensorSpec)> {
+        self.outputs.iter().enumerate()
+            .filter(|(_, t)| t.role == role).collect()
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> crate::Result<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+            .with_context(|| format!("no input named {name} in {}", self.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+            .with_context(|| format!("no output named {name} in {}", self.name))
+    }
+
+    /// Map from output index → input index for tensors that cycle through
+    /// the step function (params/opt/state carried across invocations).
+    pub fn carry_map(&self) -> HashMap<usize, usize> {
+        let mut by_name: HashMap<&str, usize> = HashMap::new();
+        for (i, t) in self.inputs.iter().enumerate() {
+            by_name.insert(t.name.as_str(), i);
+        }
+        let mut map = HashMap::new();
+        for (o, t) in self.outputs.iter().enumerate() {
+            if matches!(t.role, Role::Param | Role::OptM | Role::OptV | Role::State) {
+                if let Some(&i) = by_name.get(t.name.as_str()) {
+                    map.insert(o, i);
+                }
+            }
+        }
+        map
+    }
+
+    /// Total parameter count (Role::Param inputs).
+    pub fn param_count(&self) -> usize {
+        self.inputs.iter().filter(|t| t.role == Role::Param)
+            .map(|t| t.element_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "t", "kind": "train", "batch": 1, "seq_len": 8,
+        "config": null,
+        "inputs": [
+            {"name": "params.w", "shape": [2,3], "dtype": "f32",
+             "role": "param", "init": "zeros"},
+            {"name": "m.w", "shape": [2,3], "dtype": "f32", "role": "opt_m"},
+            {"name": "tokens", "shape": [1,9], "dtype": "i32", "role": "data"}
+        ],
+        "outputs": [
+            {"name": "params.w", "shape": [2,3], "dtype": "f32",
+             "role": "param"},
+            {"name": "m.w", "shape": [2,3], "dtype": "f32", "role": "opt_m"},
+            {"name": "loss", "shape": [], "dtype": "f32", "role": "metric"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0].role, Role::Param);
+        assert_eq!(m.inputs[2].dtype, Dtype::I32);
+        assert_eq!(m.inputs[0].element_count(), 6);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn carry_map_links_outputs_to_inputs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let map = m.carry_map();
+        assert_eq!(map.get(&0), Some(&0));
+        assert_eq!(map.get(&1), Some(&1));
+        assert!(!map.contains_key(&2)); // loss is not carried
+    }
+
+    #[test]
+    fn validate_rejects_param_without_init() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.inputs[0].init = None;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn name_lookups() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_index("tokens").unwrap(), 2);
+        assert_eq!(m.output_index("loss").unwrap(), 2);
+        assert!(m.input_index("nope").is_err());
+        assert_eq!(m.param_count(), 6);
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute` → untuple.
+//!
+//! The exporter lowers with `return_tuple=True`, so every execution returns
+//! a single tuple literal which we decompose back into per-output values in
+//! manifest order.
+
+pub mod manifest;
+pub mod values;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Context;
+
+pub use manifest::{Dtype, Manifest, Role, TensorSpec};
+pub use values::{init_tensor, HostValue};
+
+use crate::tensor::rng::Rng;
+
+/// A compiled artifact: PJRT executable + its manifest.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    /// wall time spent compiling the HLO
+    pub compile_time: std::time::Duration,
+}
+
+impl Executable {
+    /// Execute on host literals; returns per-output literals in manifest
+    /// order.  Validates argument count against the manifest.
+    pub fn execute(&self, args: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.manifest.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.manifest.name, self.manifest.inputs.len(), args.len()
+        );
+        let bufs = self.exe.execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.manifest.name))?;
+        let mut tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.manifest.name, self.manifest.outputs.len(), outs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute on host values (converts in and out).
+    pub fn run(&self, args: &[HostValue]) -> crate::Result<Vec<HostValue>> {
+        let lits: Vec<xla::Literal> = args.iter()
+            .map(|v| v.to_literal())
+            .collect::<crate::Result<_>>()?;
+        let outs = self.execute(&lits)?;
+        outs.iter().map(HostValue::from_literal).collect()
+    }
+
+    /// Initialize all Param inputs from the manifest (seeded), with OptM /
+    /// OptV / State inputs zeroed.  Returns the full input vector with Data
+    /// inputs zero-initialized placeholders the caller overwrites.
+    pub fn init_inputs(&self, seed: u64) -> crate::Result<Vec<HostValue>> {
+        let mut rng = Rng::new(seed);
+        self.manifest.inputs.iter()
+            .map(|spec| match spec.role {
+                Role::Param => init_tensor(spec, &mut rng),
+                _ => {
+                    // zeros of the right dtype/shape
+                    let mut z = spec.clone();
+                    z.init = Some("zeros".into());
+                    init_tensor(&z, &mut rng)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Runtime: one PJRT CPU client + a compile cache over artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Does an artifact exist on disk?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+            && self.artifacts_dir.join(format!("{name}.manifest.json")).exists()
+    }
+
+    /// List artifact names available on disk.
+    pub fn list_artifacts(&self) -> crate::Result<Vec<String>> {
+        let mut names = vec![];
+        for entry in std::fs::read_dir(&self.artifacts_dir)? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".manifest.json") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> crate::Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let hlo_path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let man_path = self.artifacts_dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man_path)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exec = std::sync::Arc::new(Executable {
+            exe,
+            manifest,
+            compile_time: t0.elapsed(),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+}

@@ -1,0 +1,227 @@
+//! Host-side tensor values and their conversion to/from XLA literals,
+//! plus manifest-driven parameter initialization (the Rust side owns init —
+//! Python never materializes a parameter).
+
+use anyhow::{bail, Context};
+use xla::{ElementType, Literal};
+
+use super::manifest::{Dtype, TensorSpec};
+use crate::tensor::rng::Rng;
+
+/// A host tensor: shape + data, f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        HostValue::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostValue::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> crate::Result<Self> {
+        let n = shape.iter().product::<usize>().max(1);
+        if data.len() != n {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(HostValue::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> crate::Result<Self> {
+        let n = shape.iter().product::<usize>().max(1);
+        if data.len() != n {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(HostValue::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len(),
+            HostValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> crate::Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn scalar(&self) -> crate::Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elems", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (single copy — `create_from_shape_and_
+    /// untyped_data` writes straight into the literal; the earlier
+    /// `vec1().reshape()` path copied twice, see EXPERIMENTS.md §Perf).
+    pub fn to_literal(&self) -> crate::Result<Literal> {
+        let lit = match self {
+            HostValue::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32, shape, bytes)?
+            }
+            HostValue::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32, shape, bytes)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal (copies).
+    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostValue::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            ElementType::S32 => Ok(HostValue::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            t => bail!("unsupported literal element type {t:?}"),
+        }
+    }
+
+    /// Approximate equality for f32 tensors (tests / cross-checks).
+    pub fn allclose(&self, other: &HostValue, atol: f32, rtol: f32) -> bool {
+        match (self, other) {
+            (HostValue::F32 { data: a, shape: sa },
+             HostValue::F32 { data: b, shape: sb }) => {
+                sa == sb && a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| {
+                        (x - y).abs() <= atol + rtol * y.abs().max(x.abs())
+                    })
+            }
+            (HostValue::I32 { data: a, shape: sa },
+             HostValue::I32 { data: b, shape: sb }) => sa == sb && a == b,
+            _ => false,
+        }
+    }
+}
+
+/// Initialize one tensor from its manifest spec.  Deterministic under seed.
+pub fn init_tensor(spec: &TensorSpec, rng: &mut Rng) -> crate::Result<HostValue> {
+    let n = spec.element_count();
+    match spec.dtype {
+        Dtype::I32 => Ok(HostValue::I32 {
+            shape: spec.shape.clone(),
+            data: vec![0; n],
+        }),
+        Dtype::F32 => {
+            let init = spec.init.as_deref().unwrap_or("zeros");
+            let data = if init == "zeros" {
+                vec![0.0; n]
+            } else if init == "ones" {
+                vec![1.0; n]
+            } else if let Some(v) = init.strip_prefix("const:") {
+                let v: f32 = v.parse().context("const init")?;
+                vec![v; n]
+            } else if let Some(std) = init.strip_prefix("normal:") {
+                let std: f32 = std.parse().context("normal init")?;
+                (0..n).map(|_| rng.normal() * std).collect()
+            } else {
+                bail!("unknown init spec {init:?} for {}", spec.name);
+            };
+            Ok(HostValue::F32 { shape: spec.shape.clone(), data })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Role;
+
+    fn spec(init: &str) -> TensorSpec {
+        TensorSpec {
+            name: "w".into(),
+            shape: vec![4, 8],
+            dtype: Dtype::F32,
+            role: Role::Param,
+            init: Some(init.into()),
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Rng::new(1);
+        assert!(init_tensor(&spec("zeros"), &mut rng).unwrap()
+            .as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(init_tensor(&spec("ones"), &mut rng).unwrap()
+            .as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(init_tensor(&spec("const:2.5"), &mut rng).unwrap()
+            .as_f32().unwrap().iter().all(|&x| x == 2.5));
+        let v = init_tensor(&spec("normal:0.02"), &mut rng).unwrap();
+        let d = v.as_f32().unwrap();
+        assert!(d.iter().any(|&x| x != 0.0));
+        assert!(d.iter().all(|&x| x.abs() < 0.2)); // 10 sigma
+    }
+
+    #[test]
+    fn init_deterministic_under_seed() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = init_tensor(&spec("normal:1.0"), &mut r1).unwrap();
+        let b = init_tensor(&spec("normal:1.0"), &mut r2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostValue::from_f32(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(HostValue::from_i32(&[2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn allclose_works() {
+        let a = HostValue::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let b = HostValue::from_f32(&[2], vec![1.0 + 1e-6, 2.0]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = HostValue::from_f32(&[2], vec![1.5, 2.0]).unwrap();
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+}

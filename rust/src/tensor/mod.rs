@@ -1,0 +1,263 @@
+//! Minimal host-side f32 matrix library.
+//!
+//! Used by the pure-Rust reference implementation of the paper's algorithm
+//! (`crate::reference`), the synthetic data generators, and the evaluation
+//! harnesses.  Row-major, no broadcasting magic — just the operations the
+//! DeltaNet algebra needs, written to be obviously correct.
+
+pub mod rng;
+
+use anyhow::bail;
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> crate::Result<Self> {
+        if rows.is_empty() {
+            bail!("empty matrix");
+        }
+        let cols = rows[0].len();
+        if rows.iter().any(|r| r.len() != cols) {
+            bail!("ragged rows");
+        }
+        Ok(Mat {
+            rows: rows.len(),
+            cols,
+            data: rows.into_iter().flatten().collect(),
+        })
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> crate::Result<Self> {
+        if data.len() != rows * cols {
+            bail!("{}x{} wants {} elems, got {}", rows, cols, rows * cols,
+                  data.len());
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut rng::Rng, std: f32) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// self @ other
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: streams through `other` rows, autovectorizes well
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    /// Keep entries with col ≤ row + diag, zero the rest (jnp.tril).
+    pub fn tril(&self, diag: i64) -> Mat {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if (j as i64) > (i as i64) + diag {
+                    out.data[i * self.cols + j] = 0.0;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn allclose(&self, other: &Mat, atol: f32, rtol: f32) -> bool {
+        self.rows == other.rows && self.cols == other.cols
+            && self.data.iter().zip(&other.data).all(|(a, b)| {
+                (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+            })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// v ⋅ w
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// a ← a + s·b
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += s * y;
+    }
+}
+
+/// L2-normalize in place; returns the original norm.
+pub fn l2_normalize(v: &mut [f32]) -> f32 {
+    let n = dot(v, v).sqrt();
+    if n > 1e-12 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+    n
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax(v: &mut [f32]) {
+    let m = v.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for x in v.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = rng::Rng::new(1);
+        let a = Mat::random(4, 4, &mut r, 1.0);
+        assert!(a.matmul(&Mat::eye(4)).allclose(&a, 1e-6, 1e-6));
+        assert!(Mat::eye(4).matmul(&a).allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let b = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]).unwrap();
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = rng::Rng::new(2);
+        let a = Mat::random(3, 5, &mut r, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn tril_masks_upper() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]).unwrap();
+        let t = a.tril(0);
+        assert_eq!(t.data, vec![1.0, 0.0, 0.0, 4.0, 5.0, 0.0, 7.0, 8.0, 9.0]);
+        let t1 = a.tril(-1);
+        assert_eq!(t1.data, vec![0.0, 0.0, 0.0, 4.0, 0.0, 0.0, 7.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        softmax(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(v.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn l2_normalize_unit() {
+        let mut v = vec![3.0, 4.0];
+        let n = l2_normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((dot(&v, &v) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny CLI argument parser: `--flag value` pairs + positionals.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `switch_names` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I, switch_names: &[&str]) -> crate::Result<Args> {
+        let mut positional = vec![];
+        let mut flags = HashMap::new();
+        let mut switches = vec![];
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    switches.push(name.to_string());
+                } else {
+                    let v = it.next()
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    flags.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { positional, flags, switches })
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> crate::Result<Args> {
+        Self::parse(std::env::args().skip(1), switch_names)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T)
+        -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(e) => bail!("bad value for --{name}: {e}"),
+            },
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_positionals_switches() {
+        let a = Args::parse(argv("train --steps 100 --quick --name=x pos2"),
+                            &["quick"]).unwrap();
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("name"), Some("x"));
+        assert!(a.has("quick"));
+    }
+
+    #[test]
+    fn typed_access_and_defaults() {
+        let a = Args::parse(argv("--steps 42"), &[]).unwrap();
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("steps", 0).is_ok());
+        let bad = Args::parse(argv("--steps abc"), &[]).unwrap();
+        assert!(bad.get_parse::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("--flag"), &[]).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Bench harness (criterion is unavailable offline): warmup + repeated
+//! timing with median/p10/p90, printed in a stable grep-able format used by
+//! `cargo bench` targets and EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<48} median {:>10.3} ms   p10 {:>10.3} ms   p90 {:>10.3} ms   ({} reps)",
+            self.name, self.median_s * 1e3, self.p10_s * 1e3,
+            self.p90_s * 1e3, self.reps);
+    }
+}
+
+/// Time `f` with `warmup` unrecorded calls then `reps` recorded ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F)
+                         -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        reps,
+        median_s: q(0.5),
+        p10_s: q(0.1),
+        p90_s: q(0.9),
+    };
+    r.print();
+    r
+}
+
+/// Fallible variant: aborts the bench on the first error.
+pub fn bench_result<F>(name: &str, warmup: usize, reps: usize, mut f: F)
+                       -> anyhow::Result<BenchResult>
+where
+    F: FnMut() -> anyhow::Result<()>,
+{
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f()?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        reps,
+        median_s: q(0.5),
+        p10_s: q(0.1),
+        p90_s: q(0.9),
+    };
+    r.print();
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_ordering() {
+        let r = bench("t", 1, 11, || std::thread::sleep(
+            std::time::Duration::from_micros(100)));
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+        assert!(r.median_s >= 50e-6);
+    }
+
+    #[test]
+    fn fallible_propagates() {
+        let e = bench_result("t", 0, 1, || anyhow::bail!("boom"));
+        assert!(e.is_err());
+    }
+}

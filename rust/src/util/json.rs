@@ -1,0 +1,387 @@
+//! Minimal JSON parser + serializer (this build is fully offline; serde is
+//! not available, so the manifest/config/metrics plumbing uses this).
+//!
+//! Supports the full JSON grammar needed by the artifact manifests and run
+//! configs: objects, arrays, strings (with escapes), numbers, bools, null.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ------------------------------------------------------------ access
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> crate::Result<&Json> {
+        self.get(key).with_context(|| format!("missing key {key:?}"))
+    }
+
+    pub fn as_str(&self) -> crate::Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> crate::Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> crate::Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_u64(&self) -> crate::Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_bool(&self) -> crate::Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> crate::Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    // ------------------------------------------------------- construction
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(x: impl Into<f64>) -> Json {
+        Json::Num(x.into())
+    }
+
+    // ----------------------------------------------------------- parsing
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    // -------------------------------------------------------- serializing
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> crate::Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at byte {}", other, self.pos),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> crate::Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => bail!("expected , or }} at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.expect(b'[')?;
+        let mut v = vec![];
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => bail!("expected , or ] at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self.bytes.get(self.pos + 1..self.pos + 5)
+                                .context("short \\u escape")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)?, 16)?;
+                            s.push(char::from_u32(code)
+                                .context("bad \\u escape")?);
+                            self.pos += 4;
+                        }
+                        other => bail!("bad escape {other:?}"),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let c = rest.chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(),
+                       Some(c) if c.is_ascii_digit() || c == b'.'
+                           || c == b'e' || c == b'E' || c == b'+'
+                           || c == b'-')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(text.parse().context("bad number")?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": 1, "b": [true, null, "x\n"], "c": {"d": -2.5}}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.req("a").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.req("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.req("c").unwrap().req("d").unwrap().as_f64().unwrap(),
+                   -2.5);
+        // render → parse is stable
+        let re = Json::parse(&v.render()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn parses_manifest_like_structure() {
+        let src = r#"{"name":"t","inputs":[{"name":"params.embed",
+            "shape":[64,32],"dtype":"f32","role":"param",
+            "init":"normal:0.02"}]}"#;
+        let v = Json::parse(src).unwrap();
+        let inp = &v.req("inputs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(inp.req("dtype").unwrap().as_str().unwrap(), "f32");
+        let shape: Vec<usize> = inp.req("shape").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_usize().unwrap()).collect();
+        assert_eq!(shape, vec![64, 32]);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::parse(r#""a\"b\\cA\n""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\cA\n");
+        let s = Json::str("x\"y\nz");
+        assert_eq!(Json::parse(&s.render()).unwrap(), s);
+    }
+
+    #[test]
+    fn numbers() {
+        for (src, want) in [("0", 0.0), ("-1", -1.0), ("2.5", 2.5),
+                            ("1e3", 1000.0), ("-2.5e-1", -0.25)] {
+            assert_eq!(Json::parse(src).unwrap().as_f64().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{}x").is_err());
+        assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::parse(r#""héllo ∆""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ∆");
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree utilities replacing unavailable external crates (offline build):
+//! JSON, CLI argument parsing, bench timing, property-test harness, and a
+//! small thread pool.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod threadpool;

@@ -1,0 +1,67 @@
+//! Property-test harness (proptest is unavailable offline): seeded random
+//! case generation with failure reporting that names the reproducing seed.
+
+use crate::tensor::rng::Rng;
+
+/// Run `cases` random property checks.  `f` gets a per-case RNG; return
+/// Err(description) to fail.  Panics with the reproducing seed on failure.
+pub fn check<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(name, 0xda7a, cases, f)
+}
+
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed on case {case} \
+                    (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helpers for common generator patterns.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    rng.range(lo, hi)
+}
+
+pub fn f32_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * std).collect()
+}
+
+/// β-like vector in (0,1).
+pub fn unit_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| 1.0 / (1.0 + (-rng.normal()).exp())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("x+0==x", 50, |rng| {
+            let x = rng.normal();
+            if x + 0.0 == x { Ok(()) } else { Err(format!("x={x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn failing_property_reports_seed() {
+        check("always-false", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn unit_vec_in_range() {
+        let mut rng = Rng::new(1);
+        assert!(unit_vec(&mut rng, 100).iter()
+            .all(|&b| b > 0.0 && b < 1.0));
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: PJRT artifact loading + execution, cross-checked against
+//! the pure-Rust reference implementation.  Requires `make artifacts`.
+
+use deltanet::reference;
+use deltanet::runtime::{HostValue, Role, Runtime};
+use deltanet::tensor::Mat;
+
+fn runtime() -> Runtime {
+    Runtime::new("artifacts").expect("PJRT runtime (run `make artifacts`)")
+}
+
+#[test]
+fn list_and_load_artifacts() {
+    let rt = runtime();
+    let names = rt.list_artifacts().unwrap();
+    assert!(names.iter().any(|n| n == "deltanet_tiny.train"),
+            "run `make artifacts` first; found {names:?}");
+    let exe = rt.load("deltanet_tiny.train").unwrap();
+    assert_eq!(exe.manifest.kind, "train");
+    assert!(exe.manifest.param_count() > 10_000);
+    // cache: second load is instant and shares the Arc
+    let exe2 = rt.load("deltanet_tiny.train").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&exe, &exe2));
+}
+
+#[test]
+fn kernel_artifact_matches_rust_reference() {
+    let rt = runtime();
+    let (b, l, d) = (4usize, 1024usize, 64usize);
+    let exe = rt.load("kernel_chunkwise_L1024_d64_C64_B4").unwrap();
+
+    let mut q_all = vec![0f32; b * l * d];
+    let mut k_all = vec![0f32; b * l * d];
+    let mut v_all = vec![0f32; b * l * d];
+    let mut beta_all = vec![0f32; b * l];
+    let mut problems = vec![];
+    for bi in 0..b {
+        let (q, k, v, beta) = reference::random_problem(l, d, d, bi as u64);
+        q_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&q.data);
+        k_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&k.data);
+        v_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&v.data);
+        beta_all[bi * l..(bi + 1) * l].copy_from_slice(&beta);
+        problems.push((q, k, v, beta));
+    }
+    let outs = exe.run(&[
+        HostValue::from_f32(&[b, l, d], q_all).unwrap(),
+        HostValue::from_f32(&[b, l, d], k_all).unwrap(),
+        HostValue::from_f32(&[b, l, d], v_all).unwrap(),
+        HostValue::from_f32(&[b, l], beta_all).unwrap(),
+    ]).unwrap();
+
+    let o = outs[0].as_f32().unwrap();
+    let s = outs[1].as_f32().unwrap();
+    // cross-check every sequence with the host chunkwise implementation
+    for (bi, (q, k, v, beta)) in problems.iter().enumerate() {
+        let want = reference::delta_chunkwise(q, k, v, beta, 64, None);
+        let got = Mat::from_vec(l, d,
+                                o[bi * l * d..(bi + 1) * l * d].to_vec())
+            .unwrap();
+        assert!(got.allclose(&want.o, 3e-3, 3e-3), "sequence {bi} output");
+        let got_s = Mat::from_vec(d, d,
+                                  s[bi * d * d..(bi + 1) * d * d].to_vec())
+            .unwrap();
+        assert!(got_s.allclose(&want.state, 3e-3, 3e-3), "sequence {bi} state");
+    }
+}
+
+#[test]
+fn chunkwise_and_recurrent_artifacts_agree() {
+    // the two forms are different programs; on the same inputs they must
+    // produce identical outputs (Fig. 1's correctness precondition)
+    let rt = runtime();
+    let (b, l, d) = (16usize, 256usize, 32usize);
+    let chunk = rt.load("kernel_chunkwise_L256_d32_C64_B16").unwrap();
+    let rec = rt.load("kernel_recurrent_L256_d32_C64_B16").unwrap();
+
+    // keys L2-normalized (the regime the model produces; raw gaussian keys
+    // make the Householder products ill-conditioned in fp32 and the two
+    // forms accumulate differently)
+    let mut q_all = vec![0f32; b * l * d];
+    let mut k_all = vec![0f32; b * l * d];
+    let mut v_all = vec![0f32; b * l * d];
+    let mut beta_all = vec![0f32; b * l];
+    for bi in 0..b {
+        let (q, k, v, beta) =
+            reference::random_problem(l, d, d, 900 + bi as u64);
+        q_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&q.data);
+        k_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&k.data);
+        v_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&v.data);
+        beta_all[bi * l..(bi + 1) * l].copy_from_slice(&beta);
+    }
+    let args = vec![
+        HostValue::from_f32(&[b, l, d], q_all).unwrap(),
+        HostValue::from_f32(&[b, l, d], k_all).unwrap(),
+        HostValue::from_f32(&[b, l, d], v_all).unwrap(),
+        HostValue::from_f32(&[b, l], beta_all).unwrap(),
+    ];
+    let o1 = chunk.run(&args).unwrap();
+    let o2 = rec.run(&args).unwrap();
+    assert!(o1[0].allclose(&o2[0], 3e-3, 3e-3), "outputs disagree");
+    assert!(o1[1].allclose(&o2[1], 3e-3, 3e-3), "states disagree");
+}
+
+#[test]
+fn manifest_roles_and_carry_wiring() {
+    let rt = runtime();
+    let exe = rt.load("deltanet_tiny.train").unwrap();
+    let m = &exe.manifest;
+    // every param output maps back to a param input of the same shape
+    let carry = m.carry_map();
+    let n_params = m.inputs_with_role(Role::Param).len();
+    assert!(carry.len() >= 3 * n_params, "carry should cover params+m+v");
+    for (&o, &i) in &carry {
+        assert_eq!(m.outputs[o].name, m.inputs[i].name);
+        assert_eq!(m.outputs[o].shape, m.inputs[i].shape);
+    }
+    // data inputs present
+    for name in ["step", "lr", "tokens", "mask"] {
+        m.input_index(name).unwrap();
+    }
+    m.output_index("loss").unwrap();
+}
+
+#[test]
+fn eval_artifact_runs_and_scores() {
+    let rt = runtime();
+    let exe = rt.load("deltanet_tiny.eval").unwrap();
+    let m = &exe.manifest;
+    let inputs = exe.init_inputs(3).unwrap();
+    let mut args: Vec<HostValue> = inputs;
+    // random tokens
+    let ti = m.input_index("tokens").unwrap();
+    let mi = m.input_index("mask").unwrap();
+    let (b, l) = (m.batch, m.seq_len);
+    args[ti] = HostValue::from_i32(&[b, l + 1],
+                                   (0..b * (l + 1)).map(|i| (i % 60) as i32)
+                                       .collect()).unwrap();
+    args[mi] = HostValue::from_f32(&[b, l], vec![1.0; b * l]).unwrap();
+    let outs = exe.run(&args).unwrap();
+    let nll = outs[m.output_index("nll_sum").unwrap()].scalar().unwrap();
+    assert!(nll.is_finite() && nll > 0.0);
+    let preds = outs[m.output_index("preds").unwrap()].as_i32().unwrap();
+    assert_eq!(preds.len(), b * l);
+    let vocab = m.config.as_ref().unwrap().vocab_size as i32;
+    assert!(preds.iter().all(|&p| p >= 0 && p < vocab));
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let rt = runtime();
+    assert!(!rt.has_artifact("nope_nothing"));
+    let err = match rt.load("nope_nothing") {
+        Ok(_) => panic!("load of missing artifact succeeded"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nope_nothing"), "unhelpful error: {msg}");
+}

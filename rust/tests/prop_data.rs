@@ -1,0 +1,147 @@
+//! Property-based tests over the data pipeline: every generator must emit
+//! batches whose masked targets are actually solvable from the context
+//! (or the fixed map), stay in vocab, and be deterministic under seed.
+
+use deltanet::config::DataConfig;
+use deltanet::data::{build_task, mad, Batch};
+use deltanet::util::prop::check;
+
+fn all_configs(seed: u64) -> Vec<DataConfig> {
+    let mut v = vec![
+        DataConfig::Corpus { seed },
+        DataConfig::Mqar { num_pairs: 4, seed },
+        DataConfig::Mqar { num_pairs: 8, seed },
+        DataConfig::RegBench { seed },
+        DataConfig::Recall { style: "swde".into(), seed },
+        DataConfig::Recall { style: "squad".into(), seed },
+        DataConfig::Recall { style: "fda".into(), seed },
+    ];
+    for task in mad::ALL_TASKS {
+        v.push(DataConfig::Mad { task: task.to_string(), seed });
+    }
+    v
+}
+
+#[test]
+fn prop_all_generators_stay_in_vocab_and_mask() {
+    check("generators in-vocab", 10, |rng| {
+        let seed = rng.next_u64();
+        for cfg in all_configs(seed) {
+            let mut gen = build_task(&cfg);
+            let vocab = gen.vocab_required() as i32;
+            let b = gen.sample(4, 64);
+            if b.tokens.iter().any(|&t| t < 0 || t >= vocab) {
+                return Err(format!("{}: token out of vocab", gen.name()));
+            }
+            if b.masked_positions() == 0 {
+                return Err(format!("{}: no targets", gen.name()));
+            }
+            if b.tokens.len() != 4 * 65 || b.mask.len() != 4 * 64 {
+                return Err(format!("{}: bad layout", gen.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generators_deterministic_under_seed() {
+    check("generator determinism", 8, |rng| {
+        let seed = rng.next_u64();
+        for cfg in all_configs(seed) {
+            let mut g1 = build_task(&cfg);
+            let mut g2 = build_task(&cfg);
+            let a = g1.sample(2, 48);
+            let b = g2.sample(2, 48);
+            if a.tokens != b.tokens || a.mask != b.mask {
+                return Err(format!("{}: nondeterministic", g1.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vocab_requirements_fit_tiny_preset() {
+    // every generator must fit the tiny artifact vocab (128) — an
+    // out-of-range token id would hit the embedding gather out of bounds
+    // and poison training with NaNs
+    let mut configs = all_configs(1);
+    configs.push(DataConfig::Mqar { num_pairs: 16, seed: 1 });
+    for cfg in configs {
+        let gen = build_task(&cfg);
+        assert!(gen.vocab_required() <= 128,
+                "{} needs vocab {}", gen.name(), gen.vocab_required());
+    }
+}
+
+#[test]
+fn prop_oracle_predictions_score_100() {
+    // feeding the literal targets as predictions must give 100% accuracy
+    // for every generator (sanity of the scoring path itself)
+    check("oracle scores 100", 6, |rng| {
+        let seed = rng.next_u64();
+        for cfg in all_configs(seed) {
+            let mut gen = build_task(&cfg);
+            let b = gen.sample(3, 56);
+            let preds = oracle_preds(&b);
+            let (c, t) = b.score_preds(&preds);
+            if c != t {
+                return Err(format!("{}: oracle scored {c}/{t}", gen.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn oracle_preds(b: &Batch) -> Vec<i32> {
+    let mut preds = vec![0i32; b.batch * b.seq_len];
+    for bi in 0..b.batch {
+        for pos in 0..b.seq_len {
+            preds[bi * b.seq_len + pos] = b.token(bi, pos + 1);
+        }
+    }
+    preds
+}
+
+#[test]
+fn prop_mqar_query_keys_seen_before() {
+    // every masked query position must use a key that appeared in the kv
+    // section — otherwise the task would be unsolvable
+    check("mqar solvable", 10, |rng| {
+        let seed = rng.next_u64();
+        let pairs = [4, 8][rng.below(2)];
+        let mut gen = build_task(&DataConfig::Mqar { num_pairs: pairs, seed });
+        let b = gen.sample(4, 64);
+        for bi in 0..4 {
+            for pos in 0..64 {
+                if b.mask[bi * 64 + pos] > 0.0 {
+                    let key = b.token(bi, pos);
+                    let seen = (0..pos).any(|p| b.token(bi, p) == key);
+                    if !seen {
+                        return Err(format!("query key {key} unseen"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scoring_counts_match_mask() {
+    check("score totals == mask", 10, |rng| {
+        let seed = rng.next_u64();
+        for cfg in all_configs(seed) {
+            let mut gen = build_task(&cfg);
+            let b = gen.sample(2, 40);
+            let preds = vec![-1i32; 2 * 40]; // always wrong (out of vocab)
+            let (c, t) = b.score_preds(&preds);
+            if c != 0 || t != b.masked_positions() {
+                return Err(format!("{}: {c}/{t} vs mask {}",
+                                   gen.name(), b.masked_positions()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,229 @@
+//! Property-based tests over the pure-Rust reference implementation —
+//! the WY-representation invariants the paper's algorithm rests on.
+
+use deltanet::reference::{self, delta_chunkwise, delta_recurrent,
+                          tri_inv_unit_lower, ut_transform};
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::{dot, l2_normalize, Mat};
+use deltanet::util::prop::{check, f32_vec, unit_vec};
+
+fn random_problem(rng: &mut Rng, l: usize, dk: usize, dv: usize)
+                  -> (Mat, Mat, Mat, Vec<f32>) {
+    let q = Mat::from_vec(l, dk, f32_vec(rng, l * dk, 1.0)).unwrap();
+    let mut k = Mat::from_vec(l, dk, f32_vec(rng, l * dk, 1.0)).unwrap();
+    for i in 0..l {
+        l2_normalize(k.row_mut(i));
+    }
+    let v = Mat::from_vec(l, dv, f32_vec(rng, l * dv, 1.0)).unwrap();
+    let beta = unit_vec(rng, l);
+    (q, k, v, beta)
+}
+
+#[test]
+fn prop_chunkwise_equals_recurrent_any_chunk() {
+    check("chunkwise == recurrent", 40, |rng| {
+        let l = [8, 16, 32, 64][rng.below(4)];
+        let dk = [4, 8, 16][rng.below(3)];
+        let dv = [4, 8, 16][rng.below(3)];
+        // any chunk size dividing L
+        let divisors: Vec<usize> =
+            (1..=l).filter(|c| l % c == 0).collect();
+        let c = divisors[rng.below(divisors.len())];
+        let (q, k, v, beta) = random_problem(rng, l, dk, dv);
+        let a = delta_recurrent(&q, &k, &v, &beta, None);
+        let b = delta_chunkwise(&q, &k, &v, &beta, c, None);
+        if !b.o.allclose(&a.o, 2e-3, 2e-3) {
+            return Err(format!("outputs differ (L={l} dk={dk} C={c})"));
+        }
+        if !b.state.allclose(&a.state, 2e-3, 2e-3) {
+            return Err(format!("states differ (L={l} dk={dk} C={c})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_chaining_is_associative() {
+    // splitting the sequence at ANY boundary and chaining states must give
+    // the same result as one pass — the prefill/decode contract
+    check("state chaining", 30, |rng| {
+        let l = 32;
+        let (q, k, v, beta) = random_problem(rng, l, 8, 8);
+        let full = delta_recurrent(&q, &k, &v, &beta, None);
+        let cut = 1 + rng.below(l - 1);
+        let take = |m: &Mat, a: usize, b: usize| Mat {
+            rows: b - a,
+            cols: m.cols,
+            data: m.data[a * m.cols..b * m.cols].to_vec(),
+        };
+        let h1 = delta_recurrent(&take(&q, 0, cut), &take(&k, 0, cut),
+                                 &take(&v, 0, cut), &beta[..cut], None);
+        let h2 = delta_recurrent(&take(&q, cut, l), &take(&k, cut, l),
+                                 &take(&v, cut, l), &beta[cut..],
+                                 Some(&h1.state));
+        if !h2.state.allclose(&full.state, 2e-3, 2e-3) {
+            return Err(format!("state mismatch at cut {cut}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigenvalue_bound_keeps_state_bounded() {
+    // with L2-normalized keys and β ∈ (0,1), eigenvalues of (I − βkkᵀ) lie
+    // in [0, 1] ⇒ long rollouts cannot blow up
+    check("bounded state", 10, |rng| {
+        let l = 512;
+        let (q, k, v, beta) = random_problem(rng, l, 8, 8);
+        let _ = q;
+        let f = delta_recurrent(&Mat::zeros(l, 8), &k, &v, &beta, None);
+        let m = f.state.max_abs();
+        if !m.is_finite() || m > 1e3 {
+            return Err(format!("state magnitude {m}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tri_inv_is_inverse() {
+    check("(I+A)(I+A)^-1 == I", 30, |rng| {
+        let c = 2 + rng.below(24);
+        let mut a = Mat::zeros(c, c);
+        for i in 0..c {
+            for j in 0..i {
+                a[(i, j)] = rng.normal() * 0.5;
+            }
+        }
+        let inv = tri_inv_unit_lower(&a);
+        let mut ia = Mat::eye(c);
+        for i in 0..c {
+            for j in 0..c {
+                ia[(i, j)] += a[(i, j)];
+            }
+        }
+        let prod = ia.matmul(&inv);
+        if !prod.allclose(&Mat::eye(c), 1e-3, 1e-3) {
+            return Err(format!("not an inverse at C={c}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wy_representation_reconstructs_householder_product() {
+    // P = I − Σ w_t k_tᵀ  must equal  ∏_t (I − β_t k_t k_tᵀ)  (appendix A)
+    check("WY == product of Householders", 25, |rng| {
+        let c = 2 + rng.below(12);
+        let dk = 4 + rng.below(8);
+        let (_, k, v, beta) = random_problem(rng, c, dk, dk);
+        let (w, _) = ut_transform(&k, &v, &beta);
+        // P_wy = I − Wᵀ K (in [dk, dk])
+        let mut p_wy = Mat::eye(dk);
+        let wt_k = w.transpose().matmul(&k);
+        for i in 0..dk {
+            for j in 0..dk {
+                p_wy[(i, j)] -= wt_k[(i, j)];
+            }
+        }
+        // product form (row convention: right-multiplied in order)
+        let mut p = Mat::eye(dk);
+        for t in 0..c {
+            let mut h = Mat::eye(dk);
+            for i in 0..dk {
+                for j in 0..dk {
+                    h[(i, j)] -= beta[t] * k[(t, i)] * k[(t, j)];
+                }
+            }
+            p = p.matmul(&h);
+        }
+        if !p_wy.allclose(&p, 2e-3, 2e-3) {
+            return Err(format!("WY mismatch at C={c} dk={dk}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_beta_zero_tokens_are_transparent() {
+    // tokens with β=0 must not change the state at all
+    check("beta=0 transparency", 20, |rng| {
+        let l = 16;
+        let (q, k, v, mut beta) = random_problem(rng, l, 8, 8);
+        let dead = rng.below(l);
+        beta[dead] = 0.0;
+        let f = delta_recurrent(&q, &k, &v, &beta, None);
+        // rebuild without the dead token
+        let keep: Vec<usize> = (0..l).filter(|&t| t != dead).collect();
+        let sel = |m: &Mat| Mat::from_rows(
+            keep.iter().map(|&t| m.row(t).to_vec()).collect()).unwrap();
+        let beta2: Vec<f32> = keep.iter().map(|&t| beta[t]).collect();
+        let g = delta_recurrent(&sel(&q), &sel(&k), &sel(&v), &beta2, None);
+        if !f.state.allclose(&g.state, 1e-4, 1e-4) {
+            return Err("β=0 token affected the state".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attention_matrix_is_causal_and_reconstructs() {
+    check("parallel-form attention matrix", 15, |rng| {
+        let l = 8 + rng.below(16);
+        let (q, k, v, beta) = random_problem(rng, l, 8, 8);
+        let a = reference::delta_attention_matrix(&q, &k, &beta);
+        // strictly causal: A[i, j] == 0 for j > i
+        for i in 0..l {
+            for j in (i + 1)..l {
+                if a[(i, j)].abs() > 1e-5 {
+                    return Err(format!("acausal entry at ({i},{j})"));
+                }
+            }
+        }
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        if !a.matmul(&v).allclose(&want.o, 5e-3, 5e-3) {
+            return Err("A·V != O".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_with_beta_one_unit_keys_retrieves_exactly() {
+    // writing distinct one-hot keys with β=1 gives exact retrieval — the
+    // "key collision free" regime the delta rule is designed for
+    check("exact retrieval", 20, |rng| {
+        let dk = 8;
+        let n = 1 + rng.below(dk);
+        let mut k = Mat::zeros(n, dk);
+        let slots: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..dk).collect();
+            rng.shuffle(&mut idx);
+            idx.truncate(n);
+            idx
+        };
+        for (t, &s) in slots.iter().enumerate() {
+            k[(t, s)] = 1.0;
+        }
+        let v = Mat::from_vec(n, 4, f32_vec(rng, n * 4, 1.0)).unwrap();
+        let beta = vec![1.0; n];
+        let f = delta_recurrent(&k.clone(), &k, &v, &beta, None);
+        // query each key at the end: o from state directly
+        for t in 0..n {
+            let mut got = vec![0.0f32; 4];
+            for i in 0..dk {
+                deltanet::tensor::axpy(&mut got, k[(t, i)],
+                                       f.state.row(i));
+            }
+            if dot(&got, &got) == 0.0 {
+                return Err("empty retrieval".into());
+            }
+            for j in 0..4 {
+                if (got[j] - v[(t, j)]).abs() > 1e-4 {
+                    return Err(format!("slot {t} retrieved wrong value"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
