@@ -10,7 +10,7 @@ use deltanet::eval::{pct, Table};
 use deltanet::repro::{train_cell, ReproOpts};
 use deltanet::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let runtime = Runtime::new("artifacts")?;
     let steps: usize = std::env::var("MQAR_STEPS").ok()
         .and_then(|s| s.parse().ok())

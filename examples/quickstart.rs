@@ -8,7 +8,7 @@ use deltanet::reference;
 use deltanet::runtime::{HostValue, Runtime};
 use deltanet::tensor::Mat;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let runtime = Runtime::new("artifacts")?;
     println!("PJRT platform: {}", runtime.platform());
 
@@ -50,13 +50,13 @@ fn main() -> anyhow::Result<()> {
     let (q, k, v, beta) = &problems[0];
     let want = reference::delta_recurrent(q, k, v, beta, None);
     let got = Mat::from_vec(l, d, o[..l * d].to_vec())?;
-    anyhow::ensure!(got.allclose(&want.o, 1e-3, 1e-3),
+    deltanet::ensure!(got.allclose(&want.o, 1e-3, 1e-3),
                     "kernel output disagrees with the reference recurrence");
     println!("numerics OK: chunkwise PJRT kernel == pure-Rust delta rule");
 
     let s = outs[1].as_f32()?;
     let got_s = Mat::from_vec(d, d, s[..d * d].to_vec())?;
-    anyhow::ensure!(got_s.allclose(&want.state, 1e-3, 1e-3));
+    deltanet::ensure!(got_s.allclose(&want.state, 1e-3, 1e-3));
     println!("state OK: S after {l} tokens matches ({d}x{d})");
     Ok(())
 }

@@ -12,7 +12,7 @@ use deltanet::coordinator::server::{GenRequest, ServeEngine};
 use deltanet::coordinator::DecodeEngine;
 use deltanet::runtime::{Manifest, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let artifact = "deltanet_tiny";
     let man = Manifest::load(std::path::Path::new(
         &format!("artifacts/{artifact}.decode.manifest.json")))?;
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
                 (0..len).map(|j| ((7 * i + j) as i32) % vocab).collect();
             serve.submit(GenRequest { prompt, max_new })
         })
-        .collect::<anyhow::Result<_>>()?;
+        .collect::<deltanet::Result<_>>()?;
 
     let mut latencies: Vec<f64> = vec![];
     for (i, t) in tickets.into_iter().enumerate() {
@@ -68,6 +68,6 @@ fn main() -> anyhow::Result<()> {
              p(0.5), p(0.9), p(0.99));
     println!("decode throughput {:.0} tok/s | wall {:.2}s",
              st.tokens_per_sec(), wall);
-    anyhow::ensure!(st.requests == n_requests);
+    deltanet::ensure!(st.requests == n_requests);
     Ok(())
 }

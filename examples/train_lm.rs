@@ -15,14 +15,14 @@ use deltanet::coordinator::Trainer;
 use deltanet::data::batcher::Split;
 use deltanet::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let runtime = Runtime::new("artifacts")?;
     let artifact = std::env::var("DELTANET_E2E_ARTIFACT").ok()
         .or_else(|| ["deltanet_e2e", "deltanet_small", "deltanet_tiny"]
             .iter()
             .find(|a| runtime.has_artifact(&format!("{a}.train")))
             .map(|s| s.to_string()))
-        .ok_or_else(|| anyhow::anyhow!("no deltanet train artifact; \
+        .ok_or_else(|| deltanet::err!("no deltanet train artifact; \
                                         run `make artifacts`"))?;
     let steps: usize = std::env::var("DELTANET_E2E_STEPS").ok()
         .and_then(|s| s.parse().ok())
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     }
     // The corpus has a known entropy floor (MarkovCorpus::entropy_rate ≈
     // 1.9 nats for fanout 8); a working trainer must approach it.
-    anyhow::ensure!(report.final_loss < report.first_loss,
+    deltanet::ensure!(report.final_loss < report.first_loss,
                     "loss did not decrease");
     println!("\ncheckpoint: checkpoints/train_lm.npz");
     Ok(())

@@ -6,8 +6,13 @@ use deltanet::coordinator::DecodeEngine;
 use deltanet::runtime::Runtime;
 use deltanet::util::bench::bench_result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let rt = Runtime::new("artifacts")?;
+    if !Runtime::backend_available() {
+        println!("no PJRT backend in this build; decode bench needs \
+                  artifacts — skipping");
+        return Ok(());
+    }
     for artifact in ["deltanet_tiny", "hybrid_swa_tiny", "deltanet_small"] {
         if !rt.has_artifact(&format!("{artifact}.decode")) {
             continue;

@@ -1,10 +1,19 @@
 //! Bench: Figure 1 — chunkwise-parallel vs recurrent DeltaNet kernels
 //! across (L, d_head) at fixed B·L = 4096 tokens, plus the chunk-size
-//! sweep.  `cargo bench --bench bench_fig1_forms`
+//! sweep.  Prefers the PJRT kernel artifacts; without them (offline
+//! build) it runs the same comparison on the batched host kernel backend.
+//! Writes `BENCH_fig1_forms.json` at the repo root.
+//!
+//!     cargo bench --bench bench_fig1_forms
 
+use deltanet::coordinator::host::{HostKernelBackend, KernelForm};
+use deltanet::kernels::default_threads;
+use deltanet::repro::fig1::host_inputs;
 use deltanet::runtime::{HostValue, Runtime};
 use deltanet::tensor::rng::Rng;
-use deltanet::util::bench::bench_result;
+use deltanet::util::bench::{
+    bench_result, smoke_mode, write_report, BenchResult,
+};
 
 fn inputs(b: usize, l: usize, d: usize, seed: u64) -> Vec<xla::Literal> {
     let mut rng = Rng::new(seed);
@@ -23,37 +32,83 @@ fn inputs(b: usize, l: usize, d: usize, seed: u64) -> Vec<xla::Literal> {
     vec![q, k, v, beta]
 }
 
-fn main() -> anyhow::Result<()> {
+/// PJRT path: one (form, L, d, C, B) kernel artifact.
+fn bench_artifact(rt: &Runtime, form: &str, l: usize, d: usize, c: usize,
+                  b: usize) -> deltanet::Result<BenchResult> {
+    let name = format!("kernel_{form}_L{l}_d{d}_C{c}_B{b}");
+    let exe = rt.load(&name)?;
+    let args = inputs(b, l, d, 7);
+    bench_result(&name, 1, 5, || {
+        exe.execute(&args)?;
+        Ok(())
+    })
+}
+
+/// Both forms through the artifact path, failing if either is unavailable.
+fn bench_artifact_pair(rt: &Runtime, l: usize, d: usize, b: usize)
+                       -> deltanet::Result<(BenchResult, BenchResult)> {
+    let rec = bench_artifact(rt, "recurrent", l, d, 64, b)?;
+    let chk = bench_artifact(rt, "chunkwise", l, d, 64, b)?;
+    Ok((rec, chk))
+}
+
+/// Host path: same comparison on the batched host kernel backend (one
+/// shared pool for the whole bench).
+fn bench_host(backend: &HostKernelBackend, form: KernelForm, l: usize,
+              d: usize, c: usize, b: usize, reps: usize)
+              -> deltanet::Result<BenchResult> {
+    let tag = match form {
+        KernelForm::Recurrent => "recurrent",
+        KernelForm::Chunkwise => "chunkwise",
+    };
+    let (q, k, v, beta) = host_inputs(b, l, d, 7);
+    bench_result(&format!("host_{tag}_L{l}_d{d}_C{c}_B{b}"), 1, reps, || {
+        backend.run_with_chunk(form, c, &q, &k, &v, &beta)?;
+        Ok(())
+    })
+}
+
+fn main() -> deltanet::Result<()> {
     let rt = Runtime::new("artifacts")?;
+    let smoke = smoke_mode();
+    let host = HostKernelBackend::new(default_threads(), 64);
+    let mut report: Vec<BenchResult> = vec![];
+
     println!("# Figure 1: forms comparison (B·L = 4096 tokens, C = 64)");
-    for d in [32, 64] {
-        for l in [256, 512, 1024, 2048, 4096] {
+    let ds: &[usize] = if smoke { &[64] } else { &[32, 64] };
+    let ls: &[usize] =
+        if smoke { &[256, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    for &d in ds {
+        for &l in ls {
             let b = 4096 / l;
-            let mut results = vec![];
-            for form in ["recurrent", "chunkwise"] {
-                let name = format!("kernel_{form}_L{l}_d{d}_C64_B{b}");
-                let exe = rt.load(&name)?;
-                let args = inputs(b, l, d, 7);
-                let r = bench_result(&name, 1, 5, || {
-                    exe.execute(&args)?;
-                    Ok(())
-                })?;
-                results.push(r.median_s);
-            }
+            let reps = if smoke { 3 } else { 5 };
+            let artifact = bench_artifact_pair(&rt, l, d, b);
+            let pair = match artifact {
+                Ok(p) => p,
+                Err(_) => (
+                    bench_host(&host, KernelForm::Recurrent, l, d, 64, b,
+                               reps)?,
+                    bench_host(&host, KernelForm::Chunkwise, l, d, 64, b,
+                               reps)?,
+                ),
+            };
             println!("speedup L={l} d={d}: {:.1}x",
-                     results[0] / results[1]);
+                     pair.0.median_s / pair.1.median_s);
+            report.push(pair.0);
+            report.push(pair.1);
         }
     }
 
     println!("\n# chunk-size sweep (L=1024, d=64, B=4)");
-    for c in [16, 32, 64, 128] {
-        let name = format!("kernel_chunkwise_L1024_d64_C{c}_B4");
-        let exe = rt.load(&name)?;
-        let args = inputs(4, 1024, 64, 7);
-        bench_result(&name, 1, 5, || {
-            exe.execute(&args)?;
-            Ok(())
-        })?;
+    let cs: &[usize] = if smoke { &[32, 64] } else { &[16, 32, 64, 128] };
+    for &c in cs {
+        let r = bench_artifact(&rt, "chunkwise", 1024, 64, c, 4).or_else(
+            |_| bench_host(&host, KernelForm::Chunkwise, 1024, 64, c, 4,
+                           3))?;
+        report.push(r);
     }
+
+    let path = write_report("fig1_forms", &report)?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

@@ -1,38 +1,112 @@
-//! Bench: the pure-Rust reference implementation — host-side profile of the
-//! recurrent vs chunkwise work (the Fig-1 story independent of XLA), plus
-//! the UT-transform cost.  `cargo bench --bench bench_reference`
+//! Bench: the host kernel layer — parallel blocked chunkwise vs the
+//! scalar recurrent/chunkwise reference paths, the UT-transform cost, and
+//! the literal-creation perf notes.  Writes `BENCH_kernels.json` at the
+//! repo root (archived by the CI bench-smoke job).
+//!
+//!     cargo bench --bench bench_reference
+//!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_reference  # CI
+//!
+//! Headline claim tracked per PR: the parallel blocked chunkwise kernel at
+//! L=4096, d=64, B·H=8 on 8 threads vs token-by-token `delta_recurrent`,
+//! with outputs pinned to the scalar oracle at 1e-4.
 
-use deltanet::reference::{delta_chunkwise, delta_recurrent, random_problem,
-                          ut_transform};
-use deltanet::util::bench::bench;
+use deltanet::kernels::{forward_batched_on, HeadProblem};
+use deltanet::reference::{
+    delta_chunkwise, delta_chunkwise_scalar, delta_recurrent,
+    random_problem, ut_transform,
+};
+use deltanet::util::bench::{bench, smoke_mode, write_report, BenchResult};
+use deltanet::util::threadpool::ThreadPool;
 
 fn main() {
-    println!("# host reference: recurrent vs chunkwise");
-    for (l, d) in [(256, 32), (1024, 64), (4096, 64)] {
+    let smoke = smoke_mode();
+    let mut report: Vec<BenchResult> = vec![];
+
+    // ---- single-sequence: recurrent vs scalar chunkwise vs blocked ----
+    println!("# host single-sequence: recurrent vs chunkwise (C=64)");
+    let single_cases: &[(usize, usize)] =
+        if smoke { &[(256, 32), (1024, 64)] }
+        else { &[(256, 32), (1024, 64), (4096, 64)] };
+    for &(l, d) in single_cases {
         let (q, k, v, beta) = random_problem(l, d, d, 1);
         let r = bench(&format!("host_recurrent_L{l}_d{d}"), 1, 5, || {
             std::hint::black_box(delta_recurrent(&q, &k, &v, &beta, None));
         });
-        let c = bench(&format!("host_chunkwise_L{l}_d{d}_C64"), 1, 5, || {
+        let cs = bench(&format!("host_chunkwise_scalar_L{l}_d{d}_C64"), 1, 5,
+                       || {
+            std::hint::black_box(delta_chunkwise_scalar(&q, &k, &v, &beta,
+                                                        64, None));
+        });
+        let cb = bench(&format!("kernel_chunkwise_blocked_L{l}_d{d}_C64"), 1,
+                       5, || {
             std::hint::black_box(delta_chunkwise(&q, &k, &v, &beta, 64,
                                                  None));
         });
-        println!("  host speedup L={l} d={d}: {:.2}x",
-                 r.median_s / c.median_s);
+        println!("  blocked vs recurrent L={l} d={d}: {:.2}x  \
+                  (vs scalar chunkwise: {:.2}x)",
+                 r.median_s / cb.median_s, cs.median_s / cb.median_s);
+        report.extend([r, cs, cb]);
     }
 
+    // ---- headline: batched multi-head fan-out on the worker pool ------
+    let (l, d, bh, threads) =
+        if smoke { (512, 64, 8, 4) } else { (4096, 64, 8, 8) };
+    println!("\n# batched multi-head: B·H={bh} problems, L={l}, d={d}, \
+              {threads} threads");
+    let problems: Vec<HeadProblem> = (0..bh)
+        .map(|i| {
+            let (q, k, v, beta) = random_problem(l, d, d, 40 + i as u64);
+            HeadProblem::new(q, k, v, beta)
+        })
+        .collect();
+    let pool = ThreadPool::new(threads);
+    let rec = bench(&format!("batched_recurrent_BH{bh}_L{l}_d{d}"), 1, 5,
+                    || {
+        for p in &problems {
+            std::hint::black_box(delta_recurrent(&p.q, &p.k, &p.v, &p.beta,
+                                                 None));
+        }
+    });
+    let par = bench(
+        &format!("kernels_parallel_chunkwise_BH{bh}_L{l}_d{d}_T{threads}"),
+        1, 5, || {
+            std::hint::black_box(forward_batched_on(&pool, &problems, 64));
+        });
+    let speedup = rec.median_s / par.median_s;
+    println!("  -> parallel blocked chunkwise speedup over \
+              delta_recurrent: {speedup:.2}x");
+    report.extend([rec, par]);
+
+    // numerics: the fast path must match the scalar oracle
+    let outs = forward_batched_on(&pool, &problems, 64);
+    let mut worst = 0f32;
+    for (p, f) in problems.iter().zip(&outs) {
+        let want = delta_recurrent(&p.q, &p.k, &p.v, &p.beta, None);
+        assert!(f.o.allclose(&want.o, 1e-4, 1e-4),
+                "parallel kernel diverged from the scalar oracle");
+        assert!(f.state.allclose(&want.state, 1e-4, 1e-4),
+                "parallel kernel state diverged from the scalar oracle");
+        for (a, b) in f.o.data.iter().zip(&want.o.data) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    println!("  numerics OK: max |Δ| vs oracle = {worst:.2e} \
+              (tolerance 1e-4)");
+
+    // ---- UT transform (per chunk) -------------------------------------
     println!("\n# UT transform (per chunk)");
     for c in [16, 64, 128] {
         let (_, k, v, beta) = random_problem(c, 64, 64, 2);
-        bench(&format!("ut_transform_C{c}_d64"), 2, 20, || {
+        report.push(bench(&format!("ut_transform_C{c}_d64"), 2, 20, || {
             std::hint::black_box(ut_transform(&k, &v, &beta));
-        });
+        }));
     }
 
     // §Perf: host→literal path comparison (the to_literal change) — build
-    // a 30M-element tensor the two ways the runtime could
-    println!("\n# literal creation path (30M f32 ≈ e2e param volume)");
-    let data = vec![0.5f32; 30_000_000];
+    // a large tensor the two ways the runtime could
+    let n_lit = if smoke { 3_000_000 } else { 30_000_000 };
+    println!("\n# literal creation path ({n_lit} f32)");
+    let data = vec![0.5f32; n_lit];
     let one_copy = bench("literal_create_from_untyped (1 copy)", 1, 5, || {
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(data.as_ptr() as *const u8,
@@ -40,32 +114,18 @@ fn main() {
         };
         std::hint::black_box(
             xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32, &[30_000_000], bytes).unwrap());
+                xla::ElementType::F32, &[n_lit], bytes).unwrap());
     });
     let two_copy = bench("literal_vec1_reshape      (2 copies)", 1, 5, || {
         std::hint::black_box(
-            xla::Literal::vec1(&data).reshape(&[30_000_000]).unwrap());
+            xla::Literal::vec1(&data).reshape(&[n_lit as i64]).unwrap());
     });
     println!("  -> to_literal single-copy path: {:.2}x faster",
              two_copy.median_s / one_copy.median_s);
+    report.extend([one_copy, two_copy]);
 
-    // §Perf: eval arg-construction — clone-per-batch vs clone-once
-    println!("\n# eval arg construction (113k params, 8 batches)");
-    let params: Vec<xla::Literal> = (0..32)
-        .map(|_| xla::Literal::vec1(&vec![0.1f32; 3536]))
-        .collect();
-    let per_batch = bench("clone params per batch (x8)", 1, 10, || {
-        for _ in 0..8 {
-            let args: Vec<xla::Literal> =
-                params.iter().map(|p| p.clone()).collect();
-            std::hint::black_box(args);
-        }
-    });
-    let once = bench("clone params once", 1, 10, || {
-        let args: Vec<xla::Literal> =
-            params.iter().map(|p| p.clone()).collect();
-        std::hint::black_box(args);
-    });
-    println!("  -> hoisting clones out of the batch loop: {:.2}x less \
-              arg-construction work", per_batch.median_s / once.median_s);
+    match write_report("kernels", &report) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
 }

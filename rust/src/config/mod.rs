@@ -7,8 +7,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context};
-
+use crate::bail;
+use crate::util::error::Context;
 use crate::util::json::Json;
 
 /// Learning-rate schedule (the paper: cosine with warmup, peak 3e-4,

@@ -11,8 +11,10 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context};
 use xla::Literal;
+
+use crate::bail;
+use crate::util::error::Context;
 
 use crate::runtime::{Executable, Role, Runtime};
 use crate::tensor::rng::Rng;

@@ -1,0 +1,285 @@
+//! Host kernel backend: the batched chunkwise/recurrent DeltaNet kernels
+//! exposed under the *kernel-artifact signature*, so coordinator paths
+//! (repro harnesses, benches, decode experiments) can run the paper's
+//! algorithm with no PJRT backend present.
+//!
+//! The Fig-1 kernel artifacts take `q,k,v: [B,L,D]` + `beta: [B,L]` and
+//! return `(o: [B,L,D], state: [B,D,D])`.  [`HostKernelBackend::run`]
+//! accepts and returns exactly that layout; internally the B sequences are
+//! fanned out over the scoped worker pool, one chunkwise (or recurrent)
+//! forward per sequence.  [`HostKernelBackend::decode_step`] is the host
+//! analogue of the `.decode` artifact's sequence-mixing step: it advances
+//! one token for every sequence in the batch against carried per-sequence
+//! states (constant memory in sequence length).
+
+use crate::kernels::{
+    chunkwise::recurrent_step, map_batched_on, HeadProblem,
+};
+use crate::runtime::HostValue;
+use crate::tensor::Mat;
+use crate::util::threadpool::ThreadPool;
+use crate::{bail, ensure};
+
+/// Which form of the kernel to run (the Fig-1 comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelForm {
+    Recurrent,
+    Chunkwise,
+}
+
+pub struct HostKernelBackend {
+    pool: ThreadPool,
+    chunk: usize,
+}
+
+impl HostKernelBackend {
+    /// `threads` worker threads, chunk length `chunk` for the chunkwise
+    /// form.
+    pub fn new(threads: usize, chunk: usize) -> Self {
+        assert!(chunk > 0, "chunk must be positive");
+        HostKernelBackend { pool: ThreadPool::new(threads), chunk }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Run the batched forward under the kernel-artifact signature:
+    /// `q,k,v: [B,L,D]` f32, `beta: [B,L]` f32 →
+    /// `(o: [B,L,D], state: [B,D,D])`, using the backend's chunk length.
+    pub fn run(&self, form: KernelForm, q: &HostValue, k: &HostValue,
+               v: &HostValue, beta: &HostValue)
+               -> crate::Result<(HostValue, HostValue)> {
+        self.run_with_chunk(form, self.chunk, q, k, v, beta)
+    }
+
+    /// [`Self::run`] with an explicit chunk length — lets chunk-size
+    /// sweeps reuse one backend (and its worker pool) across calls.
+    pub fn run_with_chunk(&self, form: KernelForm, chunk: usize,
+                          q: &HostValue, k: &HostValue, v: &HostValue,
+                          beta: &HostValue)
+                          -> crate::Result<(HostValue, HostValue)> {
+        let (b, l, d) = batched_dims(q)?;
+        for (name, t) in [("k", k), ("v", v)] {
+            ensure!(t.shape() == q.shape(),
+                    "{name} shape {:?} != q shape {:?}", t.shape(), q.shape());
+        }
+        ensure!(beta.shape() == &[b, l][..],
+                "beta shape {:?} != [{b}, {l}]", beta.shape());
+
+        let qd = q.as_f32()?;
+        let kd = k.as_f32()?;
+        let vd = v.as_f32()?;
+        let bd = beta.as_f32()?;
+
+        let seq_mat = |data: &[f32], bi: usize| -> crate::Result<Mat> {
+            Mat::from_vec(l, d, data[bi * l * d..(bi + 1) * l * d].to_vec())
+        };
+        let problems: Vec<HeadProblem> = (0..b)
+            .map(|bi| -> crate::Result<HeadProblem> {
+                Ok(HeadProblem::new(
+                    seq_mat(qd, bi)?,
+                    seq_mat(kd, bi)?,
+                    seq_mat(vd, bi)?,
+                    bd[bi * l..(bi + 1) * l].to_vec(),
+                ))
+            })
+            .collect::<crate::Result<_>>()?;
+
+        let outs = match form {
+            KernelForm::Chunkwise => {
+                map_batched_on(&self.pool, &problems,
+                               |p| p.forward(chunk))
+            }
+            // scalar recurrence per sequence, still fanned out over the
+            // pool — the Fig-1 baseline with the same parallel budget
+            KernelForm::Recurrent => {
+                map_batched_on(&self.pool, &problems, |p| {
+                    crate::reference::delta_recurrent(&p.q, &p.k, &p.v,
+                                                      &p.beta, None)
+                })
+            }
+        };
+
+        let mut o_all = vec![0.0f32; b * l * d];
+        let mut s_all = vec![0.0f32; b * d * d];
+        for (bi, f) in outs.iter().enumerate() {
+            o_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&f.o.data);
+            s_all[bi * d * d..(bi + 1) * d * d]
+                .copy_from_slice(&f.state.data);
+        }
+        Ok((HostValue::from_f32(&[b, l, d], o_all)?,
+            HostValue::from_f32(&[b, d, d], s_all)?))
+    }
+
+    /// Chunkwise prefill: consume a prompt segment per sequence and return
+    /// the carried states ([B] mats of [D, D]) for subsequent
+    /// [`Self::decode_step`] calls — the prefill/decode contract of the
+    /// serving path, on the host.
+    pub fn prefill(&self, q: &HostValue, k: &HostValue, v: &HostValue,
+                   beta: &HostValue) -> crate::Result<Vec<Mat>> {
+        let (b, _, d) = batched_dims(q)?;
+        let (_, state) = self.run(KernelForm::Chunkwise, q, k, v, beta)?;
+        let sd = state.as_f32()?;
+        (0..b)
+            .map(|bi| {
+                Mat::from_vec(d, d, sd[bi * d * d..(bi + 1) * d * d].to_vec())
+            })
+            .collect()
+    }
+
+    /// One recurrent decode step for a whole batch: `q,k,v: [B, D]` rows
+    /// for the current token of each sequence, `beta: [B]`; `states` are
+    /// advanced in place and the per-sequence outputs `[B, D]` returned.
+    pub fn decode_step(&self, states: &mut [Mat], q: &Mat, k: &Mat,
+                       v: &Mat, beta: &[f32]) -> crate::Result<Mat> {
+        let b = states.len();
+        ensure!(q.rows == b && k.rows == b && v.rows == b && beta.len() == b,
+                "decode step wants one row per sequence ({b})");
+        let mut out = Mat::zeros(b, v.cols);
+        self.pool.scope(|s| {
+            // one job per sequence: disjoint &mut state and output rows
+            for (bi, (st, orow)) in states
+                .iter_mut()
+                .zip(out.data.chunks_mut(v.cols))
+                .enumerate()
+            {
+                s.spawn(move || {
+                    recurrent_step(st, q.row(bi), k.row(bi), v.row(bi),
+                                   beta[bi], orow);
+                });
+            }
+        });
+        Ok(out)
+    }
+}
+
+fn batched_dims(q: &HostValue) -> crate::Result<(usize, usize, usize)> {
+    match q.shape() {
+        [b, l, d] => Ok((*b, *l, *d)),
+        other => bail!("expected [B, L, D] tensor, got shape {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reference::{delta_recurrent, random_problem};
+
+    fn batched_inputs(b: usize, l: usize, d: usize)
+                      -> (HostValue, HostValue, HostValue, HostValue,
+                          Vec<(Mat, Mat, Mat, Vec<f32>)>) {
+        let mut q_all = vec![0f32; b * l * d];
+        let mut k_all = vec![0f32; b * l * d];
+        let mut v_all = vec![0f32; b * l * d];
+        let mut beta_all = vec![0f32; b * l];
+        let mut problems = vec![];
+        for bi in 0..b {
+            let (q, k, v, beta) = random_problem(l, d, d, 300 + bi as u64);
+            q_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&q.data);
+            k_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&k.data);
+            v_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&v.data);
+            beta_all[bi * l..(bi + 1) * l].copy_from_slice(&beta);
+            problems.push((q, k, v, beta));
+        }
+        (HostValue::from_f32(&[b, l, d], q_all).unwrap(),
+         HostValue::from_f32(&[b, l, d], k_all).unwrap(),
+         HostValue::from_f32(&[b, l, d], v_all).unwrap(),
+         HostValue::from_f32(&[b, l], beta_all).unwrap(),
+         problems)
+    }
+
+    #[test]
+    fn both_forms_match_the_oracle_batched() {
+        let (b, l, d) = (4usize, 64usize, 8usize);
+        let (q, k, v, beta, problems) = batched_inputs(b, l, d);
+        let backend = HostKernelBackend::new(4, 16);
+        for form in [KernelForm::Chunkwise, KernelForm::Recurrent] {
+            let (o, s) = backend.run(form, &q, &k, &v, &beta).unwrap();
+            assert_eq!(o.shape(), &[b, l, d]);
+            assert_eq!(s.shape(), &[b, d, d]);
+            let od = o.as_f32().unwrap();
+            let sd = s.as_f32().unwrap();
+            for (bi, (pq, pk, pv, pb)) in problems.iter().enumerate() {
+                let want = delta_recurrent(pq, pk, pv, pb, None);
+                let got_o = Mat::from_vec(
+                    l, d, od[bi * l * d..(bi + 1) * l * d].to_vec()).unwrap();
+                let got_s = Mat::from_vec(
+                    d, d, sd[bi * d * d..(bi + 1) * d * d].to_vec()).unwrap();
+                assert!(got_o.allclose(&want.o, 1e-4, 1e-4),
+                        "{form:?} seq {bi} output");
+                assert!(got_s.allclose(&want.state, 1e-4, 1e-4),
+                        "{form:?} seq {bi} state");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_full_forward() {
+        let (b, l, d) = (3usize, 32usize, 8usize);
+        let (q, k, v, beta, problems) = batched_inputs(b, l, d);
+        let backend = HostKernelBackend::new(2, 8);
+        // prefill on the first half...
+        let half = l / 2;
+        let take = |t: &HostValue, n: usize| -> HostValue {
+            let td = t.as_f32().unwrap();
+            let mut out = vec![0f32; b * n * d];
+            for bi in 0..b {
+                out[bi * n * d..(bi + 1) * n * d].copy_from_slice(
+                    &td[bi * l * d..bi * l * d + n * d]);
+            }
+            HostValue::from_f32(&[b, n, d], out).unwrap()
+        };
+        let beta_half = {
+            let bd = beta.as_f32().unwrap();
+            let mut out = vec![0f32; b * half];
+            for bi in 0..b {
+                out[bi * half..(bi + 1) * half]
+                    .copy_from_slice(&bd[bi * l..bi * l + half]);
+            }
+            HostValue::from_f32(&[b, half], out).unwrap()
+        };
+        let mut states = backend
+            .prefill(&take(&q, half), &take(&k, half), &take(&v, half),
+                     &beta_half)
+            .unwrap();
+        // ...then decode the second half token by token
+        for t in half..l {
+            let row = |m: &Mat| m.row(t).to_vec();
+            let qs = Mat::from_rows(
+                problems.iter().map(|(pq, ..)| row(pq)).collect()).unwrap();
+            let ks = Mat::from_rows(
+                problems.iter().map(|(_, pk, ..)| row(pk)).collect()).unwrap();
+            let vs = Mat::from_rows(
+                problems.iter().map(|(_, _, pv, _)| row(pv)).collect())
+                .unwrap();
+            let bs: Vec<f32> =
+                problems.iter().map(|(.., pb)| pb[t]).collect();
+            let out = backend.decode_step(&mut states, &qs, &ks, &vs, &bs)
+                .unwrap();
+            for (bi, (pq, pk, pv, pb)) in problems.iter().enumerate() {
+                let want = delta_recurrent(pq, pk, pv, pb, None);
+                for (a, w) in out.row(bi).iter().zip(want.o.row(t)) {
+                    assert!((a - w).abs() < 1e-3,
+                            "seq {bi} token {t}: {a} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let (q, k, v, _, _) = batched_inputs(2, 16, 4);
+        let backend = HostKernelBackend::new(1, 8);
+        let bad_beta = HostValue::from_f32(&[2, 8], vec![0.5; 16]).unwrap();
+        assert!(backend.run(KernelForm::Chunkwise, &q, &k, &v, &bad_beta)
+            .is_err());
+        let flat = HostValue::from_f32(&[2, 64], vec![0.0; 128]).unwrap();
+        assert!(backend.run(KernelForm::Chunkwise, &flat, &k, &v, &bad_beta)
+            .is_err());
+    }
+}

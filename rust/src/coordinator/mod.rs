@@ -4,11 +4,20 @@
 //! The coordinator owns everything the paper's §D recipe puts outside the
 //! compiled step function: LR scheduling, data, logging, checkpoints,
 //! batching policy — while the compiled artifacts own fwd+bwd+AdamW.
+//!
+//! Two compute backends feed these paths:
+//!   * the PJRT runtime executing AOT artifacts (`crate::runtime`), and
+//!   * the batched host kernel backend (`host`), which exposes the
+//!     chunkwise/recurrent DeltaNet kernels under the kernel-artifact
+//!     signature so repro harnesses, benches and decode experiments run
+//!     with no accelerator toolchain present.
 
 pub mod generate;
+pub mod host;
 pub mod server;
 pub mod trainer;
 
 pub use generate::DecodeEngine;
+pub use host::{HostKernelBackend, KernelForm};
 pub use server::{ServeEngine, ServeStats};
 pub use trainer::{EvalOutcome, TrainReport, Trainer};

@@ -12,6 +12,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::err;
+
 use super::generate::{DecodeEngine, Sampling};
 
 #[derive(Debug, Clone)]
@@ -70,7 +72,7 @@ pub struct Ticket {
 
 impl Ticket {
     pub fn wait(self) -> crate::Result<GenResponse> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+        self.rx.recv().map_err(|_| err!("engine dropped reply"))?
     }
 }
 
@@ -102,7 +104,7 @@ impl ServeEngine {
                     // drain the queue, failing every request
                     let msg = format!("engine init failed: {e:#}");
                     while let Ok(p) = rx.recv() {
-                        let _ = p.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                        let _ = p.reply.send(Err(err!("{msg}")));
                     }
                     return;
                 }
@@ -155,8 +157,7 @@ impl ServeEngine {
                     Err(e) => {
                         let msg = format!("decode failed: {e:#}");
                         for p in group {
-                            let _ = p.reply
-                                .send(Err(anyhow::anyhow!(msg.clone())));
+                            let _ = p.reply.send(Err(err!("{msg}")));
                         }
                     }
                 }
@@ -171,7 +172,7 @@ impl ServeEngine {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx.as_ref().unwrap()
             .send(Pending { req, submitted: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+            .map_err(|_| err!("engine stopped"))?;
         Ok(Ticket { rx: reply_rx })
     }
 

@@ -10,8 +10,10 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context};
 use xla::Literal;
+
+use crate::util::error::Context;
+use crate::{bail, ensure};
 
 use crate::config::RunConfig;
 use crate::data::{Batch, TaskGen};
@@ -347,8 +349,8 @@ impl Trainer {
             if matches!(t.role, Role::Param | Role::OptM | Role::OptV) {
                 let data = by_name.get(&t.name)
                     .with_context(|| format!("checkpoint missing {}", t.name))?;
-                anyhow::ensure!(data.len() == t.element_count(),
-                                "size mismatch for {}", t.name);
+                ensure!(data.len() == t.element_count(),
+                        "size mismatch for {}", t.name);
                 self.inputs[i].copy_raw_from(data)?;
             }
         }

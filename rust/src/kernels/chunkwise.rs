@@ -1,0 +1,210 @@
+//! Chunkwise-parallel DeltaNet forward over one sequence, built on the
+//! cache-blocked primitives in `tensor::blocked`.
+//!
+//! Per chunk of C tokens (paper Eq. 8–11, Listing-1 sign convention):
+//!
+//! ```text
+//!   A  = tril(diag(β) K Kᵀ, −1)            strictly-lower, computed only
+//!   T  = (I + A)⁻¹                          on the kept triangle
+//!   W  = T diag(β) K,   U = T diag(β) V     UT transform
+//!   U̅  = U − W S                            fold in the carried state
+//!   O  = Q S + tril(Q Kᵀ) U̅                 intra-chunk outputs
+//!   S += Kᵀ U̅                               inter-chunk recurrence
+//! ```
+//!
+//! Differences from the scalar oracle (`reference::delta_chunkwise_scalar`):
+//! the causal products materialize only their triangle, every matmul is
+//! blocked/accumulating, the chunk loop reuses one set of intermediates,
+//! and a trailing partial chunk (L % C ≠ 0) is supported.
+
+use crate::tensor::blocked::{
+    matmul, matmul_into, matmul_tn_acc, scale_rows, sub_in_place,
+    tril_matmul_nt, tri_inv_unit_lower,
+};
+use crate::tensor::{axpy, Mat};
+
+use super::Forward;
+
+/// Chunkwise forward for one sequence.  `q,k: [L,dk]`, `v: [L,dv]`,
+/// `beta: [L]`; `chunk` may not divide L (the tail chunk is shorter).
+pub fn chunkwise_forward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    chunk: usize,
+    initial_state: Option<&Mat>,
+) -> Forward {
+    let (l, dk) = (q.rows, q.cols);
+    let dv = v.cols;
+    assert!(chunk > 0, "chunk must be positive");
+    assert_eq!(k.rows, l, "k rows");
+    assert_eq!(k.cols, dk, "k cols");
+    assert_eq!(v.rows, l, "v rows");
+    assert_eq!(beta.len(), l, "beta len");
+    if let Some(s0) = initial_state {
+        assert_eq!((s0.rows, s0.cols), (dk, dv), "initial state shape");
+    }
+
+    let mut s = initial_state
+        .cloned()
+        .unwrap_or_else(|| Mat::zeros(dk, dv));
+    let mut o = Mat::zeros(l, dv);
+
+    let mut t0 = 0;
+    while t0 < l {
+        let c = chunk.min(l - t0);
+        let qc = slice_rows(q, t0, c);
+        let kc = slice_rows(k, t0, c);
+        let vc = slice_rows(v, t0, c);
+        let bc = &beta[t0..t0 + c];
+
+        // UT transform: T = (I + tril(diag(β)KKᵀ, −1))⁻¹, W/U = T·diag(β)·{K,V}
+        let kb = scale_rows(&kc, bc);
+        let a = tril_matmul_nt(&kb, &kc, -1);
+        let t = tri_inv_unit_lower(&a);
+        let w = matmul(&t, &kb);
+        let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
+
+        // U̅ = U − W S
+        let ws = matmul(&w, &s);
+        sub_in_place(&mut u_bar, &ws);
+
+        // O_c = Q_c S + tril(Q_c K_cᵀ) U̅
+        let attn = tril_matmul_nt(&qc, &kc, 0);
+        let mut oc = Mat::zeros(c, dv);
+        matmul_into(&mut oc, &qc, &s, false);
+        matmul_into(&mut oc, &attn, &u_bar, true);
+        o.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&oc.data);
+
+        // S += K_cᵀ U̅
+        matmul_tn_acc(&mut s, &kc, &u_bar);
+
+        t0 += c;
+    }
+    Forward { o, state: s }
+}
+
+/// One recurrent delta-rule step (the decode path): reads `q,k,v` rows for
+/// a single token, updates `s` in place and writes the output row.
+/// `s: [dk,dv]`, `out: [dv]`.
+pub fn recurrent_step(
+    s: &mut Mat,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    beta: f32,
+    out: &mut [f32],
+) {
+    let (dk, dv) = (s.rows, s.cols);
+    assert_eq!(q.len(), dk, "q len");
+    assert_eq!(k.len(), dk, "k len");
+    assert_eq!(v.len(), dv, "v len");
+    assert_eq!(out.len(), dv, "out len");
+    // v_old = kᵀ S
+    let mut v_old = vec![0.0f32; dv];
+    for (i, &ki) in k.iter().enumerate() {
+        if ki != 0.0 {
+            axpy(&mut v_old, ki, s.row(i));
+        }
+    }
+    // S += β k (v − v_old)ᵀ
+    for (i, &ki) in k.iter().enumerate() {
+        let c = beta * ki;
+        if c != 0.0 {
+            let srow = s.row_mut(i);
+            for (x, (&vj, &vo)) in srow.iter_mut().zip(v.iter().zip(&v_old)) {
+                *x += c * (vj - vo);
+            }
+        }
+    }
+    // o = q S
+    out.fill(0.0);
+    for (i, &qi) in q.iter().enumerate() {
+        if qi != 0.0 {
+            axpy(out, qi, s.row(i));
+        }
+    }
+}
+
+pub(crate) fn slice_rows(m: &Mat, start: usize, n: usize) -> Mat {
+    Mat {
+        rows: n,
+        cols: m.cols,
+        data: m.data[start * m.cols..(start + n) * m.cols].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reference::{delta_recurrent, random_problem};
+
+    #[test]
+    fn blocked_chunkwise_matches_recurrent_oracle() {
+        let (q, k, v, beta) = random_problem(64, 16, 16, 21);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        for chunk in [1, 3, 16, 64, 128] {
+            let got = chunkwise_forward(&q, &k, &v, &beta, chunk, None);
+            assert!(got.o.allclose(&want.o, 1e-4, 1e-4), "chunk={chunk}");
+            assert!(got.state.allclose(&want.state, 1e-4, 1e-4),
+                    "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn partial_tail_chunk_supported() {
+        // L=80 with C=64 leaves a 16-token tail chunk
+        let (q, k, v, beta) = random_problem(80, 8, 8, 22);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        let got = chunkwise_forward(&q, &k, &v, &beta, 64, None);
+        assert!(got.o.allclose(&want.o, 1e-4, 1e-4));
+        assert!(got.state.allclose(&want.state, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn rectangular_dk_dv() {
+        let (q, k, _, beta) = random_problem(32, 8, 8, 23);
+        let (_, _, v, _) = random_problem(32, 8, 12, 24);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        let got = chunkwise_forward(&q, &k, &v, &beta, 8, None);
+        assert!(got.o.allclose(&want.o, 1e-4, 1e-4));
+        assert!(got.state.allclose(&want.state, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn recurrent_step_chains_to_full_forward() {
+        let (q, k, v, beta) = random_problem(24, 8, 8, 25);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        let mut s = Mat::zeros(8, 8);
+        let mut out = vec![0.0f32; 8];
+        for t in 0..24 {
+            recurrent_step(&mut s, q.row(t), k.row(t), v.row(t), beta[t],
+                           &mut out);
+            for (a, b) in out.iter().zip(want.o.row(t)) {
+                assert!((a - b).abs() < 1e-4, "token {t}");
+            }
+        }
+        assert!(s.allclose(&want.state, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn initial_state_is_respected() {
+        let (q, k, v, beta) = random_problem(32, 8, 8, 26);
+        let full = chunkwise_forward(&q, &k, &v, &beta, 8, None);
+        let h1 = chunkwise_forward(&slice_rows(&q, 0, 16),
+                                   &slice_rows(&k, 0, 16),
+                                   &slice_rows(&v, 0, 16), &beta[..16], 8,
+                                   None);
+        let h2 = chunkwise_forward(&slice_rows(&q, 16, 16),
+                                   &slice_rows(&k, 16, 16),
+                                   &slice_rows(&v, 16, 16), &beta[16..], 8,
+                                   Some(&h1.state));
+        assert!(h2.state.allclose(&full.state, 1e-4, 1e-4));
+        for i in 0..16 {
+            for (a, b) in full.o.row(16 + i).iter().zip(h2.o.row(i)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -6,17 +6,31 @@
 //! loads AOT-compiled HLO artifacts (`runtime`), the data pipeline and
 //! synthetic benchmark generators (`data`), the training/eval/serving
 //! orchestration (`coordinator`), the experiment harnesses that regenerate
-//! every table and figure of the paper (`repro`), and a pure-Rust reference
+//! every table and figure of the paper (`repro`), a pure-Rust reference
 //! implementation of the paper's algorithm used for cross-checking PJRT
-//! numerics and property-based testing (`reference`).
+//! numerics and property-based testing (`reference`), and a batched
+//! multi-threaded host kernel layer implementing the paper's chunkwise
+//! algorithm as a throughput engine (`kernels`).
 //!
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
 //! binary produced from this crate is self-contained at run time.
+
+// Index-heavy numerical kernels: explicit loops and short math names read
+// closer to the paper's equations than iterator chains.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::should_implement_trait,
+    clippy::type_complexity
+)]
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod metrics;
 pub mod reference;
 pub mod repro;
@@ -24,5 +38,6 @@ pub mod runtime;
 pub mod tensor;
 pub mod util;
 
-/// Convenient result alias used across the crate.
-pub type Result<T> = anyhow::Result<T>;
+/// Convenient error/result aliases used across the crate (crate-local
+/// `anyhow` replacement; see `util::error`).
+pub use util::error::{Context, Error, Result};

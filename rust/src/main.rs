@@ -14,9 +14,8 @@
 
 use std::path::PathBuf;
 
-use anyhow::Context;
-
 use deltanet::config::{DataConfig, LrSchedule, RunConfig};
+use deltanet::Context;
 use deltanet::coordinator::generate::Sampling;
 use deltanet::coordinator::server::GenRequest;
 use deltanet::coordinator::{DecodeEngine, ServeEngine, Trainer};
@@ -47,7 +46,7 @@ TASKS: corpus | mqar | mqar:<pairs> | mad:<task> | regbench | recall:<style>
              selective_copy
   recall styles: swde squad fda";
 
-fn parse_task(task: &str, seed: u64) -> anyhow::Result<DataConfig> {
+fn parse_task(task: &str, seed: u64) -> deltanet::Result<DataConfig> {
     Ok(match task {
         "corpus" => DataConfig::Corpus { seed },
         "mqar" => DataConfig::Mqar { num_pairs: 8, seed },
@@ -58,11 +57,11 @@ fn parse_task(task: &str, seed: u64) -> anyhow::Result<DataConfig> {
             DataConfig::Recall { style: t[7..].to_string(), seed },
         t if t.starts_with("mqar:") =>
             DataConfig::Mqar { num_pairs: t[5..].parse()?, seed },
-        other => anyhow::bail!("unknown task {other:?}\n\n{USAGE}"),
+        other => deltanet::bail!("unknown task {other:?}\n\n{USAGE}"),
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deltanet::Result<()> {
     let args = Args::from_env(&[])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
@@ -134,7 +133,7 @@ fn main() -> anyhow::Result<()> {
             }
             let prompt: Vec<i32> = args.get_or("prompt", "1,2,3").split(',')
                 .map(|s| s.trim().parse::<i32>().context("prompt token"))
-                .collect::<anyhow::Result<_>>()?;
+                .collect::<deltanet::Result<_>>()?;
             let temperature: f32 = args.get_parse("temperature", 0.0)?;
             let max_new: usize = args.get_parse("max-new", 16)?;
             let sampling = if temperature > 0.0 {
@@ -174,11 +173,11 @@ fn main() -> anyhow::Result<()> {
                         .collect();
                     serve.submit(GenRequest { prompt, max_new })
                 })
-                .collect::<anyhow::Result<_>>()?;
+                .collect::<deltanet::Result<_>>()?;
             let mut ok = 0;
             for t in tickets {
                 let resp = t.wait()?;
-                anyhow::ensure!(resp.tokens.len() <= max_new);
+                deltanet::ensure!(resp.tokens.len() <= max_new);
                 ok += 1;
             }
             let st = serve.shutdown();
@@ -225,7 +224,7 @@ fn main() -> anyhow::Result<()> {
             }
         },
         other => {
-            anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
+            deltanet::bail!("unknown command {other:?}\n\n{USAGE}");
         }
     }
     Ok(())

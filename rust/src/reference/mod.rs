@@ -5,19 +5,21 @@
 //!      artifacts and compare against this implementation);
 //!   2. proptest target for the WY-representation invariants (chunkwise ≡
 //!      recurrent, eigenvalue bounds, state chaining);
-//!   3. host-side baseline for the Figure-1 style speed comparison
-//!      (recurrent vs chunkwise work profile on the CPU).
+//!   3. scalar *oracle* for the blocked/batched host kernels in
+//!      `crate::kernels` — [`delta_recurrent`] and
+//!      [`delta_chunkwise_scalar`] stay deliberately naive (token loops,
+//!      dense matmuls) so the fast paths have an obviously-correct target.
+//!
+//! [`delta_chunkwise`] itself is routed through the blocked kernel layer;
+//! callers get the throughput engine, tests pin it to the oracle.
 //!
 //! Layout matches the Python side: state S ∈ R^{d_k×d_v} (row convention),
 //! o_t = q_t S,  S_t = (I − β_t k_t k_tᵀ) S_{t-1} + β_t k_t v_tᵀ.
 
 use crate::tensor::{axpy, dot, Mat};
 
-/// Output of a sequence-level forward: per-token outputs + final state.
-pub struct Forward {
-    pub o: Mat,
-    pub state: Mat,
-}
+pub use crate::kernels::Forward;
+pub use crate::tensor::blocked::tri_inv_unit_lower;
 
 /// Token-by-token delta-rule recurrence (DeltaNet, Schlag et al. 2021).
 /// q,k: [L,dk], v: [L,dv], beta: [L].  O(L·dk·dv) work, O(L) steps.
@@ -96,9 +98,19 @@ pub fn ut_transform(k: &Mat, v: &Mat, beta: &[f32]) -> (Mat, Mat) {
 }
 
 /// Chunkwise-parallel DeltaNet forward (the paper's algorithm, Eq. 8–9).
-/// Exactly the computation the Pallas kernel performs, on the host.
+/// Routed through the blocked kernel layer (`crate::kernels`); the scalar
+/// cross-check lives in [`delta_chunkwise_scalar`].
 pub fn delta_chunkwise(q: &Mat, k: &Mat, v: &Mat, beta: &[f32],
                        chunk: usize, initial_state: Option<&Mat>) -> Forward {
+    crate::kernels::chunkwise_forward(q, k, v, beta, chunk, initial_state)
+}
+
+/// Scalar chunkwise forward — exactly the computation the Pallas kernel
+/// performs, written with dense Mat ops; kept as the oracle for the
+/// blocked path.
+pub fn delta_chunkwise_scalar(q: &Mat, k: &Mat, v: &Mat, beta: &[f32],
+                              chunk: usize, initial_state: Option<&Mat>)
+                              -> Forward {
     let (l, dk) = (q.rows, q.cols);
     let dv = v.cols;
     assert!(l % chunk == 0, "L={l} % C={chunk} != 0");
@@ -170,26 +182,6 @@ pub fn delta_attention_matrix(q: &Mat, k: &Mat, beta: &[f32]) -> Mat {
     q.matmul(&k.transpose()).tril(0).matmul(&tm)
 }
 
-/// (I + A)⁻¹ for strictly-lower-triangular A, by forward substitution:
-/// row i of the inverse = e_i − Σ_{j<i} A[i,j] · row j.
-pub fn tri_inv_unit_lower(a: &Mat) -> Mat {
-    let c = a.rows;
-    let mut t = Mat::eye(c);
-    for i in 0..c {
-        for j in 0..i {
-            let aij = a[(i, j)];
-            if aij != 0.0 {
-                let tj = t.row(j).to_vec();
-                let ti = t.row_mut(i);
-                for m in 0..c {
-                    ti[m] -= aij * tj[m];
-                }
-            }
-        }
-    }
-    t
-}
-
 fn slice_rows(m: &Mat, start: usize, n: usize) -> Mat {
     Mat {
         rows: n,
@@ -227,6 +219,20 @@ mod tests {
             let b = delta_chunkwise(&q, &k, &v, &beta, chunk, None);
             assert!(b.o.allclose(&a.o, 1e-4, 1e-4), "chunk={chunk}");
             assert!(b.state.allclose(&a.state, 1e-4, 1e-4), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn blocked_path_equals_scalar_oracle() {
+        let (q, k, v, beta) = random_problem(64, 16, 16, 8);
+        for chunk in [1, 4, 16, 64] {
+            let blocked = delta_chunkwise(&q, &k, &v, &beta, chunk, None);
+            let scalar = delta_chunkwise_scalar(&q, &k, &v, &beta, chunk,
+                                                None);
+            assert!(blocked.o.allclose(&scalar.o, 1e-4, 1e-4),
+                    "chunk={chunk}");
+            assert!(blocked.state.allclose(&scalar.state, 1e-4, 1e-4),
+                    "chunk={chunk}");
         }
     }
 

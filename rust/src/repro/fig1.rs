@@ -6,10 +6,17 @@
 //! the same PJRT pipeline, so the comparison isolates exactly what the
 //! paper isolates: O(L) sequential rank-1 steps vs O(L/C) matmul-dense
 //! steps.  The expected *shape*: speedup grows with L and with d.
+//!
+//! When the kernel artifacts (or the PJRT backend) are unavailable, the
+//! harness falls back to the batched host kernel backend
+//! (`coordinator::host`), which runs the same two forms multi-threaded on
+//! the CPU — the comparison's shape survives the substitution.
 
 use std::time::Instant;
 
+use crate::coordinator::host::{HostKernelBackend, KernelForm};
 use crate::eval::Table;
+use crate::kernels::default_threads;
 use crate::runtime::{HostValue, Runtime};
 use crate::tensor::rng::Rng;
 
@@ -22,16 +29,30 @@ pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
     let mut table = Table::new(
         "Figure 1: chunkwise-parallel vs recurrent DeltaNet forward \
          (B·L = 4096 tokens, C = 64)",
-        &["L", "d_head", "recurrent_ms", "chunkwise_ms", "speedup"]);
+        &["L", "d_head", "backend", "recurrent_ms", "chunkwise_ms",
+          "speedup"]);
+
+    // one pool for every host-fallback measurement in the table
+    let host = HostKernelBackend::new(default_threads(), 64);
 
     for &d in &DS {
         for &l in &LS {
             let b = 4096 / l;
-            let rec = time_kernel(runtime, "recurrent", l, d, 64, b, opts)?;
-            let chk = time_kernel(runtime, "chunkwise", l, d, 64, b, opts)?;
+            let artifact = time_kernel_pair(runtime, l, d, b, opts);
+            let ((rec, chk), backend) = match artifact {
+                Ok(pair) => (pair, "pjrt"),
+                Err(_) => (
+                    (time_host(&host, KernelForm::Recurrent, l, d, 64, b,
+                               opts)?,
+                     time_host(&host, KernelForm::Chunkwise, l, d, 64, b,
+                               opts)?),
+                    "host",
+                ),
+            };
             table.row(vec![
                 l.to_string(),
                 d.to_string(),
+                backend.to_string(),
                 format!("{:.1}", rec * 1e3),
                 format!("{:.1}", chk * 1e3),
                 format!("{:.1}x", rec / chk),
@@ -40,6 +61,14 @@ pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
     }
     table.print();
     Ok(())
+}
+
+/// Both forms through the artifact path, failing if either is unavailable.
+fn time_kernel_pair(runtime: &Runtime, l: usize, d: usize, b: usize,
+                    opts: &ReproOpts) -> crate::Result<(f64, f64)> {
+    let rec = time_kernel(runtime, "recurrent", l, d, 64, b, opts)?;
+    let chk = time_kernel(runtime, "chunkwise", l, d, 64, b, opts)?;
+    Ok((rec, chk))
 }
 
 /// Median-of-N wall time for one kernel artifact execution (seconds).
@@ -80,14 +109,60 @@ pub fn time_kernel(runtime: &Runtime, form: &str, l: usize, d: usize,
     Ok(times[reps / 2])
 }
 
-/// Chunk-size sweep used by the perf study (EXPERIMENTS.md §Perf).
+/// Median-of-N wall time for the host kernel backend on the same problem
+/// (seconds).  The backend (and its worker pool) is shared across calls.
+pub fn time_host(backend: &HostKernelBackend, form: KernelForm, l: usize,
+                 d: usize, c: usize, b: usize, opts: &ReproOpts)
+                 -> crate::Result<f64> {
+    let (q, k, v, beta) = host_inputs(b, l, d, opts.seed);
+    // warmup
+    backend.run_with_chunk(form, c, &q, &k, &v, &beta)?;
+    let reps = 5usize;
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| -> crate::Result<f64> {
+            let t0 = Instant::now();
+            backend.run_with_chunk(form, c, &q, &k, &v, &beta)?;
+            Ok(t0.elapsed().as_secs_f64())
+        })
+        .collect::<crate::Result<_>>()?;
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(times[reps / 2])
+}
+
+/// Random [B,L,D] q/k/v + [B,L] β in the kernel-artifact layout.
+pub fn host_inputs(b: usize, l: usize, d: usize, seed: u64)
+                   -> (HostValue, HostValue, HostValue, HostValue) {
+    let mut rng = Rng::new(seed);
+    let mut tensor = |shape: &[usize]| -> HostValue {
+        let n: usize = shape.iter().product();
+        HostValue::from_f32(shape, (0..n).map(|_| rng.normal()).collect())
+            .expect("shape/data agree by construction")
+    };
+    let q = tensor(&[b, l, d]);
+    let k = tensor(&[b, l, d]);
+    let v = tensor(&[b, l, d]);
+    let beta = HostValue::from_f32(
+        &[b, l],
+        (0..b * l).map(|_| 1.0 / (1.0 + (-rng.normal()).exp())).collect())
+        .expect("shape/data agree by construction");
+    (q, k, v, beta)
+}
+
+/// Chunk-size sweep used by the perf study (EXPERIMENTS.md §Perf), with
+/// the same host fallback as the main harness.
 pub fn chunk_sweep(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
     let mut table = Table::new(
         "Chunk-size ablation: chunkwise kernel, L=1024, d=64, B=4",
         &["C", "ms", "vs C=64"]);
-    let base = time_kernel(runtime, "chunkwise", 1024, 64, 64, 4, opts)?;
+    let host = HostKernelBackend::new(default_threads(), 64);
+    let time = |c: usize| -> crate::Result<f64> {
+        time_kernel(runtime, "chunkwise", 1024, 64, c, 4, opts).or_else(
+            |_| time_host(&host, KernelForm::Chunkwise, 1024, 64, c, 4,
+                          opts))
+    };
+    let base = time(64)?;
     for c in [16, 32, 64, 128] {
-        let t = time_kernel(runtime, "chunkwise", 1024, 64, c, 4, opts)?;
+        let t = time(c)?;
         table.row(vec![
             c.to_string(),
             format!("{:.1}", t * 1e3),

@@ -79,7 +79,7 @@ pub fn train_cell(runtime: &Runtime, artifact: &str, data: DataConfig,
     let report = trainer.train(&cfg, train_task.as_mut(),
                                Some(eval_task.as_mut()))?;
     let (_, outcome) = *report.evals.last()
-        .ok_or_else(|| anyhow::anyhow!("no eval"))?;
+        .ok_or_else(|| crate::err!("no eval"))?;
     Ok((outcome, report.tokens_per_sec))
 }
 
@@ -106,7 +106,7 @@ pub fn run(runtime: &Runtime, which: &str, opts: &ReproOpts) -> crate::Result<()
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment {other:?} \
+        other => crate::bail!("unknown experiment {other:?} \
             (fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|all)"),
     }
 }

@@ -5,8 +5,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context};
-
+use crate::bail;
+use crate::util::error::Context;
 use crate::util::json::Json;
 
 /// Tensor dtype as emitted by the exporter.

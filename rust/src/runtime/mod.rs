@@ -16,7 +16,8 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::Context;
+use crate::ensure;
+use crate::util::error::Context;
 
 pub use manifest::{Dtype, Manifest, Role, TensorSpec};
 pub use values::{init_tensor, HostValue};
@@ -35,7 +36,7 @@ impl Executable {
     /// Execute on host literals; returns per-output literals in manifest
     /// order.  Validates argument count against the manifest.
     pub fn execute(&self, args: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
+        ensure!(
             args.len() == self.manifest.inputs.len(),
             "{}: expected {} inputs, got {}",
             self.manifest.name, self.manifest.inputs.len(), args.len()
@@ -44,7 +45,7 @@ impl Executable {
             .with_context(|| format!("executing {}", self.manifest.name))?;
         let mut tuple = bufs[0][0].to_literal_sync()?;
         let outs = tuple.decompose_tuple()?;
-        anyhow::ensure!(
+        ensure!(
             outs.len() == self.manifest.outputs.len(),
             "{}: expected {} outputs, got {}",
             self.manifest.name, self.manifest.outputs.len(), outs.len()
@@ -100,6 +101,13 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Whether a real PJRT backend is linked in (false under the offline
+    /// `xla` shim — artifact execution will fail and callers should use
+    /// the host kernel backend or skip).
+    pub fn backend_available() -> bool {
+        xla::pjrt_available()
     }
 
     pub fn artifacts_dir(&self) -> &Path {

@@ -2,8 +2,10 @@
 //! plus manifest-driven parameter initialization (the Rust side owns init —
 //! Python never materializes a parameter).
 
-use anyhow::{bail, Context};
 use xla::{ElementType, Literal};
+
+use crate::bail;
+use crate::util::error::Context;
 
 use super::manifest::{Dtype, TensorSpec};
 use crate::tensor::rng::Rng;

@@ -1,0 +1,228 @@
+//! Cache-blocked matmul / tril-matmul primitives backing the chunkwise
+//! kernel layer (`crate::kernels`).
+//!
+//! The naive `Mat::matmul` streams the whole right-hand operand once per
+//! output row; for the chunk-sized operands the kernels use (C×C, C×d with
+//! C, d ∈ {16..128}) that already fits cache, but state-sized and
+//! attention-shaped products benefit from i/k tiling and from computing
+//! only the causal triangle.  These free functions also provide in-place /
+//! accumulating variants so the per-chunk hot loop allocates O(C·d)
+//! instead of reallocating every intermediate.
+
+use super::{axpy, dot, Mat};
+
+/// Row tile for the output (fits comfortably in L1 alongside a B panel).
+const TILE_I: usize = 32;
+/// Depth tile: one panel of B rows streamed per output tile.
+const TILE_K: usize = 64;
+
+/// out = A·B (or out += A·B when `accumulate`), i/k-tiled.
+pub fn matmul_into(out: &mut Mat, a: &Mat, b: &Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows, "matmul dims");
+    assert_eq!(out.rows, a.rows, "matmul out rows");
+    assert_eq!(out.cols, b.cols, "matmul out cols");
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    let (m, kd, n) = (a.rows, a.cols, b.cols);
+    for ib in (0..m).step_by(TILE_I) {
+        let ie = (ib + TILE_I).min(m);
+        for kb in (0..kd).step_by(TILE_K) {
+            let ke = (kb + TILE_K).min(kd);
+            for i in ib..ie {
+                let arow = &a.data[i * kd..(i + 1) * kd];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for k in kb..ke {
+                    let av = arow[k];
+                    if av != 0.0 {
+                        axpy(orow, av, &b.data[k * n..(k + 1) * n]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A·B as a fresh matrix (blocked).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    matmul_into(&mut out, a, b, true);
+    out
+}
+
+/// tril(A·Bᵀ, diag) computing ONLY the kept triangle (the causal masks of
+/// the chunkwise form: diag=0 for Q·Kᵀ, diag=−1 for the UT transform's
+/// strictly-lower K·Kᵀ).  Entries above the diagonal are exact zeros.
+pub fn tril_matmul_nt(a: &Mat, b: &Mat, diag: i64) -> Mat {
+    assert_eq!(a.cols, b.cols, "tril_matmul_nt dims");
+    let (m, n) = (a.rows, b.rows);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let hi = (i as i64 + diag + 1).clamp(0, n as i64) as usize;
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate().take(hi) {
+            *o = dot(arow, b.row(j));
+        }
+    }
+    out
+}
+
+/// out += Aᵀ·B with `a: [t,m]`, `b: [t,n]`, `out: [m,n]` — the inter-chunk
+/// state update S += Kᵀ·U̅, streamed row-by-row over t.
+pub fn matmul_tn_acc(out: &mut Mat, a: &Mat, b: &Mat) {
+    assert_eq!(a.rows, b.rows, "matmul_tn_acc dims");
+    assert_eq!(out.rows, a.cols, "matmul_tn_acc out rows");
+    assert_eq!(out.cols, b.cols, "matmul_tn_acc out cols");
+    for t in 0..a.rows {
+        let arow = a.row(t);
+        let brow = b.row(t);
+        for (i, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                axpy(out.row_mut(i), av, brow);
+            }
+        }
+    }
+}
+
+/// a −= b, elementwise.
+pub fn sub_in_place(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x -= y;
+    }
+}
+
+/// diag(s)·A — rows of `a` scaled by `s`.
+pub fn scale_rows(a: &Mat, s: &[f32]) -> Mat {
+    assert_eq!(a.rows, s.len(), "scale_rows dims");
+    let mut out = a.clone();
+    for (i, &si) in s.iter().enumerate() {
+        for x in out.row_mut(i) {
+            *x *= si;
+        }
+    }
+    out
+}
+
+/// (I + A)⁻¹ for strictly-lower-triangular A, by forward substitution:
+/// row i of the inverse = e_i − Σ_{j<i} A[i,j] · row j.  Exploits the
+/// triangular fill-in (row j of the inverse has support [0, j]).
+pub fn tri_inv_unit_lower(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols, "tri_inv_unit_lower wants square");
+    let c = a.rows;
+    let mut t = Mat::eye(c);
+    for i in 0..c {
+        for j in 0..i {
+            let aij = a[(i, j)];
+            if aij != 0.0 {
+                // rows i and j of t are disjoint slices; split to borrow both
+                let (head, tail) = t.data.split_at_mut(i * c);
+                let tj = &head[j * c..j * c + j + 1];
+                let ti = &mut tail[..c];
+                for (x, y) in ti.iter_mut().zip(tj) {
+                    *x -= aij * y;
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        a.matmul(b)
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        let mut rng = Rng::new(11);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (33, 65, 17), (64, 64, 64),
+                          (100, 70, 130)] {
+            let a = Mat::random(m, k, &mut rng, 1.0);
+            let b = Mat::random(k, n, &mut rng, 1.0);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.allclose(&want, 1e-4, 1e-4), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let mut rng = Rng::new(12);
+        let a = Mat::random(8, 6, &mut rng, 1.0);
+        let b = Mat::random(6, 4, &mut rng, 1.0);
+        let mut out = Mat::zeros(8, 4);
+        matmul_into(&mut out, &a, &b, false);
+        matmul_into(&mut out, &a, &b, true);
+        let want = naive_matmul(&a, &b).scale(2.0);
+        assert!(out.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn tril_nt_masks_exactly() {
+        let mut rng = Rng::new(14);
+        let a = Mat::random(12, 6, &mut rng, 1.0);
+        let b = Mat::random(12, 6, &mut rng, 1.0);
+        for diag in [-1i64, 0] {
+            let got = tril_matmul_nt(&a, &b, diag);
+            let want = a.matmul(&b.transpose()).tril(diag);
+            assert!(got.allclose(&want, 1e-4, 1e-4), "diag={diag}");
+            // kept-out entries are exact zeros, not epsilon garbage
+            for i in 0..12 {
+                for j in 0..12 {
+                    if (j as i64) > (i as i64) + diag {
+                        assert_eq!(got[(i, j)], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tn_acc_matches_transpose_matmul() {
+        let mut rng = Rng::new(15);
+        let a = Mat::random(10, 6, &mut rng, 1.0);
+        let b = Mat::random(10, 4, &mut rng, 1.0);
+        let mut out = Mat::random(6, 4, &mut rng, 1.0);
+        let want = out.add(&a.transpose().matmul(&b));
+        matmul_tn_acc(&mut out, &a, &b);
+        assert!(out.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn scale_rows_and_sub() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let s = scale_rows(&a, &[2.0, 0.5]);
+        assert_eq!(s.data, vec![2.0, 4.0, 1.5, 2.0]);
+        let mut x = a.clone();
+        sub_in_place(&mut x, &a);
+        assert!(x.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tri_inv_really_inverts() {
+        let mut rng = Rng::new(16);
+        for c in [1usize, 2, 7, 24, 64] {
+            let mut a = Mat::zeros(c, c);
+            for i in 0..c {
+                for j in 0..i {
+                    a[(i, j)] = rng.normal() * 0.5;
+                }
+            }
+            let inv = tri_inv_unit_lower(&a);
+            let mut ia = Mat::eye(c);
+            for i in 0..c {
+                for j in 0..i {
+                    ia[(i, j)] += a[(i, j)];
+                }
+            }
+            let prod = ia.matmul(&inv);
+            assert!(prod.allclose(&Mat::eye(c), 1e-3, 1e-3), "C={c}");
+        }
+    }
+}

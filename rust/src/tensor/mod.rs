@@ -3,11 +3,14 @@
 //! Used by the pure-Rust reference implementation of the paper's algorithm
 //! (`crate::reference`), the synthetic data generators, and the evaluation
 //! harnesses.  Row-major, no broadcasting magic — just the operations the
-//! DeltaNet algebra needs, written to be obviously correct.
+//! DeltaNet algebra needs, written to be obviously correct.  The
+//! throughput-oriented counterparts (tiled/accumulating matmuls, causal
+//! triangle products) live in [`blocked`] and back `crate::kernels`.
 
+pub mod blocked;
 pub mod rng;
 
-use anyhow::bail;
+use crate::bail;
 
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]

@@ -2,7 +2,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 #[derive(Debug, Clone)]
 pub struct Args {

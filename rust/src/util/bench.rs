@@ -1,8 +1,13 @@
 //! Bench harness (criterion is unavailable offline): warmup + repeated
 //! timing with median/p10/p90, printed in a stable grep-able format used by
-//! `cargo bench` targets and EXPERIMENTS.md.
+//! `cargo bench` targets and EXPERIMENTS.md, plus JSON reports the CI
+//! bench-smoke job archives (`BENCH_<suite>.json` at the repo root) so the
+//! perf trajectory is tracked per PR.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -20,6 +25,40 @@ impl BenchResult {
             self.name, self.median_s * 1e3, self.p10_s * 1e3,
             self.p90_s * 1e3, self.reps);
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("reps", Json::num(self.reps as f64)),
+            ("median_s", Json::num(self.median_s)),
+            ("p10_s", Json::num(self.p10_s)),
+            ("p90_s", Json::num(self.p90_s)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(BenchResult {
+            name: v.req("name")?.as_str()?.to_string(),
+            reps: v.req("reps")?.as_usize()?,
+            median_s: v.req("median_s")?.as_f64()?,
+            p10_s: v.req("p10_s")?.as_f64()?,
+            p90_s: v.req("p90_s")?.as_f64()?,
+        })
+    }
+}
+
+fn summarize(name: &str, mut times: Vec<f64>) -> BenchResult {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        reps: times.len(),
+        median_s: q(0.5),
+        p10_s: q(0.1),
+        p90_s: q(0.9),
+    };
+    r.print();
+    r
 }
 
 /// Time `f` with `warmup` unrecorded calls then `reps` recorded ones.
@@ -34,24 +73,14 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F)
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
-    let r = BenchResult {
-        name: name.to_string(),
-        reps,
-        median_s: q(0.5),
-        p10_s: q(0.1),
-        p90_s: q(0.9),
-    };
-    r.print();
-    r
+    summarize(name, times)
 }
 
 /// Fallible variant: aborts the bench on the first error.
 pub fn bench_result<F>(name: &str, warmup: usize, reps: usize, mut f: F)
-                       -> anyhow::Result<BenchResult>
+                       -> crate::Result<BenchResult>
 where
-    F: FnMut() -> anyhow::Result<()>,
+    F: FnMut() -> crate::Result<()>,
 {
     for _ in 0..warmup {
         f()?;
@@ -62,17 +91,36 @@ where
         f()?;
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
-    let r = BenchResult {
-        name: name.to_string(),
-        reps,
-        median_s: q(0.5),
-        p10_s: q(0.1),
-        p90_s: q(0.9),
-    };
-    r.print();
-    Ok(r)
+    Ok(summarize(name, times))
+}
+
+/// Repository root: parent of the crate dir (`rust/`), falling back to the
+/// current directory for out-of-tree checkouts.
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Serialize a bench suite to `BENCH_<suite>.json` at the repo root and
+/// return the path (CI uploads these as artifacts).
+pub fn write_report(suite: &str, results: &[BenchResult])
+                    -> crate::Result<PathBuf> {
+    let path = repo_root().join(format!("BENCH_{suite}.json"));
+    let json = Json::obj(vec![
+        ("suite", Json::str(suite)),
+        ("results",
+         Json::Arr(results.iter().map(BenchResult::to_json).collect())),
+    ]);
+    std::fs::write(&path, json.render() + "\n")?;
+    Ok(path)
+}
+
+/// True when the bench should run a reduced problem set (CI smoke job sets
+/// `DELTANET_BENCH_SMOKE=1`).
+pub fn smoke_mode() -> bool {
+    std::env::var_os("DELTANET_BENCH_SMOKE").is_some()
 }
 
 #[cfg(test)]
@@ -89,7 +137,42 @@ mod tests {
 
     #[test]
     fn fallible_propagates() {
-        let e = bench_result("t", 0, 1, || anyhow::bail!("boom"));
+        let e = bench_result("t", 0, 1, || crate::bail!("boom"));
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = BenchResult {
+            name: "kernel_x".into(),
+            reps: 5,
+            median_s: 0.125,
+            p10_s: 0.1,
+            p90_s: 0.2,
+        };
+        let back =
+            BenchResult::from_json(&Json::parse(&r.to_json().render())
+                .unwrap()).unwrap();
+        assert_eq!(back.name, "kernel_x");
+        assert_eq!(back.reps, 5);
+        assert!((back.median_s - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_written_at_repo_root() {
+        let r = BenchResult {
+            name: "t".into(),
+            reps: 1,
+            median_s: 1.0,
+            p10_s: 1.0,
+            p90_s: 1.0,
+        };
+        let path = write_report("selftest", &[r]).unwrap();
+        assert!(path.ends_with("BENCH_selftest.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.req("suite").unwrap().as_str().unwrap(), "selftest");
+        assert_eq!(v.req("results").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,181 @@
+//! Crate-local error handling replacing the external `anyhow` dependency
+//! (offline build — no external crates).
+//!
+//! Mirrors the subset of the anyhow API the crate uses:
+//!   * [`Error`] — a message-carrying error; any `std::error::Error`
+//!     converts into it (so `?` works on io/parse/xla results),
+//!   * [`Result`] — alias with `Error` as the default error type,
+//!   * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!     and `Option`,
+//!   * `bail!` / `ensure!` / `err!` macros (exported at the crate root).
+//!
+//! Context is accumulated as an `outer: inner` message chain, matching how
+//! the coordinator formats errors for operators (`{e:#}` and `{e}` render
+//! the same chain).
+
+use std::fmt;
+
+/// A boxed-free, message-chained error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    /// Wrap with an outer context layer: `ctx: self`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement std::error::Error — exactly like
+// anyhow — which is what makes this blanket conversion coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` / `Option`).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(ctx)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self, f: F,
+    ) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self, f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn std_errors_convert_and_chain() {
+        let e = io_fail().unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.starts_with("reading config: "), "got {msg:?}");
+        // alternate formatting renders the same chain
+        assert_eq!(format!("{e:#}"), msg);
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        let y: Option<u32> = Some(7);
+        assert_eq!(y.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(4).unwrap(), 8);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative"));
+        assert!(format!("{}", f(101).unwrap_err()).contains("too big"));
+        let e = err!("ad-hoc {}", 5);
+        assert_eq!(format!("{e}"), "ad-hoc 5");
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x == 3);
+            Ok(())
+        }
+        assert!(f(3).is_ok());
+        assert!(format!("{}", f(4).unwrap_err()).contains("x == 3"));
+    }
+}

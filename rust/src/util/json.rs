@@ -7,7 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {

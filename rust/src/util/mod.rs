@@ -1,9 +1,11 @@
 //! In-tree utilities replacing unavailable external crates (offline build):
-//! JSON, CLI argument parsing, bench timing, property-test harness, and a
-//! small thread pool.
+//! error handling (anyhow), JSON (serde), CLI argument parsing, bench
+//! timing (criterion), a property-test harness (proptest), and a scoped
+//! thread pool (rayon).
 
 pub mod args;
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod threadpool;

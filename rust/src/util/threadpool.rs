@@ -1,8 +1,24 @@
-//! Minimal scoped worker pool over std::thread (tokio/rayon unavailable
-//! offline).  Used by the serving engine and parallel data generation.
+//! Worker pool over std::thread (tokio/rayon unavailable offline), used by
+//! the batched host kernels, the serving engine and parallel data
+//! generation.
+//!
+//! Three submission APIs:
+//!   * [`ThreadPool::execute`] — fire-and-forget (legacy surface),
+//!   * [`ThreadPool::submit`]  — returns a [`JobHandle`] that can be
+//!     `join()`ed and reports whether the job panicked,
+//!   * [`ThreadPool::scope`]   — crossbeam-style scope: jobs may borrow
+//!     from the caller's stack; the scope joins every spawned job before
+//!     returning (this is the fan-out primitive the kernel layer uses).
+//!
+//! Workers catch panics from jobs, so a panicking job can no longer kill a
+//! worker thread and wedge the pool (the old behaviour: after any worker
+//! death, `execute` would eventually panic on a closed channel and the
+//! only completion barrier was `Drop`).
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -22,7 +38,11 @@ impl ThreadPool {
                 std::thread::spawn(move || loop {
                     let job = rx.lock().unwrap().recv();
                     match job {
-                        Ok(job) => job(),
+                        // a panicking job must not kill the worker; panics
+                        // are surfaced through JobHandle / scope instead
+                        Ok(job) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
                         Err(_) => break,
                     }
                 })
@@ -31,8 +51,66 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send(&self, job: Job) {
+        // workers are panic-proof, so the channel can only close on Drop;
+        // &self guarantees the pool (and tx) is still alive here
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(job)
+            .expect("pool workers exited");
+    }
+
+    /// Fire-and-forget execution (completion barrier: `submit`/`scope`, or
+    /// dropping the pool).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+        self.send(Box::new(f));
+    }
+
+    /// Run a job and hand back a joinable handle.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> JobHandle {
+        let state = Arc::new(JobState::default());
+        let s2 = state.clone();
+        self.send(Box::new(move || {
+            let ok = catch_unwind(AssertUnwindSafe(f)).is_ok();
+            *s2.done.lock().unwrap() = Some(ok);
+            s2.cv.notify_all();
+        }));
+        JobHandle { state }
+    }
+
+    /// Run a group of jobs that may borrow from the enclosing stack frame.
+    /// Every job spawned on the scope is complete when `scope` returns; if
+    /// any job panicked (and the closure itself did not), `scope` panics.
+    ///
+    /// Do not call `scope` from inside a pool job: with all workers busy
+    /// waiting on inner scopes the pool can deadlock.
+    pub fn scope<'env, R>(
+        &self,
+        f: impl FnOnce(&Scope<'_, 'env>) -> R,
+    ) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState::default()),
+            _env: std::marker::PhantomData,
+        };
+        let out = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // join spawned jobs even if the closure panicked — the jobs borrow
+        // from the caller's frame and must not outlive it
+        scope.wait_all();
+        let panics = scope.state.panics.load(Ordering::SeqCst);
+        match out {
+            Err(p) => resume_unwind(p),
+            Ok(r) => {
+                assert!(panics == 0, "{panics} scoped job(s) panicked");
+                r
+            }
+        }
     }
 }
 
@@ -41,6 +119,102 @@ impl Drop for ThreadPool {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+#[derive(Default)]
+struct JobState {
+    /// None = running, Some(ok) = finished
+    done: Mutex<Option<bool>>,
+    cv: Condvar,
+}
+
+/// Handle to a submitted job.
+pub struct JobHandle {
+    state: Arc<JobState>,
+}
+
+/// The joined job panicked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobPanicked;
+
+impl std::fmt::Display for JobPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("pool job panicked")
+    }
+}
+
+impl std::error::Error for JobPanicked {}
+
+impl JobHandle {
+    /// True once the job has finished (without blocking).
+    pub fn is_done(&self) -> bool {
+        self.state.done.lock().unwrap().is_some()
+    }
+
+    /// Block until the job finishes; `Err` if it panicked.
+    pub fn join(self) -> Result<(), JobPanicked> {
+        let mut g = self.state.done.lock().unwrap();
+        while g.is_none() {
+            g = self.state.cv.wait(g).unwrap();
+        }
+        if g.unwrap() {
+            Ok(())
+        } else {
+            Err(JobPanicked)
+        }
+    }
+}
+
+#[derive(Default)]
+struct ScopeState {
+    pending: Mutex<usize>,
+    cv: Condvar,
+    panics: AtomicUsize,
+}
+
+/// Spawning surface handed to the closure of [`ThreadPool::scope`].
+/// Invariant in `'env` so borrowed data cannot be shortened under it.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    _env: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Spawn a job that may borrow data living at least as long as the
+    /// scope ('env).
+    pub fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = self.state.clone();
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: `scope` joins every spawned job (wait_all) before it
+        // returns, on both the normal and panicking path, so the 'env
+        // borrows captured by `job` strictly outlive its execution.  The
+        // Scope type is invariant in 'env, preventing lifetime shrinking.
+        let job: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        self.pool.send(Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                state.panics.fetch_add(1, Ordering::SeqCst);
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.cv.notify_all();
+            }
+        }));
+    }
+
+    fn wait_all(&self) {
+        let mut pending = self.state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.state.cv.wait(pending).unwrap();
         }
     }
 }
@@ -62,5 +236,85 @@ mod tests {
         }
         drop(pool); // joins workers
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_is_joinable() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<JobHandle> = (0..32)
+            .map(|_| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // the join IS the barrier — no drop needed
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    /// Regression: a panicking job used to kill its worker thread; enough
+    /// of them wedged the pool and made `execute` panic on a dead channel.
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = ThreadPool::new(2);
+        // more panicking jobs than workers
+        let handles: Vec<JobHandle> =
+            (0..8).map(|_| pool.submit(|| panic!("job boom"))).collect();
+        for h in handles {
+            assert_eq!(h.join(), Err(JobPanicked));
+        }
+        // pool still fully functional afterwards
+        let counter = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<JobHandle> = (0..16)
+            .map(|_| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_joins_and_allows_stack_borrows() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 128];
+        pool.scope(|s| {
+            for (i, x) in data.iter_mut().enumerate() {
+                s.spawn(move || {
+                    *x = i * 2;
+                });
+            }
+        });
+        // all writes are complete and visible after scope returns
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn scope_with_no_jobs_is_fine() {
+        let pool = ThreadPool::new(1);
+        let r = pool.scope(|_| 42);
+        assert_eq!(r, 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped job")]
+    fn scope_propagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| {});
+            s.spawn(|| panic!("inner boom"));
+        });
     }
 }

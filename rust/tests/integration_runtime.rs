@@ -1,17 +1,29 @@
 //! Integration: PJRT artifact loading + execution, cross-checked against
-//! the pure-Rust reference implementation.  Requires `make artifacts`.
+//! the pure-Rust reference implementation.  Requires `make artifacts` and
+//! a real PJRT backend — in the offline build (xla shim, no artifacts)
+//! these tests skip themselves.
 
 use deltanet::reference;
 use deltanet::runtime::{HostValue, Role, Runtime};
 use deltanet::tensor::Mat;
 
-fn runtime() -> Runtime {
-    Runtime::new("artifacts").expect("PJRT runtime (run `make artifacts`)")
+/// PJRT runtime if the backend and artifacts are both present, else None
+/// (the test should return early — skipped).
+fn runtime() -> Option<Runtime> {
+    if !Runtime::backend_available() {
+        eprintln!("skipping: PJRT backend not linked (offline build)");
+        return None;
+    }
+    if !std::path::Path::new("artifacts").is_dir() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT runtime"))
 }
 
 #[test]
 fn list_and_load_artifacts() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let names = rt.list_artifacts().unwrap();
     assert!(names.iter().any(|n| n == "deltanet_tiny.train"),
             "run `make artifacts` first; found {names:?}");
@@ -25,7 +37,7 @@ fn list_and_load_artifacts() {
 
 #[test]
 fn kernel_artifact_matches_rust_reference() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (b, l, d) = (4usize, 1024usize, 64usize);
     let exe = rt.load("kernel_chunkwise_L1024_d64_C64_B4").unwrap();
 
@@ -69,7 +81,7 @@ fn kernel_artifact_matches_rust_reference() {
 fn chunkwise_and_recurrent_artifacts_agree() {
     // the two forms are different programs; on the same inputs they must
     // produce identical outputs (Fig. 1's correctness precondition)
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (b, l, d) = (16usize, 256usize, 32usize);
     let chunk = rt.load("kernel_chunkwise_L256_d32_C64_B16").unwrap();
     let rec = rt.load("kernel_recurrent_L256_d32_C64_B16").unwrap();
@@ -103,7 +115,7 @@ fn chunkwise_and_recurrent_artifacts_agree() {
 
 #[test]
 fn manifest_roles_and_carry_wiring() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load("deltanet_tiny.train").unwrap();
     let m = &exe.manifest;
     // every param output maps back to a param input of the same shape
@@ -123,7 +135,7 @@ fn manifest_roles_and_carry_wiring() {
 
 #[test]
 fn eval_artifact_runs_and_scores() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load("deltanet_tiny.eval").unwrap();
     let m = &exe.manifest;
     let inputs = exe.init_inputs(3).unwrap();
@@ -147,7 +159,8 @@ fn eval_artifact_runs_and_scores() {
 
 #[test]
 fn missing_artifact_errors_cleanly() {
-    let rt = runtime();
+    // runs even in the offline build: lookup fails before any execution
+    let rt = Runtime::new("artifacts").expect("runtime handle");
     assert!(!rt.has_artifact("nope_nothing"));
     let err = match rt.load("nope_nothing") {
         Ok(_) => panic!("load of missing artifact succeeded"),

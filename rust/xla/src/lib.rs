@@ -1,0 +1,448 @@
+//! Host-side shim of the `xla-rs` PJRT surface the coordinator uses.
+//!
+//! The real build links a vendored `xla-rs` (PJRT CPU plugin + HLO
+//! compiler).  That toolchain is not available in the offline CI image, so
+//! this crate provides the same API with two behaviours:
+//!
+//!   * **Literals are fully functional** — host tensors (shape + dtype +
+//!     bytes) with creation, reshape, raw copies and typed readback.  All
+//!     coordinator plumbing that moves data in and out of literals works.
+//!   * **Compilation/execution is unavailable** — `PjRtClient::compile`
+//!     returns an error, so artifact-driven paths fail cleanly and callers
+//!     (tests, benches, repro harnesses) fall back to the host kernel
+//!     backend or skip.  `pjrt_available()` reports which build this is.
+//!
+//! Swapping the real bindings back in is a Cargo-level change only; no
+//! coordinator code references this crate's stub-ness beyond
+//! `pjrt_available()`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Whether a real PJRT backend is linked in.  This shim always says no.
+pub fn pjrt_available() -> bool {
+    false
+}
+
+// --------------------------------------------------------------- errors
+
+/// Error type mirroring xla-rs (message-only in the shim).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// --------------------------------------------------------------- dtypes
+
+/// Element types of array literals (subset the exporter emits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn element_size_in_bytes(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::U8 => 1,
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// HLO-level primitive types (alias surface used by literal constructors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+impl PrimitiveType {
+    pub fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::Pred => ElementType::Pred,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::S64 => ElementType::S64,
+            PrimitiveType::U8 => ElementType::U8,
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F64 => ElementType::F64,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+}
+
+// --------------------------------------------------------------- shapes
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>().max(1) as usize
+    }
+}
+
+// -------------------------------------------------------------- literal
+
+/// A host tensor: shape + dtype + raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+fn dims_product(dims: &[i64]) -> usize {
+    dims.iter().product::<i64>().max(1) as usize
+}
+
+impl Literal {
+    /// Scalar literal (rank 0).
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = vec![0u8; std::mem::size_of::<T>()];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                &v as *const T as *const u8,
+                data.as_mut_ptr(),
+                data.len(),
+            );
+        }
+        Literal {
+            shape: ArrayShape { dims: vec![], ty: T::TY },
+            data,
+        }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        let bytes = values.len() * std::mem::size_of::<T>();
+        let mut data = vec![0u8; bytes];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                values.as_ptr() as *const u8,
+                data.as_mut_ptr(),
+                bytes,
+            );
+        }
+        Literal {
+            shape: ArrayShape {
+                dims: vec![values.len() as i64],
+                ty: T::TY,
+            },
+            data,
+        }
+    }
+
+    /// Zero-initialized literal of a given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let ty = ty.element_type();
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let bytes = dims_product(&dims) * ty.element_size_in_bytes();
+        Literal {
+            shape: ArrayShape { dims, ty },
+            data: vec![0u8; bytes],
+        }
+    }
+
+    /// Literal of a given shape from raw bytes (single copy).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let want = dims_product(&dims) * ty.element_size_in_bytes();
+        if data.len() != want {
+            return Err(Error::msg(format!(
+                "shape {dims:?} ({ty:?}) wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { dims, ty },
+            data: data.to_vec(),
+        })
+    }
+
+    /// Same element count, new dims.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if dims_product(dims) != self.shape.element_count() {
+            return Err(Error::msg(format!(
+                "cannot reshape {:?} to {dims:?}",
+                self.shape.dims
+            )));
+        }
+        let mut out = self.clone();
+        out.shape.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.element_count()
+    }
+
+    /// Typed readback (copies).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.shape.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal is {:?}, asked for {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        let n = self.shape.element_count();
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // byte-wise copy: the Vec<u8> buffer has no alignment guarantee for T
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * std::mem::size_of::<T>(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Overwrite the buffer from typed host data (shape unchanged).
+    pub fn copy_raw_from<T: NativeType>(&mut self, data: &[T]) -> Result<()> {
+        if self.shape.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal is {:?}, copying {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        if data.len() != self.shape.element_count() {
+            return Err(Error::msg(format!(
+                "literal holds {} elems, copying {}",
+                self.shape.element_count(),
+                data.len()
+            )));
+        }
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr() as *const u8,
+                self.data.as_mut_ptr(),
+                self.data.len(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Split a tuple literal into its elements.  The shim never produces
+    /// tuple literals (execution is unavailable), so this always errors.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::msg("not a tuple literal (shim build)"))
+    }
+}
+
+// ------------------------------------------------------------------ HLO
+
+/// Parsed HLO module text (opaque; the shim only checks readability).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::msg(format!("reading {}: {e}", path.display()))
+        })?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation built from an HLO proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+// ----------------------------------------------------------------- PJRT
+
+/// PJRT client handle.  Construction succeeds so that coordinator wiring
+/// (artifact listing, manifests, host fallbacks) works; only `compile`
+/// reports the missing backend.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-shim (no PJRT)".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(
+            "PJRT backend not linked in this build; artifact execution is \
+             unavailable (host kernel backend and reference paths still \
+             work)",
+        ))
+    }
+}
+
+/// A compiled executable (never constructed by the shim).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg("PJRT backend not linked in this build"))
+    }
+}
+
+/// A device buffer (never constructed by the shim).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg("PJRT backend not linked in this build"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+        lit.copy_raw_from(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::S32, &[4]);
+        lit.copy_raw_from(&[7i32, 8, 9, 10]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn vec1_reshape_and_untyped() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(lit.reshape(&[3]).is_err());
+
+        let bytes: Vec<u8> = [1.5f32, -2.5]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let u = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(u.to_vec::<f32>().unwrap(), vec![1.5, -2.5]);
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let lit = Literal::vec1(&[1i32, 2]);
+        assert!(lit.to_vec::<f32>().is_err());
+        let mut lit = lit;
+        assert!(lit.copy_raw_from(&[1.0f32, 2.0]).is_err());
+        assert!(lit.copy_raw_from(&[1i32]).is_err());
+    }
+
+    #[test]
+    fn compile_reports_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(!pjrt_available());
+        assert!(client.platform_name().contains("shim"));
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: String::new(),
+        });
+        let err = client.compile(&comp).err().unwrap();
+        assert!(format!("{err}").contains("PJRT"));
+    }
+}
