@@ -3,6 +3,11 @@
 //! the inference-side payoff of the linear-transformer state (no KV cache
 //! for DeltaNet layers).
 //!
+//! Works with or without artifacts: when the PJRT backend and the
+//! `.decode` artifact are present the engine runs the compiled step,
+//! otherwise it serves a host model through the same `DecodeEngine` —
+//! the Backend-trait serving path.
+//!
 //!     cargo run --release --example serve_decode
 
 use std::time::{Duration, Instant};
@@ -10,24 +15,44 @@ use std::time::{Duration, Instant};
 use deltanet::coordinator::generate::Sampling;
 use deltanet::coordinator::server::{GenRequest, ServeEngine};
 use deltanet::coordinator::DecodeEngine;
+use deltanet::kernels::default_threads;
+use deltanet::model::{HostModel, HostModelCfg};
 use deltanet::runtime::{Manifest, Runtime};
 
 fn main() -> deltanet::Result<()> {
     let artifact = "deltanet_tiny";
-    let man = Manifest::load(std::path::Path::new(
-        &format!("artifacts/{artifact}.decode.manifest.json")))?;
-    let cfg = man.config.as_ref().expect("model config");
-    let vocab = cfg.vocab_size as i32;
+    let man_path = std::path::PathBuf::from(
+        format!("artifacts/{artifact}.decode.manifest.json"));
+    let use_artifact = Runtime::backend_available() && man_path.exists();
+
     println!("== serving demo: {artifact} ==");
-    println!("arch {} | d_model {} | state per layer-head: {}x{} f32 \
-              (constant in sequence length)",
-             cfg.arch, cfg.d_model,
-             cfg.d_model / cfg.n_heads, cfg.d_model / cfg.n_heads);
+    let (vocab, batch) = if use_artifact {
+        let man = Manifest::load(&man_path)?;
+        let cfg = man.config.as_ref().expect("model config");
+        println!("backend pjrt | arch {} | d_model {} | state per \
+                  layer-head: {}x{} f32 (constant in sequence length)",
+                 cfg.arch, cfg.d_model,
+                 cfg.d_model / cfg.n_heads, cfg.d_model / cfg.n_heads);
+        (cfg.vocab_size as i32, man.batch)
+    } else {
+        let cfg = HostModelCfg::tiny();
+        println!("backend host (no decode artifact) | d_model {} | state \
+                  per layer-head: {}x{} f32 (constant in sequence length)",
+                 cfg.d_model,
+                 cfg.d_model / cfg.n_heads, cfg.d_model / cfg.n_heads);
+        (cfg.vocab as i32, 8)
+    };
 
     let serve = ServeEngine::spawn(
         move || {
-            let rt = Runtime::new("artifacts")?;
-            DecodeEngine::new(&rt, "deltanet_tiny", 0)
+            if use_artifact {
+                let rt = Runtime::new("artifacts")?;
+                DecodeEngine::new(&rt, "deltanet_tiny", 0)
+            } else {
+                let model = HostModel::new(HostModelCfg::tiny(), 0,
+                                           default_threads())?;
+                Ok(DecodeEngine::host(model, 8, 64))
+            }
         },
         Sampling::TopK { temperature: 0.8, k: 8 },
         Duration::from_millis(10),
@@ -62,8 +87,7 @@ fn main() -> deltanet::Result<()> {
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
     println!("\n{} requests in {} batches (occupancy {:.1}/{})",
-             st.requests, st.batches, st.mean_batch_occupancy(),
-             man.batch);
+             st.requests, st.batches, st.mean_batch_occupancy(), batch);
     println!("latency p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms",
              p(0.5), p(0.9), p(0.99));
     println!("decode throughput {:.0} tok/s | wall {:.2}s",

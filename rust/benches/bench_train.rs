@@ -1,0 +1,82 @@
+//! Host training smoke bench: N AdamW steps of the tiny DeltaNet model on
+//! MQAR through `Backend::train_step`, reporting the loss trajectory and
+//! tokens/sec.  CI runs this with DELTANET_BENCH_SMOKE=1 (20 steps) and
+//! archives `BENCH_train.json` next to `BENCH_kernels.json`, so both the
+//! perf trajectory AND the does-it-still-learn signal are tracked per PR.
+//!
+//!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_train
+
+use std::time::Instant;
+
+use deltanet::config::DataConfig;
+use deltanet::coordinator::{host_training_backend, Backend};
+use deltanet::data::build_task;
+use deltanet::kernels::default_threads;
+use deltanet::model::{HostModel, HostModelCfg};
+use deltanet::util::bench::{repo_root, smoke_mode, BenchResult};
+use deltanet::util::json::Json;
+
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+
+fn main() -> deltanet::Result<()> {
+    let steps = if smoke_mode() { 20 } else { 100 };
+    let lr = 1e-2f32;
+
+    let model = HostModel::new(HostModelCfg::tiny(), 7, default_threads())?;
+    println!("host training bench: {} params, {BATCH}x{SEQ} tokens/step, \
+              {steps} steps", model.param_count());
+    let mut backend = host_training_backend(model);
+    let mut task = build_task(&DataConfig::Mqar { num_pairs: 8, seed: 7 });
+
+    let mut losses: Vec<f32> = Vec::with_capacity(steps);
+    let mut times: Vec<f64> = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for s in 0..steps {
+        let batch = task.sample(BATCH, SEQ);
+        let ts = Instant::now();
+        let loss = Backend::train_step(&mut backend, &batch, lr)?;
+        times.push(ts.elapsed().as_secs_f64());
+        losses.push(loss);
+        if s % 10 == 0 || s + 1 == steps {
+            println!("step {s:>4}  loss {loss:.4}");
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let tokens_per_sec = (steps * BATCH * SEQ) as f64 / total;
+
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let step_bench = BenchResult {
+        name: "host_train_step_tiny_mqar".to_string(),
+        reps: steps,
+        median_s: q(0.5),
+        p10_s: q(0.1),
+        p90_s: q(0.9),
+    };
+    step_bench.print();
+
+    let (loss_first, loss_last) = (losses[0], losses[steps - 1]);
+    println!("loss {loss_first:.4} -> {loss_last:.4} | \
+              {tokens_per_sec:.0} tok/s | {total:.1}s");
+
+    // BENCH_kernels.json's schema plus the training trajectory
+    let path = repo_root().join("BENCH_train.json");
+    let json = Json::obj(vec![
+        ("suite", Json::str("train")),
+        ("steps", Json::num(steps as f64)),
+        ("loss_first", Json::num(loss_first as f64)),
+        ("loss_last", Json::num(loss_last as f64)),
+        ("tokens_per_sec", Json::num(tokens_per_sec)),
+        ("losses",
+         Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect())),
+        ("results", Json::Arr(vec![step_bench.to_json()])),
+    ]);
+    std::fs::write(&path, json.render() + "\n")?;
+    println!("report: {}", path.display());
+
+    deltanet::ensure!(loss_last.is_finite() && loss_last < loss_first,
+                      "training smoke did not reduce loss: \
+                       {loss_first} -> {loss_last}");
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! The `Backend` trait: one compute contract for every coordinator path.
+//!
+//! Before this trait, each harness carried its own ad-hoc branching between
+//! the PJRT artifact path and the host kernel path (`repro::fig1` matched on
+//! artifact errors per cell, serving required a `.decode` artifact, training
+//! required a `.train` artifact).  Now a single `Box<dyn Backend>` is picked
+//! up front and every consumer — `DecodeEngine`, `coordinator::server`,
+//! `coordinator::trainer`, the repro harnesses — drives the same five
+//! operations:
+//!
+//! | op              | PJRT artifact path          | host kernel path      |
+//! |-----------------|-----------------------------|-----------------------|
+//! | `run`           | `kernel_*` HLO execution    | `kernels::batch`      |
+//! | `prefill`       | chunkwise run, split states | same, host kernels    |
+//! | `decode_step`   | (via `.decode` artifacts)   | `recurrent_step` pool |
+//! | `train_step`    | (via `.train` artifacts)    | `model::HostModel`    |
+//!
+//! The PJRT impl covers the kernel-artifact surface (`run`/`prefill`);
+//! decode/train on PJRT stay with their dedicated artifact engines
+//! (`DecodeEngine::new`, `Trainer`), which this trait's host impls mirror.
+
+use std::path::Path;
+
+use crate::data::Batch;
+use crate::kernels::default_threads;
+use crate::model::HostModel;
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Mat;
+use crate::{bail, ensure};
+
+use super::host::{HostKernelBackend, KernelForm};
+
+/// A compute backend for the DeltaNet sequence-mixing kernels plus the
+/// optional training step.  Object-safe: harnesses hold `Box<dyn Backend>`.
+pub trait Backend {
+    /// Short stable identifier ("host" / "pjrt") for logs and tables.
+    fn name(&self) -> &'static str;
+
+    /// Batched forward under the kernel-artifact signature:
+    /// `q,k,v: [B,L,D]`, `beta: [B,L]` → `(o: [B,L,D], state: [B,D,D])`,
+    /// at the backend's default chunk length.
+    fn run(&self, form: KernelForm, q: &HostValue, k: &HostValue,
+           v: &HostValue, beta: &HostValue)
+           -> crate::Result<(HostValue, HostValue)>;
+
+    /// [`Backend::run`] with an explicit chunk length (chunk-size sweeps).
+    fn run_with_chunk(&self, form: KernelForm, chunk: usize, q: &HostValue,
+                      k: &HostValue, v: &HostValue, beta: &HostValue)
+                      -> crate::Result<(HostValue, HostValue)>;
+
+    /// Consume a prompt segment per sequence (chunkwise) and return the
+    /// carried `[D, D]` state per sequence for [`Backend::decode_step`].
+    fn prefill(&self, q: &HostValue, k: &HostValue, v: &HostValue,
+               beta: &HostValue) -> crate::Result<Vec<Mat>> {
+        let (_, state) = self.run(KernelForm::Chunkwise, q, k, v, beta)?;
+        let sd = state.as_f32()?;
+        let (b, d) = match state.shape() {
+            [b, d, d2] if d == d2 => (*b, *d),
+            other => bail!("prefill expected [B,D,D] state, got {other:?}"),
+        };
+        (0..b)
+            .map(|bi| {
+                Mat::from_vec(d, d,
+                              sd[bi * d * d..(bi + 1) * d * d].to_vec())
+            })
+            .collect()
+    }
+
+    /// Advance every sequence one token: `q,k,v: [B, D]` rows, `beta: [B]`;
+    /// `states` updated in place, per-sequence outputs `[B, D]` returned.
+    fn decode_step(&self, states: &mut [Mat], q: &Mat, k: &Mat, v: &Mat,
+                   beta: &[f32]) -> crate::Result<Mat>;
+
+    /// One optimizer step on a batch; returns the loss.  Backends without
+    /// a training path (or without a model attached) error cleanly.
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> crate::Result<f32>;
+}
+
+impl Backend for HostKernelBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn run(&self, form: KernelForm, q: &HostValue, k: &HostValue,
+           v: &HostValue, beta: &HostValue)
+           -> crate::Result<(HostValue, HostValue)> {
+        HostKernelBackend::run(self, form, q, k, v, beta)
+    }
+
+    fn run_with_chunk(&self, form: KernelForm, chunk: usize, q: &HostValue,
+                      k: &HostValue, v: &HostValue, beta: &HostValue)
+                      -> crate::Result<(HostValue, HostValue)> {
+        HostKernelBackend::run_with_chunk(self, form, chunk, q, k, v, beta)
+    }
+
+    fn prefill(&self, q: &HostValue, k: &HostValue, v: &HostValue,
+               beta: &HostValue) -> crate::Result<Vec<Mat>> {
+        HostKernelBackend::prefill(self, q, k, v, beta)
+    }
+
+    fn decode_step(&self, states: &mut [Mat], q: &Mat, k: &Mat, v: &Mat,
+                   beta: &[f32]) -> crate::Result<Mat> {
+        HostKernelBackend::decode_step(self, states, q, k, v, beta)
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> crate::Result<f32> {
+        HostKernelBackend::train_step(self, batch, lr)
+    }
+}
+
+/// The PJRT artifact path behind the [`Backend`] contract.  `run` derives
+/// the kernel artifact name from the input shapes
+/// (`kernel_{form}_L{l}_d{d}_C{c}_B{b}` — the exporter's naming scheme) and
+/// executes it; decode/train report that they live in the dedicated
+/// artifact engines.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    chunk: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime, chunk: usize) -> crate::Result<Self> {
+        ensure!(chunk > 0, "chunk must be > 0");
+        Ok(PjrtBackend { runtime, chunk })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&self, form: KernelForm, q: &HostValue, k: &HostValue,
+           v: &HostValue, beta: &HostValue)
+           -> crate::Result<(HostValue, HostValue)> {
+        self.run_with_chunk(form, self.chunk, q, k, v, beta)
+    }
+
+    fn run_with_chunk(&self, form: KernelForm, chunk: usize, q: &HostValue,
+                      k: &HostValue, v: &HostValue, beta: &HostValue)
+                      -> crate::Result<(HostValue, HostValue)> {
+        let (b, l, d) = match q.shape() {
+            [b, l, d] => (*b, *l, *d),
+            other => bail!("expected [B, L, D] tensor, got shape {other:?}"),
+        };
+        let form_s = match form {
+            KernelForm::Recurrent => "recurrent",
+            KernelForm::Chunkwise => "chunkwise",
+        };
+        let name = format!("kernel_{form_s}_L{l}_d{d}_C{chunk}_B{b}");
+        let exe = self.runtime.load(&name)?;
+        let args = [q, k, v, beta]
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<crate::Result<Vec<_>>>()?;
+        let outs = exe.execute(&args)?;
+        let man = &exe.manifest;
+        let oi = man.output_index("o").unwrap_or(0);
+        let si = man.output_index("state").unwrap_or(1);
+        ensure!(outs.len() > oi.max(si),
+                "{name} returned {} outputs", outs.len());
+        Ok((HostValue::from_literal(&outs[oi])?,
+            HostValue::from_literal(&outs[si])?))
+    }
+
+    fn decode_step(&self, _states: &mut [Mat], _q: &Mat, _k: &Mat,
+                   _v: &Mat, _beta: &[f32]) -> crate::Result<Mat> {
+        bail!("pjrt kernel backend has no single-step path; build a \
+               DecodeEngine from a .decode artifact")
+    }
+
+    fn train_step(&mut self, _batch: &Batch, _lr: f32)
+                  -> crate::Result<f32> {
+        bail!("pjrt kernel backend does not train; drive a .train \
+               artifact through coordinator::Trainer")
+    }
+}
+
+/// One backend decision for a whole harness: the PJRT artifact path when a
+/// real PJRT plugin is linked in, the host kernel backend otherwise (the
+/// offline build — `Runtime::backend_available()` is false under the `xla`
+/// shim, where artifact execution cannot succeed).
+pub fn select_kernel_backend(artifacts_dir: &Path, chunk: usize)
+                             -> crate::Result<Box<dyn Backend>> {
+    if Runtime::backend_available() {
+        Ok(Box::new(PjrtBackend::new(Runtime::new(artifacts_dir)?, chunk)?))
+    } else {
+        Ok(Box::new(HostKernelBackend::new(default_threads(), chunk)))
+    }
+}
+
+/// Host backend preloaded with a freshly initialized DeltaNet model, ready
+/// for [`Backend::train_step`] — the artifact-free training entry point.
+pub fn host_training_backend(model: HostModel) -> HostKernelBackend {
+    let chunk = model.cfg.chunk;
+    HostKernelBackend::new(default_threads(), chunk).with_model(model)
+}

@@ -2,12 +2,19 @@
 //! the whole point of linear-attention models (no KV cache for DeltaNet
 //! layers; state is a fixed d_k×d_v matrix per head).
 //!
-//! The `.decode` artifact steps a whole batch one token forward:
-//! (params, state, token[B], pos) → (logits[B,V], state').  The engine owns
-//! sampling and the prompt/generation bookkeeping: rows of a batch may have
-//! prompts of different lengths — all rows step together from pos 0, each
-//! row feeds prompt tokens until its prompt is exhausted, then feeds its own
-//! previous sample (standard static-batch decoding).
+//! Two engines behind one interface:
+//!
+//! * **Artifact** — the `.decode` artifact steps a whole batch one token
+//!   forward: (params, state, token[B], pos) → (logits[B,V], state').
+//! * **Host** — a `model::HostModel` steps the same contract in pure Rust,
+//!   with the per-head delta-rule recurrence routed through
+//!   `coordinator::Backend::decode_step`, so serving works with no
+//!   artifacts on disk.
+//!
+//! The engine owns sampling and the prompt/generation bookkeeping: rows of
+//! a batch may have prompts of different lengths — all rows step together
+//! from pos 0, each row feeds prompt tokens until its prompt is exhausted,
+//! then feeds its own previous sample (standard static-batch decoding).
 
 use std::sync::Arc;
 
@@ -16,8 +23,14 @@ use xla::Literal;
 use crate::bail;
 use crate::util::error::Context;
 
+use crate::kernels::default_threads;
+use crate::model::HostModel;
 use crate::runtime::{Executable, Role, Runtime};
 use crate::tensor::rng::Rng;
+use crate::tensor::Mat;
+
+use super::backend::Backend;
+use super::host::HostKernelBackend;
 
 /// Sampling policy.
 #[derive(Debug, Clone, Copy)]
@@ -28,16 +41,29 @@ pub enum Sampling {
 }
 
 pub struct DecodeEngine {
-    exe: Arc<Executable>,
-    /// full decode input vector (params + state + token + pos)
-    inputs: Vec<Literal>,
-    carry: Vec<(usize, usize)>, // output idx -> input idx (state tensors)
-    idx_token: usize,
-    idx_pos: usize,
-    state_inputs: Vec<usize>,
+    inner: Inner,
     pub batch: usize,
     pub vocab: usize,
     pub max_seq_len: usize,
+}
+
+enum Inner {
+    Artifact {
+        exe: Arc<Executable>,
+        /// full decode input vector (params + state + token + pos)
+        inputs: Vec<Literal>,
+        carry: Vec<(usize, usize)>, // output idx -> input idx (state)
+        idx_token: usize,
+        idx_pos: usize,
+        state_inputs: Vec<usize>,
+    },
+    Host {
+        model: HostModel,
+        backend: HostKernelBackend,
+        /// `[d_h, d_h]` per (layer, head, sequence), layout
+        /// `(layer*H + head)*batch + b` (see `HostModel::decode_states`)
+        states: Vec<Mat>,
+    },
 }
 
 impl DecodeEngine {
@@ -61,35 +87,73 @@ impl DecodeEngine {
         let batch = man.batch;
         let max_seq_len = man.config.as_ref().unwrap().max_seq_len;
         Ok(DecodeEngine {
-            exe,
-            inputs,
-            carry,
-            idx_token,
-            idx_pos,
-            state_inputs,
+            inner: Inner::Artifact {
+                exe,
+                inputs,
+                carry,
+                idx_token,
+                idx_pos,
+                state_inputs,
+            },
             batch,
             vocab,
             max_seq_len,
         })
     }
 
+    /// Build around a host model — the artifact-free serving path.  The
+    /// engine owns the model; its parameters ARE the weights served.
+    pub fn host(model: HostModel, batch: usize, max_seq_len: usize) -> Self {
+        let vocab = model.cfg.vocab;
+        let states = model.decode_states(batch);
+        let backend =
+            HostKernelBackend::new(default_threads(), model.cfg.chunk);
+        DecodeEngine {
+            inner: Inner::Host { model, backend, states },
+            batch,
+            vocab,
+            max_seq_len,
+        }
+    }
+
+    /// Which engine decodes: "pjrt" (artifact) or "host".
+    pub fn backend_name(&self) -> &'static str {
+        match &self.inner {
+            Inner::Artifact { .. } => "pjrt",
+            Inner::Host { .. } => "host",
+        }
+    }
+
     /// Install trained parameters (full names, e.g. "params.embed").
+    /// Artifact engine only — the host engine owns its model's weights.
     pub fn set_params(&mut self, params: &[(String, Literal)]) -> crate::Result<()> {
-        let man = self.exe.manifest.clone();
+        let Inner::Artifact { exe, inputs, .. } = &mut self.inner else {
+            bail!("host decode engine owns its parameters");
+        };
+        let man = exe.manifest.clone();
         for (name, lit) in params {
             let i = man.input_index(name)?;
-            self.inputs[i] = lit.clone();
+            inputs[i] = lit.clone();
         }
         Ok(())
     }
 
     /// Zero all recurrent state (start fresh sequences).
     pub fn reset_state(&mut self) -> crate::Result<()> {
-        let man = self.exe.manifest.clone();
-        for &i in &self.state_inputs {
-            let spec = &man.inputs[i];
-            let zeros = vec![0f32; spec.element_count()];
-            self.inputs[i].copy_raw_from(&zeros)?;
+        match &mut self.inner {
+            Inner::Artifact { exe, inputs, state_inputs, .. } => {
+                let man = exe.manifest.clone();
+                for &i in state_inputs.iter() {
+                    let spec = &man.inputs[i];
+                    let zeros = vec![0f32; spec.element_count()];
+                    inputs[i].copy_raw_from(&zeros)?;
+                }
+            }
+            Inner::Host { states, .. } => {
+                for m in states.iter_mut() {
+                    m.data.fill(0.0);
+                }
+            }
         }
         Ok(())
     }
@@ -103,15 +167,26 @@ impl DecodeEngine {
         if pos >= self.max_seq_len {
             bail!("pos {} exceeds decode cache bound {}", pos, self.max_seq_len);
         }
-        self.inputs[self.idx_token].copy_raw_from(tokens)?;
-        self.inputs[self.idx_pos].copy_raw_from(&[pos as i32])?;
-        let mut outs = self.exe.execute(&self.inputs)?;
-        let man = &self.exe.manifest;
-        let logits = outs[man.output_index("logits")?].to_vec::<f32>()?;
-        for &(o, i) in &self.carry {
-            self.inputs[i] = std::mem::replace(&mut outs[o], Literal::scalar(0f32));
+        match &mut self.inner {
+            Inner::Artifact { exe, inputs, carry, idx_token, idx_pos, .. } => {
+                inputs[*idx_token].copy_raw_from(tokens)?;
+                inputs[*idx_pos].copy_raw_from(&[pos as i32])?;
+                let mut outs = exe.execute(inputs)?;
+                let man = &exe.manifest;
+                let logits = outs[man.output_index("logits")?].to_vec::<f32>()?;
+                for &(o, i) in carry.iter() {
+                    inputs[i] =
+                        std::mem::replace(&mut outs[o], Literal::scalar(0f32));
+                }
+                Ok(logits)
+            }
+            Inner::Host { model, backend, states } => {
+                // route the delta-rule recurrence through the Backend trait
+                model.decode_step(states, tokens, |sts, q, k, v, beta| {
+                    Backend::decode_step(backend, sts, q, k, v, beta)
+                })
+            }
         }
-        Ok(logits)
     }
 
     /// Generate continuations for a batch of prompts (token ids).  Returns
@@ -193,6 +268,7 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::HostModelCfg;
 
     #[test]
     fn argmax_works() {
@@ -227,5 +303,44 @@ mod tests {
                 &l, Sampling::TopK { temperature: 0.01, k: 0 }, &mut rng) == 2)
             .count();
         assert!(hits > 195);
+    }
+
+    fn host_engine() -> DecodeEngine {
+        let model = HostModel::new(HostModelCfg::tiny(), 3, 2).unwrap();
+        DecodeEngine::host(model, 4, 32)
+    }
+
+    #[test]
+    fn host_engine_generates_without_artifacts() {
+        let mut eng = host_engine();
+        assert_eq!(eng.backend_name(), "host");
+        assert_eq!(eng.vocab, HostModelCfg::tiny().vocab);
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![1, 2, 3], vec![4, 5], vec![6], vec![7, 8, 9]];
+        let gens = eng.generate(&prompts, 6, Sampling::Greedy, 0).unwrap();
+        assert_eq!(gens.len(), 4);
+        for g in &gens {
+            assert_eq!(g.len(), 6);
+            assert!(g.iter().all(|&t| (t as usize) < eng.vocab));
+        }
+    }
+
+    #[test]
+    fn host_engine_decode_is_deterministic_after_reset() {
+        let mut eng = host_engine();
+        let toks = [1i32, 2, 3, 4];
+        let a = eng.step(&toks, 0).unwrap();
+        eng.reset_state().unwrap();
+        let b = eng.step(&toks, 0).unwrap();
+        assert_eq!(a, b);
+        // rejects the artifact-only param override
+        assert!(eng.set_params(&[]).is_err());
+    }
+
+    #[test]
+    fn host_engine_bounds_checked() {
+        let mut eng = host_engine();
+        assert!(eng.step(&[1, 2], 0).is_err()); // wrong batch
+        assert!(eng.step(&[1, 2, 3, 4], 32).is_err()); // pos out of range
     }
 }

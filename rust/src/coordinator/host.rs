@@ -12,11 +12,14 @@
 //! one token for every sequence in the batch against carried per-sequence
 //! states (constant memory in sequence length).
 
+use crate::data::Batch;
 use crate::kernels::{
     chunkwise::recurrent_step, map_batched_on, HeadProblem,
 };
+use crate::model::{AdamW, HostModel, Optimizer};
 use crate::runtime::HostValue;
 use crate::tensor::Mat;
+use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 use crate::{bail, ensure};
 
@@ -30,6 +33,9 @@ pub enum KernelForm {
 pub struct HostKernelBackend {
     pool: ThreadPool,
     chunk: usize,
+    /// Model + optimizer state backing `Backend::train_step` (attached
+    /// via [`Self::with_model`]; `None` for pure kernel workloads).
+    model: Option<(HostModel, Optimizer)>,
 }
 
 impl HostKernelBackend {
@@ -37,7 +43,47 @@ impl HostKernelBackend {
     /// form.
     pub fn new(threads: usize, chunk: usize) -> Self {
         assert!(chunk > 0, "chunk must be positive");
-        HostKernelBackend { pool: ThreadPool::new(threads), chunk }
+        HostKernelBackend {
+            pool: ThreadPool::new(threads),
+            chunk,
+            model: None,
+        }
+    }
+
+    /// Attach a host DeltaNet model (with fresh AdamW state) so the
+    /// backend can serve `Backend::train_step` — the offline replacement
+    /// for a `.train` artifact.
+    pub fn with_model(mut self, model: HostModel) -> Self {
+        self.model = Some((model, Optimizer::AdamW(AdamW::new())));
+        self
+    }
+
+    pub fn model(&self) -> Option<&HostModel> {
+        self.model.as_ref().map(|(m, _)| m)
+    }
+
+    pub fn model_mut(&mut self) -> Option<&mut HostModel> {
+        self.model.as_mut().map(|(m, _)| m)
+    }
+
+    /// One AdamW step of the attached model on `batch`; returns the loss.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32)
+                      -> crate::Result<f32> {
+        let (model, opt) = self
+            .model
+            .as_mut()
+            .context("no host model attached \
+                      (HostKernelBackend::with_model)")?;
+        let (loss, grads) = model.loss_and_grads(batch)?;
+        ensure!(loss.is_finite(), "non-finite host training loss");
+        let gt = grads.tensors();
+        let mut params: Vec<&mut Mat> = model
+            .param_entries_mut()
+            .into_iter()
+            .map(|(_, p)| p)
+            .collect();
+        opt.step(&mut params, &gt, lr);
+        Ok(loss)
     }
 
     pub fn threads(&self) -> usize {

@@ -12,11 +12,15 @@
 //!     signature so repro harnesses, benches and decode experiments run
 //!     with no accelerator toolchain present.
 
+pub mod backend;
 pub mod generate;
 pub mod host;
 pub mod server;
 pub mod trainer;
 
+pub use backend::{
+    host_training_backend, select_kernel_backend, Backend, PjrtBackend,
+};
 pub use generate::DecodeEngine;
 pub use host::{HostKernelBackend, KernelForm};
 pub use server::{ServeEngine, ServeStats};

@@ -27,7 +27,9 @@ pub struct GenResponse {
     pub tokens: Vec<i32>,
     /// time from submission to batch start
     pub queue_ms: f64,
-    /// time inside the decode loop (whole batch)
+    /// decode time attributed to THIS request: the batch's decode wall
+    /// time scaled by this request's share of decode steps (a short
+    /// request in a group with a long one doesn't inherit the long tail)
     pub decode_ms: f64,
 }
 
@@ -138,19 +140,28 @@ impl ServeEngine {
                 st.batch_decode_ms += decode_ms;
                 match result {
                     Ok(gens) => {
+                        let mut done = Vec::with_capacity(group.len());
+                        let mut steps = Vec::with_capacity(group.len());
                         for (p, g) in group.into_iter().zip(gens) {
-                            let queue_ms = t0.duration_since(p.submitted)
-                                .as_secs_f64() * 1e3;
                             let mut tokens = g;
                             tokens.truncate(p.req.max_new);
+                            // decode steps this request occupied the batch
+                            steps.push(p.req.prompt.len() + tokens.len());
+                            done.push((p, tokens));
+                        }
+                        let shares = attribute_decode_ms(decode_ms, &steps);
+                        for ((p, tokens), decode_ms_r)
+                            in done.into_iter().zip(shares) {
+                            let queue_ms = t0.duration_since(p.submitted)
+                                .as_secs_f64() * 1e3;
                             st.requests += 1;
                             st.tokens_generated += tokens.len();
                             st.total_queue_ms += queue_ms;
-                            st.total_decode_ms += decode_ms;
+                            st.total_decode_ms += decode_ms_r;
                             let _ = p.reply.send(Ok(GenResponse {
                                 tokens,
                                 queue_ms,
-                                decode_ms,
+                                decode_ms: decode_ms_r,
                             }));
                         }
                     }
@@ -190,6 +201,17 @@ impl ServeEngine {
     }
 }
 
+/// Split a batch's decode wall time across its requests in proportion to
+/// the decode steps each occupied (prompt + generated tokens).  The longest
+/// request gets the full batch time — it was on the critical path the whole
+/// way; shorter riders get their share, not the stragglers' tail.
+fn attribute_decode_ms(batch_ms: f64, steps: &[usize]) -> Vec<f64> {
+    let max_steps = steps.iter().copied().max().unwrap_or(0).max(1);
+    steps.iter()
+        .map(|&s| batch_ms * s as f64 / max_steps as f64)
+        .collect()
+}
+
 impl Drop for ServeEngine {
     fn drop(&mut self) {
         drop(self.tx.take());
@@ -216,5 +238,16 @@ mod tests {
         assert!((st.mean_latency_ms() - 10.0).abs() < 1e-9);
         assert!((st.tokens_per_sec() - 4000.0).abs() < 1.0);
         assert!((st.mean_batch_occupancy() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_time_attributed_by_step_share() {
+        // batch took 100ms; request 0 drove all 50 steps, request 1 only 10
+        let shares = attribute_decode_ms(100.0, &[50, 10]);
+        assert!((shares[0] - 100.0).abs() < 1e-9);
+        assert!((shares[1] - 20.0).abs() < 1e-9);
+        // degenerate groups don't divide by zero
+        assert!(attribute_decode_ms(5.0, &[]).is_empty());
+        assert_eq!(attribute_decode_ms(5.0, &[0]), vec![0.0]);
     }
 }

@@ -1,0 +1,369 @@
+//! Chunkwise-parallel DeltaNet backward over one sequence (paper App. B):
+//! gradients for q/k/v/β through the intra-chunk UT transform and the
+//! inter-chunk state recurrence, as a reverse scan over chunks.
+//!
+//! The forward (see [`super::chunkwise`]) keeps only the carried state
+//! between chunks, so the backward recomputes the per-chunk intermediates
+//! (W, U, T, attention triangle) from a cheap forward pre-pass that
+//! checkpoints the chunk-entry states S_in — O(L/C) extra state memory
+//! instead of O(L) activation memory.
+//!
+//! Per chunk, with dS the gradient carried from the chunks to the right
+//! (initialized from d(final state)):
+//!
+//! ```text
+//!   dU̅  = Attnᵀ dO + K dS
+//!   dAttn = tril(dO U̅ᵀ, 0)
+//!   dQ   = dO S_inᵀ + dAttn K
+//!   dK   = dAttnᵀ Q + U̅ dSᵀ          (incoming dS, before the carry update)
+//!   dW   = −dU̅ S_inᵀ,  dU = dU̅
+//!   dT   = dW Kᵦᵀ + dU Vᵦᵀ
+//!   dA   = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1)    via two triangular solves
+//!   dKᵦ  = Tᵀ dW + dA K,   dVᵦ = Tᵀ dU
+//!   dK  += dAᵀ Kᵦ + diag(β) dKᵦ,   dV = diag(β) dVᵦ
+//!   dβᵢ  = dKᵦᵢ·Kᵢ + dVᵦᵢ·Vᵢ
+//!   dS  ← dS + Qᵀ dO − Wᵀ dU̅                (the reverse state recurrence)
+//! ```
+//!
+//! The reverse scan is sequential per sequence (mirroring the forward), and
+//! the [B,H] fan-out in [`backward_batched_on`] parallelizes across head
+//! problems exactly like the forward batch layer.
+
+use crate::tensor::blocked::{
+    matmul, matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows,
+    solve_unit_lower, solve_unit_lower_t, sub_in_place, tril_matmul_nt,
+    tri_inv_unit_lower,
+};
+use crate::tensor::{dot, Mat};
+use crate::util::threadpool::ThreadPool;
+
+use super::batch::HeadProblem;
+use super::chunkwise::slice_rows;
+use super::KernelConfig;
+
+/// Gradients of one sequence problem: same shapes as the inputs, plus the
+/// gradient flowing into the initial state (zero-state problems can ignore
+/// it; stacked segments chain it backwards).
+#[derive(Debug, Clone)]
+pub struct Gradients {
+    /// [L, d_k]
+    pub dq: Mat,
+    /// [L, d_k]
+    pub dk: Mat,
+    /// [L, d_v]
+    pub dv: Mat,
+    /// [L]
+    pub dbeta: Vec<f32>,
+    /// [d_k, d_v] — gradient w.r.t. the initial state.
+    pub dstate: Mat,
+}
+
+/// Chunkwise backward for one sequence.  `q,k: [L,dk]`, `v: [L,dv]`,
+/// `beta: [L]`, `d_o: [L,dv]` the output gradient, `d_state: [dk,dv]` the
+/// gradient w.r.t. the final state (None = zeros).  `chunk` may not divide
+/// L (the tail chunk is shorter), matching the forward.
+pub fn chunkwise_backward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    chunk: usize,
+    initial_state: Option<&Mat>,
+    d_o: &Mat,
+    d_state: Option<&Mat>,
+) -> Gradients {
+    let (l, dk) = (q.rows, q.cols);
+    let dv = v.cols;
+    assert!(chunk > 0, "chunk must be positive");
+    assert_eq!(k.rows, l, "k rows");
+    assert_eq!(k.cols, dk, "k cols");
+    assert_eq!(v.rows, l, "v rows");
+    assert_eq!(beta.len(), l, "beta len");
+    assert_eq!((d_o.rows, d_o.cols), (l, dv), "d_o shape");
+    if let Some(s0) = initial_state {
+        assert_eq!((s0.rows, s0.cols), (dk, dv), "initial state shape");
+    }
+    if let Some(dsn) = d_state {
+        assert_eq!((dsn.rows, dsn.cols), (dk, dv), "d_state shape");
+    }
+
+    // ---- forward pre-pass: checkpoint the state entering each chunk
+    let mut s = initial_state
+        .cloned()
+        .unwrap_or_else(|| Mat::zeros(dk, dv));
+    let mut checkpoints: Vec<Mat> = Vec::with_capacity(l.div_ceil(chunk));
+    let mut t0 = 0;
+    while t0 < l {
+        let c = chunk.min(l - t0);
+        checkpoints.push(s.clone());
+        let kc = slice_rows(k, t0, c);
+        let vc = slice_rows(v, t0, c);
+        let bc = &beta[t0..t0 + c];
+        let kb = scale_rows(&kc, bc);
+        let a = tril_matmul_nt(&kb, &kc, -1);
+        let t = tri_inv_unit_lower(&a);
+        let w = matmul(&t, &kb);
+        let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
+        let ws = matmul(&w, &s);
+        sub_in_place(&mut u_bar, &ws);
+        matmul_tn_acc(&mut s, &kc, &u_bar);
+        t0 += c;
+    }
+
+    // ---- reverse scan over chunks
+    let mut dq = Mat::zeros(l, dk);
+    let mut dk_out = Mat::zeros(l, dk);
+    let mut dv_out = Mat::zeros(l, dv);
+    let mut dbeta = vec![0.0f32; l];
+    let mut ds = d_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
+
+    for ci in (0..checkpoints.len()).rev() {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let s_in = &checkpoints[ci];
+        let qc = slice_rows(q, t0, c);
+        let kc = slice_rows(k, t0, c);
+        let vc = slice_rows(v, t0, c);
+        let bc = &beta[t0..t0 + c];
+        let d_oc = slice_rows(d_o, t0, c);
+
+        // recompute the chunk intermediates
+        let kb = scale_rows(&kc, bc);
+        let vb = scale_rows(&vc, bc);
+        let a = tril_matmul_nt(&kb, &kc, -1);
+        let t = tri_inv_unit_lower(&a);
+        let w = matmul(&t, &kb);
+        let mut u_bar = matmul(&t, &vb);
+        let ws = matmul(&w, s_in);
+        sub_in_place(&mut u_bar, &ws);
+        let attn = tril_matmul_nt(&qc, &kc, 0);
+
+        // dU̅ = Attnᵀ dO + K dS
+        let mut du_bar = Mat::zeros(c, dv);
+        matmul_tn_acc(&mut du_bar, &attn, &d_oc);
+        matmul_into(&mut du_bar, &kc, &ds, true);
+
+        // dAttn = tril(dO U̅ᵀ, 0)
+        let d_attn = tril_matmul_nt(&d_oc, &u_bar, 0);
+
+        // dQ = dO S_inᵀ + dAttn K
+        let mut dqc = Mat::zeros(c, dk);
+        matmul_nt_into(&mut dqc, &d_oc, s_in, false);
+        matmul_into(&mut dqc, &d_attn, &kc, true);
+
+        // dK = dAttnᵀ Q + U̅ dSᵀ — must see dS *before* the carry update
+        let mut dkc = Mat::zeros(c, dk);
+        matmul_tn_acc(&mut dkc, &d_attn, &qc);
+        matmul_nt_into(&mut dkc, &u_bar, &ds, true);
+
+        // dW = −dU̅ S_inᵀ; dU aliases dU̅
+        let mut dw = Mat::zeros(c, dk);
+        matmul_nt_into(&mut dw, &du_bar, s_in, false);
+        for x in dw.data.iter_mut() {
+            *x = -*x;
+        }
+
+        // dT = dW Kᵦᵀ + dU Vᵦᵀ
+        let mut dt = Mat::zeros(c, c);
+        matmul_nt_into(&mut dt, &dw, &kb, false);
+        matmul_nt_into(&mut dt, &du_bar, &vb, true);
+
+        // dA = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1): two triangular solves
+        // instead of three dense products with the explicit inverse
+        let x = solve_unit_lower_t(&a, &dt);
+        let m = solve_unit_lower(&a, &x.transpose());
+        let mut da = Mat::zeros(c, c);
+        for i in 0..c {
+            for j in 0..i {
+                da[(i, j)] = -m[(j, i)];
+            }
+        }
+
+        // dKᵦ = Tᵀ dW + dA K,  dVᵦ = Tᵀ dU
+        let mut dkb = Mat::zeros(c, dk);
+        matmul_tn_acc(&mut dkb, &t, &dw);
+        matmul_into(&mut dkb, &da, &kc, true);
+        let mut dvb = Mat::zeros(c, dv);
+        matmul_tn_acc(&mut dvb, &t, &du_bar);
+
+        // dK += dAᵀ Kᵦ + diag(β) dKᵦ,  dV = diag(β) dVᵦ,  dβ from Kᵦ/Vᵦ
+        matmul_tn_acc(&mut dkc, &da, &kb);
+        let mut dvc = Mat::zeros(c, dv);
+        for i in 0..c {
+            let b = bc[i];
+            for (x, &g) in dkc.row_mut(i).iter_mut().zip(dkb.row(i)) {
+                *x += b * g;
+            }
+            for (x, &g) in dvc.row_mut(i).iter_mut().zip(dvb.row(i)) {
+                *x = b * g;
+            }
+            dbeta[t0 + i] =
+                dot(dkb.row(i), kc.row(i)) + dot(dvb.row(i), vc.row(i));
+        }
+
+        dq.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&dqc.data);
+        dk_out.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&dkc.data);
+        dv_out.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&dvc.data);
+
+        // carry: dS ← dS + Qᵀ dO − Wᵀ dU̅ (last — earlier terms need old dS)
+        matmul_tn_acc(&mut ds, &qc, &d_oc);
+        let mut wtd = Mat::zeros(dk, dv);
+        matmul_tn_acc(&mut wtd, &w, &du_bar);
+        sub_in_place(&mut ds, &wtd);
+    }
+
+    Gradients { dq, dk: dk_out, dv: dv_out, dbeta, dstate: ds }
+}
+
+impl HeadProblem {
+    /// Chunkwise backward for this problem alone.
+    pub fn backward(&self, chunk: usize, d_o: &Mat, d_state: Option<&Mat>)
+                    -> Gradients {
+        chunkwise_backward(&self.q, &self.k, &self.v, &self.beta, chunk,
+                           self.initial_state.as_ref(), d_o, d_state)
+    }
+}
+
+/// Backward for every problem on an existing pool, one scoped job per
+/// (batch, head) problem; results come back in problem order.  `d_o` must
+/// parallel `problems`; `d_state` is optional per-problem final-state
+/// gradients (None = zeros for all).
+pub fn backward_batched_on(pool: &ThreadPool, problems: &[HeadProblem],
+                           d_o: &[Mat], d_state: Option<&[Mat]>,
+                           chunk: usize) -> Vec<Gradients> {
+    assert_eq!(problems.len(), d_o.len(), "one d_o per problem");
+    if let Some(dsn) = d_state {
+        assert_eq!(problems.len(), dsn.len(), "one d_state per problem");
+    }
+    let mut slots: Vec<Option<Gradients>> = Vec::new();
+    slots.resize_with(problems.len(), || None);
+    pool.scope(|s| {
+        for (i, (slot, p)) in slots.iter_mut().zip(problems).enumerate() {
+            let go = &d_o[i];
+            let gs = d_state.map(|dsn| &dsn[i]);
+            s.spawn(move || {
+                *slot = Some(p.backward(chunk, go, gs));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("scope joined every job"))
+        .collect()
+}
+
+/// Backward for every problem, spinning up a pool sized to `cfg.threads`
+/// (capped at the number of problems) — the companion of
+/// [`super::batch::forward_batched`].
+pub fn backward_batched(problems: &[HeadProblem], d_o: &[Mat],
+                        d_state: Option<&[Mat]>, cfg: &KernelConfig)
+                        -> Vec<Gradients> {
+    let threads = cfg.threads.max(1).min(problems.len().max(1));
+    if threads <= 1 {
+        assert_eq!(problems.len(), d_o.len(), "one d_o per problem");
+        return problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                p.backward(cfg.chunk, &d_o[i], d_state.map(|dsn| &dsn[i]))
+            })
+            .collect();
+    }
+    let pool = ThreadPool::new(threads);
+    backward_batched_on(&pool, problems, d_o, d_state, cfg.chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reference::random_problem;
+    use crate::tensor::rng::Rng;
+
+    fn problem(l: usize, d: usize, seed: u64) -> HeadProblem {
+        let (q, k, v, beta) = random_problem(l, d, d, seed);
+        HeadProblem::new(q, k, v, beta)
+    }
+
+    #[test]
+    fn backward_is_chunk_invariant() {
+        // the gradients are a function of the math, not the chunking
+        let p = problem(48, 8, 31);
+        let mut rng = Rng::new(32);
+        let d_o = Mat::random(48, 8, &mut rng, 1.0);
+        let base = p.backward(1, &d_o, None);
+        for chunk in [4usize, 16, 48, 64] {
+            let g = p.backward(chunk, &d_o, None);
+            assert!(g.dq.allclose(&base.dq, 1e-3, 1e-3), "dq C={chunk}");
+            assert!(g.dk.allclose(&base.dk, 1e-3, 1e-3), "dk C={chunk}");
+            assert!(g.dv.allclose(&base.dv, 1e-3, 1e-3), "dv C={chunk}");
+            for (a, b) in g.dbeta.iter().zip(&base.dbeta) {
+                assert!((a - b).abs() < 1e-3, "dbeta C={chunk}");
+            }
+            assert!(g.dstate.allclose(&base.dstate, 1e-3, 1e-3),
+                    "dstate C={chunk}");
+        }
+    }
+
+    #[test]
+    fn batched_backward_matches_single_and_is_deterministic() {
+        let ps: Vec<HeadProblem> =
+            (0..6).map(|i| problem(32, 8, 40 + i)).collect();
+        let mut rng = Rng::new(41);
+        let d_os: Vec<Mat> =
+            (0..6).map(|_| Mat::random(32, 8, &mut rng, 1.0)).collect();
+        let single: Vec<Gradients> = ps
+            .iter()
+            .zip(&d_os)
+            .map(|(p, go)| p.backward(8, go, None))
+            .collect();
+        for threads in [1usize, 4] {
+            let cfg = KernelConfig { chunk: 8, threads };
+            let batched = backward_batched(&ps, &d_os, None, &cfg);
+            for (a, b) in batched.iter().zip(&single) {
+                // the per-problem computation is identical code on every
+                // thread count, so results must be bit-equal
+                assert_eq!(a.dq.data, b.dq.data, "T={threads}");
+                assert_eq!(a.dk.data, b.dk.data, "T={threads}");
+                assert_eq!(a.dv.data, b.dv.data, "T={threads}");
+                assert_eq!(a.dbeta, b.dbeta, "T={threads}");
+                assert_eq!(a.dstate.data, b.dstate.data, "T={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn initial_and_final_state_gradients_chain() {
+        // splitting a sequence and chaining dstate across the cut must
+        // equal the unsplit backward
+        let l = 32;
+        let p = problem(l, 6, 50);
+        let mut rng = Rng::new(51);
+        let d_o = Mat::random(l, 6, &mut rng, 1.0);
+        let full = p.backward(8, &d_o, None);
+
+        let half = l / 2;
+        let first = HeadProblem::new(
+            slice_rows(&p.q, 0, half), slice_rows(&p.k, 0, half),
+            slice_rows(&p.v, 0, half), p.beta[..half].to_vec());
+        let mid = first.forward(8).state;
+        let second = HeadProblem {
+            q: slice_rows(&p.q, half, half),
+            k: slice_rows(&p.k, half, half),
+            v: slice_rows(&p.v, half, half),
+            beta: p.beta[half..].to_vec(),
+            initial_state: Some(mid),
+        };
+        let g2 = second.backward(8, &slice_rows(&d_o, half, half), None);
+        let g1 = first.backward(8, &slice_rows(&d_o, 0, half),
+                                Some(&g2.dstate));
+        for t in 0..half {
+            for (a, b) in g1.dq.row(t).iter().zip(full.dq.row(t)) {
+                assert!((a - b).abs() < 1e-3, "dq token {t}");
+            }
+            for (a, b) in g2.dk.row(t).iter().zip(full.dk.row(half + t)) {
+                assert!((a - b).abs() < 1e-3, "dk token {t}");
+            }
+        }
+        assert!((g1.dbeta[3] - full.dbeta[3]).abs() < 1e-3);
+    }
+}

@@ -98,7 +98,9 @@ mod tests {
     fn batched_matches_oracle_per_head() {
         let ps = problems(6, 64, 8);
         for threads in [1usize, 4] {
-            let cfg = KernelConfig { chunk: 16, threads };
+            let cfg =
+                KernelConfig::new().chunk(16).threads(threads).build()
+                    .unwrap();
             let outs = forward_batched(&ps, &cfg);
             assert_eq!(outs.len(), ps.len());
             for (p, f) in ps.iter().zip(&outs) {

@@ -21,9 +21,13 @@
 //! the coordinator's host backend (`coordinator::host`), which exposes it
 //! under the kernel-artifact signature as a drop-in for PJRT.
 
+pub mod backward;
 pub mod batch;
 pub mod chunkwise;
 
+pub use backward::{
+    backward_batched, backward_batched_on, chunkwise_backward, Gradients,
+};
 pub use batch::{
     forward_batched, forward_batched_on, map_batched_on, HeadProblem,
 };
@@ -56,7 +60,67 @@ impl Default for KernelConfig {
     }
 }
 
+impl KernelConfig {
+    /// Start a validated builder seeded with the default operating point.
+    /// `KernelConfig::new().chunk(64).threads(8).build()?` — the `build`
+    /// step rejects `chunk == 0` / `threads == 0`, which the bare struct
+    /// literal cannot.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> KernelConfigBuilder {
+        KernelConfigBuilder { cfg: KernelConfig::default() }
+    }
+}
+
+/// Builder for [`KernelConfig`] — see [`KernelConfig::new`].
+#[derive(Debug, Clone)]
+pub struct KernelConfigBuilder {
+    cfg: KernelConfig,
+}
+
+impl KernelConfigBuilder {
+    /// Chunk length C of the chunkwise form.
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.cfg.chunk = chunk;
+        self
+    }
+
+    /// Worker threads for the [B,H] fan-out.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> crate::Result<KernelConfig> {
+        crate::ensure!(self.cfg.chunk > 0, "chunk must be > 0");
+        crate::ensure!(self.cfg.threads > 0, "threads must be > 0");
+        Ok(self.cfg)
+    }
+}
+
 /// Host parallelism to use by default.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_validated_config() {
+        let cfg = KernelConfig::new().chunk(16).threads(2).build().unwrap();
+        assert_eq!(cfg.chunk, 16);
+        assert_eq!(cfg.threads, 2);
+        // untouched knobs keep the defaults
+        let cfg = KernelConfig::new().chunk(32).build().unwrap();
+        assert_eq!(cfg.chunk, 32);
+        assert_eq!(cfg.threads, KernelConfig::default().threads);
+    }
+
+    #[test]
+    fn builder_rejects_zero_knobs() {
+        assert!(KernelConfig::new().chunk(0).build().is_err());
+        assert!(KernelConfig::new().threads(0).build().is_err());
+    }
 }

@@ -32,6 +32,7 @@ pub mod data;
 pub mod eval;
 pub mod kernels;
 pub mod metrics;
+pub mod model;
 pub mod reference;
 pub mod repro;
 pub mod runtime;

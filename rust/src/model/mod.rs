@@ -1,0 +1,746 @@
+//! Host-side DeltaNet language model: the offline training/serving path.
+//!
+//! A small repro model in plain Rust — embedding, N DeltaNet sequence-
+//! mixing layers (per-head chunkwise forward/backward fanned out over the
+//! kernel batch layer), residual connections and a tied-nothing LM head —
+//! with a hand-derived backward pass built on `kernels::backward`.  This is
+//! what `coordinator::trainer` falls back to when no `.train` artifact is
+//! present (the offline build), and what the artifact-free serving demo
+//! decodes with.
+//!
+//! Per layer, for input x ∈ R^{B·L×d} (h heads, d_h = d/h):
+//!
+//! ```text
+//!   q = norm(x W_q),  k = norm(x W_k),  v = x W_v     per-head row L2 norm
+//!   β = σ(x W_β + b_β)                                 per head, per token
+//!   m = DeltaNet(q, k, v, β)                           chunkwise, per (b,h)
+//!   y = m W_o + x                                      residual
+//! ```
+//!
+//! The loss is masked mean cross-entropy over target positions, matching
+//! the artifact trainers' convention (`nll_sum / mask_sum`).
+
+pub mod opt;
+
+use crate::data::Batch;
+use crate::kernels::{
+    backward_batched_on, forward_batched_on, HeadProblem,
+};
+use crate::tensor::blocked::{matmul, matmul_nt_into, matmul_tn_acc};
+use crate::tensor::rng::Rng;
+use crate::tensor::{axpy, dot, l2_normalize, softmax, Mat};
+use crate::util::threadpool::ThreadPool;
+use crate::ensure;
+
+pub use opt::{AdamW, Optimizer, Sgd};
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Shape of a host model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Chunk length for the chunkwise kernels.
+    pub chunk: usize,
+}
+
+impl HostModelCfg {
+    /// The default offline repro shape: big enough for the MQAR toy task
+    /// (vocab ≥ 98), small enough to train in seconds on a laptop.
+    pub fn tiny() -> Self {
+        HostModelCfg {
+            vocab: 128,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            chunk: 16,
+        }
+    }
+}
+
+/// One sequence-mixing layer's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    /// [d, h] — β projection.
+    pub wb: Mat,
+    /// [1, h] — β bias.
+    pub bb: Mat,
+}
+
+/// Gradients for one layer (same shapes as [`LayerParams`]).
+#[derive(Debug, Clone)]
+pub struct LayerGrads {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub wb: Mat,
+    pub bb: Mat,
+}
+
+/// Full-model gradients in canonical parameter order.
+#[derive(Debug, Clone)]
+pub struct ModelGrads {
+    pub embed: Mat,
+    pub layers: Vec<LayerGrads>,
+    pub lm_head: Mat,
+}
+
+impl ModelGrads {
+    fn zeros_like(model: &HostModel) -> Self {
+        let zl = |m: &Mat| Mat::zeros(m.rows, m.cols);
+        ModelGrads {
+            embed: zl(&model.embed),
+            layers: model
+                .layers
+                .iter()
+                .map(|l| LayerGrads {
+                    wq: zl(&l.wq),
+                    wk: zl(&l.wk),
+                    wv: zl(&l.wv),
+                    wo: zl(&l.wo),
+                    wb: zl(&l.wb),
+                    bb: zl(&l.bb),
+                })
+                .collect(),
+            lm_head: zl(&model.lm_head),
+        }
+    }
+
+    /// Tensors in canonical parameter order (matches
+    /// [`HostModel::param_entries`]).
+    pub fn tensors(&self) -> Vec<&Mat> {
+        let mut out = vec![&self.embed];
+        for l in &self.layers {
+            out.extend([&l.wq, &l.wk, &l.wv, &l.wo, &l.wb, &l.bb]);
+        }
+        out.push(&self.lm_head);
+        out
+    }
+
+    /// Global L2 norm over all gradient tensors (clipping / diagnostics).
+    pub fn global_norm(&self) -> f32 {
+        self.tensors()
+            .iter()
+            .map(|t| t.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+}
+
+/// Per-layer forward activations kept for the backward pass.  The mixing
+/// problems store the *normalized* q/k the kernels consumed; the stored
+/// norms undo the normalization in the backward.
+struct LayerCache {
+    x_in: Mat,
+    problems: Vec<HeadProblem>,
+    /// [B·H·L], indexed p·L + t.
+    q_norms: Vec<f32>,
+    k_norms: Vec<f32>,
+    mixed: Mat,
+}
+
+/// A host DeltaNet LM: parameters + a worker pool for the head fan-out.
+pub struct HostModel {
+    pub cfg: HostModelCfg,
+    /// [vocab, d]
+    pub embed: Mat,
+    pub layers: Vec<LayerParams>,
+    /// [d, vocab]
+    pub lm_head: Mat,
+    pool: ThreadPool,
+}
+
+impl HostModel {
+    /// Fresh model, deterministically initialized under `seed`; `threads`
+    /// sizes the worker pool for the per-(batch, head) kernel fan-out.
+    pub fn new(cfg: HostModelCfg, seed: u64, threads: usize)
+               -> crate::Result<Self> {
+        ensure!(cfg.vocab > 0 && cfg.d_model > 0 && cfg.n_layers > 0
+                && cfg.n_heads > 0, "empty model shape");
+        ensure!(cfg.d_model % cfg.n_heads == 0,
+                "d_model {} not divisible by n_heads {}", cfg.d_model,
+                cfg.n_heads);
+        ensure!(cfg.chunk > 0, "chunk must be > 0");
+        let d = cfg.d_model;
+        let std = 1.0 / (d as f32).sqrt();
+        let mut rng = Rng::new(seed);
+        let embed = Mat::random(cfg.vocab, d, &mut rng, 0.1);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                wq: Mat::random(d, d, &mut rng, std),
+                wk: Mat::random(d, d, &mut rng, std),
+                wv: Mat::random(d, d, &mut rng, std),
+                wo: Mat::random(d, d, &mut rng, std),
+                wb: Mat::random(d, cfg.n_heads, &mut rng, 0.01),
+                // b_β = 0 → β starts at ½
+                bb: Mat::zeros(1, cfg.n_heads),
+            })
+            .collect();
+        let lm_head = Mat::random(d, cfg.vocab, &mut rng, std);
+        Ok(HostModel {
+            cfg,
+            embed,
+            layers,
+            lm_head,
+            pool: ThreadPool::new(threads.max(1)),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_entries().iter().map(|(_, m)| m.data.len()).sum()
+    }
+
+    /// (name, tensor) pairs in canonical order: embed, per-layer
+    /// wq/wk/wv/wo/wb/bb, lm_head.
+    pub fn param_entries(&self) -> Vec<(String, &Mat)> {
+        let mut out: Vec<(String, &Mat)> =
+            vec![("embed".into(), &self.embed)];
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layers.{i}.wq"), &l.wq));
+            out.push((format!("layers.{i}.wk"), &l.wk));
+            out.push((format!("layers.{i}.wv"), &l.wv));
+            out.push((format!("layers.{i}.wo"), &l.wo));
+            out.push((format!("layers.{i}.wb"), &l.wb));
+            out.push((format!("layers.{i}.bb"), &l.bb));
+        }
+        out.push(("lm_head".into(), &self.lm_head));
+        out
+    }
+
+    /// Mutable counterpart of [`Self::param_entries`] (same order).
+    pub fn param_entries_mut(&mut self) -> Vec<(String, &mut Mat)> {
+        let mut out: Vec<(String, &mut Mat)> =
+            vec![("embed".into(), &mut self.embed)];
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            out.push((format!("layers.{i}.wq"), &mut l.wq));
+            out.push((format!("layers.{i}.wk"), &mut l.wk));
+            out.push((format!("layers.{i}.wv"), &mut l.wv));
+            out.push((format!("layers.{i}.wo"), &mut l.wo));
+            out.push((format!("layers.{i}.wb"), &mut l.wb));
+            out.push((format!("layers.{i}.bb"), &mut l.bb));
+        }
+        out.push(("lm_head".into(), &mut self.lm_head));
+        out
+    }
+
+    // ------------------------------------------------------------ forward
+
+    fn forward_cached(&self, batch: &Batch)
+                      -> crate::Result<(Vec<LayerCache>, Mat)> {
+        let (bsz, l) = (batch.batch, batch.seq_len);
+        ensure!(bsz > 0 && l > 0, "empty batch");
+        let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
+        let dh = d / h;
+
+        // embedding gather over input positions tokens[:, :L]
+        let mut x = Mat::zeros(bsz * l, d);
+        for b in 0..bsz {
+            for t in 0..l {
+                let tok = batch.token(b, t);
+                ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab,
+                        "token {tok} outside vocab {}", self.cfg.vocab);
+                x.row_mut(b * l + t)
+                    .copy_from_slice(self.embed.row(tok as usize));
+            }
+        }
+
+        let mut caches = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let q_all = matmul(&x, &layer.wq);
+            let k_all = matmul(&x, &layer.wk);
+            let v_all = matmul(&x, &layer.wv);
+            let mut beta_all = matmul(&x, &layer.wb); // [B·L, h]
+            for r in 0..bsz * l {
+                for (bx, &bias) in
+                    beta_all.row_mut(r).iter_mut().zip(layer.bb.row(0))
+                {
+                    *bx = sigmoid(*bx + bias);
+                }
+            }
+
+            // per-(batch, head) problems with normalized q/k
+            let mut problems = Vec::with_capacity(bsz * h);
+            let mut q_norms = vec![0.0f32; bsz * h * l];
+            let mut k_norms = vec![0.0f32; bsz * h * l];
+            for b in 0..bsz {
+                for hd in 0..h {
+                    let p = b * h + hd;
+                    let mut qh = Mat::zeros(l, dh);
+                    let mut kh = Mat::zeros(l, dh);
+                    let mut vh = Mat::zeros(l, dh);
+                    let mut betah = vec![0.0f32; l];
+                    for t in 0..l {
+                        let r = b * l + t;
+                        let cols = hd * dh..(hd + 1) * dh;
+                        qh.row_mut(t)
+                            .copy_from_slice(&q_all.row(r)[cols.clone()]);
+                        kh.row_mut(t)
+                            .copy_from_slice(&k_all.row(r)[cols.clone()]);
+                        vh.row_mut(t)
+                            .copy_from_slice(&v_all.row(r)[cols]);
+                        q_norms[p * l + t] = l2_normalize(qh.row_mut(t));
+                        k_norms[p * l + t] = l2_normalize(kh.row_mut(t));
+                        betah[t] = beta_all[(r, hd)];
+                    }
+                    problems.push(HeadProblem::new(qh, kh, vh, betah));
+                }
+            }
+            let outs =
+                forward_batched_on(&self.pool, &problems, self.cfg.chunk);
+
+            let mut mixed = Mat::zeros(bsz * l, d);
+            for b in 0..bsz {
+                for hd in 0..h {
+                    let f = &outs[b * h + hd];
+                    for t in 0..l {
+                        mixed.row_mut(b * l + t)[hd * dh..(hd + 1) * dh]
+                            .copy_from_slice(f.o.row(t));
+                    }
+                }
+            }
+
+            // y = m W_o + x (residual)
+            let mut y = matmul(&mixed, &layer.wo);
+            for (yy, xx) in y.data.iter_mut().zip(&x.data) {
+                *yy += xx;
+            }
+            caches.push(LayerCache {
+                x_in: x,
+                problems,
+                q_norms,
+                k_norms,
+                mixed,
+            });
+            x = y;
+        }
+        Ok((caches, x))
+    }
+
+    /// Masked mean cross-entropy of one batch (forward only).
+    pub fn loss(&self, batch: &Batch) -> crate::Result<f32> {
+        let (nll, mask, _) = self.evaluate_batch(batch)?;
+        Ok(if mask > 0.0 { (nll / mask) as f32 } else { 0.0 })
+    }
+
+    /// Forward + backward: masked mean CE loss and full parameter
+    /// gradients.
+    pub fn loss_and_grads(&self, batch: &Batch)
+                          -> crate::Result<(f32, ModelGrads)> {
+        let (caches, x_final) = self.forward_cached(batch)?;
+        let (bsz, l) = (batch.batch, batch.seq_len);
+        let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
+        let dh = d / h;
+
+        // loss + dlogits in one pass
+        let logits = matmul(&x_final, &self.lm_head);
+        let mask_sum: f32 = batch.mask.iter().sum();
+        let scale = if mask_sum > 0.0 { 1.0 / mask_sum } else { 0.0 };
+        let mut loss = 0.0f64;
+        let mut dlogits = Mat::zeros(bsz * l, self.cfg.vocab);
+        for b in 0..bsz {
+            for t in 0..l {
+                let m = batch.mask[b * l + t];
+                if m == 0.0 {
+                    continue;
+                }
+                let r = b * l + t;
+                let target = batch.token(b, t + 1);
+                ensure!(target >= 0 && (target as usize) < self.cfg.vocab,
+                        "target {target} outside vocab {}", self.cfg.vocab);
+                let target = target as usize;
+                let mut p = logits.row(r).to_vec();
+                softmax(&mut p);
+                loss -= (m * scale) as f64
+                    * (p[target].max(1e-12) as f64).ln();
+                let w = m * scale;
+                let drow = dlogits.row_mut(r);
+                for (x, &pj) in drow.iter_mut().zip(&p) {
+                    *x = w * pj;
+                }
+                drow[target] -= w;
+            }
+        }
+
+        let mut g = ModelGrads::zeros_like(self);
+        matmul_tn_acc(&mut g.lm_head, &x_final, &dlogits);
+        let mut dx = Mat::zeros(bsz * l, d);
+        matmul_nt_into(&mut dx, &dlogits, &self.lm_head, false);
+
+        for li in (0..self.layers.len()).rev() {
+            let layer = &self.layers[li];
+            let cache = &caches[li];
+            let gl = &mut g.layers[li];
+
+            matmul_tn_acc(&mut gl.wo, &cache.mixed, &dx);
+            let mut dmixed = Mat::zeros(bsz * l, d);
+            matmul_nt_into(&mut dmixed, &dx, &layer.wo, false);
+
+            // per-head output gradients, then chunkwise backward fan-out
+            let mut d_os = Vec::with_capacity(bsz * h);
+            for b in 0..bsz {
+                for hd in 0..h {
+                    let mut m = Mat::zeros(l, dh);
+                    for t in 0..l {
+                        m.row_mut(t).copy_from_slice(
+                            &dmixed.row(b * l + t)[hd * dh..(hd + 1) * dh]);
+                    }
+                    d_os.push(m);
+                }
+            }
+            let head_grads = backward_batched_on(
+                &self.pool, &cache.problems, &d_os, None, self.cfg.chunk);
+
+            // undo per-row L2 norm, fold β through its sigmoid, reassemble
+            let mut dq_pre = Mat::zeros(bsz * l, d);
+            let mut dk_pre = Mat::zeros(bsz * l, d);
+            let mut dv_pre = Mat::zeros(bsz * l, d);
+            let mut dbpre = Mat::zeros(bsz * l, h);
+            for b in 0..bsz {
+                for hd in 0..h {
+                    let p = b * h + hd;
+                    let hg = &head_grads[p];
+                    let prob = &cache.problems[p];
+                    for t in 0..l {
+                        let r = b * l + t;
+                        let cols = hd * dh..(hd + 1) * dh;
+                        let gq = unnormalize_grad(
+                            hg.dq.row(t), prob.q.row(t),
+                            cache.q_norms[p * l + t]);
+                        dq_pre.row_mut(r)[cols.clone()]
+                            .copy_from_slice(&gq);
+                        let gk = unnormalize_grad(
+                            hg.dk.row(t), prob.k.row(t),
+                            cache.k_norms[p * l + t]);
+                        dk_pre.row_mut(r)[cols.clone()]
+                            .copy_from_slice(&gk);
+                        dv_pre.row_mut(r)[cols]
+                            .copy_from_slice(hg.dv.row(t));
+                        let bt = prob.beta[t];
+                        dbpre[(r, hd)] = hg.dbeta[t] * bt * (1.0 - bt);
+                    }
+                }
+            }
+
+            matmul_tn_acc(&mut gl.wq, &cache.x_in, &dq_pre);
+            matmul_tn_acc(&mut gl.wk, &cache.x_in, &dk_pre);
+            matmul_tn_acc(&mut gl.wv, &cache.x_in, &dv_pre);
+            matmul_tn_acc(&mut gl.wb, &cache.x_in, &dbpre);
+            for r in 0..bsz * l {
+                for (x, &gb) in
+                    gl.bb.row_mut(0).iter_mut().zip(dbpre.row(r))
+                {
+                    *x += gb;
+                }
+            }
+
+            // dx_in = dx (residual) + every projection's pullback
+            matmul_nt_into(&mut dx, &dq_pre, &layer.wq, true);
+            matmul_nt_into(&mut dx, &dk_pre, &layer.wk, true);
+            matmul_nt_into(&mut dx, &dv_pre, &layer.wv, true);
+            matmul_nt_into(&mut dx, &dbpre, &layer.wb, true);
+        }
+
+        // embedding scatter-add by token id
+        for b in 0..bsz {
+            for t in 0..l {
+                let tok = batch.token(b, t) as usize;
+                axpy(g.embed.row_mut(tok), 1.0, dx.row(b * l + t));
+            }
+        }
+        Ok((loss as f32, g))
+    }
+
+    /// Forward evaluation: (nll_sum, mask_sum, argmax preds [B·L]).
+    pub fn evaluate_batch(&self, batch: &Batch)
+                          -> crate::Result<(f64, f64, Vec<i32>)> {
+        let (_caches, x_final) = self.forward_cached(batch)?;
+        let (bsz, l) = (batch.batch, batch.seq_len);
+        let logits = matmul(&x_final, &self.lm_head);
+        let mut nll_sum = 0.0f64;
+        let mut mask_sum = 0.0f64;
+        let mut preds = vec![0i32; bsz * l];
+        for b in 0..bsz {
+            for t in 0..l {
+                let r = b * l + t;
+                let row = logits.row(r);
+                let mut best = 0usize;
+                for (j, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = j;
+                    }
+                }
+                preds[r] = best as i32;
+                let m = batch.mask[r];
+                if m == 0.0 {
+                    continue;
+                }
+                let target = batch.token(b, t + 1);
+                ensure!(target >= 0 && (target as usize) < self.cfg.vocab,
+                        "target {target} outside vocab {}", self.cfg.vocab);
+                let mut p = row.to_vec();
+                softmax(&mut p);
+                nll_sum -= m as f64
+                    * (p[target as usize].max(1e-12) as f64).ln();
+                mask_sum += m as f64;
+            }
+        }
+        Ok((nll_sum, mask_sum, preds))
+    }
+
+    // ------------------------------------------------------------- decode
+
+    /// Fresh zeroed decode states for a batch of `batch` sequences: one
+    /// [d_h, d_h] state per (layer, head, sequence), laid out so each
+    /// (layer, head) group of `batch` states is contiguous.
+    pub fn decode_states(&self, batch: usize) -> Vec<Mat> {
+        let dh = self.cfg.d_model / self.cfg.n_heads;
+        vec![
+            Mat::zeros(dh, dh);
+            self.cfg.n_layers * self.cfg.n_heads * batch
+        ]
+    }
+
+    /// One decode step for the current token of every sequence.  The
+    /// sequence-mixing recurrence itself is delegated to `mix` — the
+    /// serving path passes `Backend::decode_step` here, so the same engine
+    /// drives artifact-free decoding.  Returns flat logits [B · vocab].
+    pub fn decode_step<F>(&self, states: &mut [Mat], tokens: &[i32],
+                          mut mix: F) -> crate::Result<Vec<f32>>
+    where
+        F: FnMut(&mut [Mat], &Mat, &Mat, &Mat, &[f32])
+            -> crate::Result<Mat>,
+    {
+        let bsz = tokens.len();
+        let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
+        let dh = d / h;
+        ensure!(states.len() == self.cfg.n_layers * h * bsz,
+                "want {} decode states, got {}",
+                self.cfg.n_layers * h * bsz, states.len());
+        let mut x = Mat::zeros(bsz, d);
+        for (b, &tok) in tokens.iter().enumerate() {
+            ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab,
+                    "token {tok} outside vocab {}", self.cfg.vocab);
+            x.row_mut(b).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let q_all = matmul(&x, &layer.wq);
+            let k_all = matmul(&x, &layer.wk);
+            let v_all = matmul(&x, &layer.wv);
+            let mut beta_all = matmul(&x, &layer.wb);
+            for r in 0..bsz {
+                for (bx, &bias) in
+                    beta_all.row_mut(r).iter_mut().zip(layer.bb.row(0))
+                {
+                    *bx = sigmoid(*bx + bias);
+                }
+            }
+            let mut mixed = Mat::zeros(bsz, d);
+            for hd in 0..h {
+                let mut qh = Mat::zeros(bsz, dh);
+                let mut kh = Mat::zeros(bsz, dh);
+                let mut vh = Mat::zeros(bsz, dh);
+                let mut betah = vec![0.0f32; bsz];
+                for b in 0..bsz {
+                    let cols = hd * dh..(hd + 1) * dh;
+                    qh.row_mut(b)
+                        .copy_from_slice(&q_all.row(b)[cols.clone()]);
+                    kh.row_mut(b)
+                        .copy_from_slice(&k_all.row(b)[cols.clone()]);
+                    vh.row_mut(b).copy_from_slice(&v_all.row(b)[cols]);
+                    l2_normalize(qh.row_mut(b));
+                    l2_normalize(kh.row_mut(b));
+                    betah[b] = beta_all[(b, hd)];
+                }
+                let s0 = (li * h + hd) * bsz;
+                let out =
+                    mix(&mut states[s0..s0 + bsz], &qh, &kh, &vh, &betah)?;
+                ensure!((out.rows, out.cols) == (bsz, dh),
+                        "mix returned {}x{}, want {bsz}x{dh}", out.rows,
+                        out.cols);
+                for b in 0..bsz {
+                    mixed.row_mut(b)[hd * dh..(hd + 1) * dh]
+                        .copy_from_slice(out.row(b));
+                }
+            }
+            let mut y = matmul(&mixed, &layer.wo);
+            for (yy, xx) in y.data.iter_mut().zip(&x.data) {
+                *yy += xx;
+            }
+            x = y;
+        }
+        Ok(matmul(&x, &self.lm_head).data)
+    }
+}
+
+/// Pull a gradient back through row L2 normalization y = x/‖x‖:
+/// dx = (g − (g·y)·y)/‖x‖, identity when the forward skipped the
+/// normalization (‖x‖ ≤ 1e-12, the `l2_normalize` guard).
+fn unnormalize_grad(g: &[f32], y: &[f32], norm: f32) -> Vec<f32> {
+    if norm <= 1e-12 {
+        return g.to_vec();
+    }
+    let gy = dot(g, y);
+    g.iter()
+        .zip(y)
+        .map(|(&gi, &yi)| (gi - gy * yi) / norm)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+    use crate::data::build_task;
+    use crate::kernels::recurrent_step;
+
+    fn tiny() -> HostModel {
+        let cfg = HostModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            chunk: 4,
+        };
+        HostModel::new(cfg, 7, 2).unwrap()
+    }
+
+    fn tiny_batch(model: &HostModel, seed: u64) -> Batch {
+        let mut task = build_task(&DataConfig::Corpus { seed });
+        let mut b = task.sample(2, 12);
+        // corpus vocab is 128; fold tokens into the tiny model's vocab
+        for t in b.tokens.iter_mut() {
+            *t %= model.cfg.vocab as i32;
+        }
+        b
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let m = tiny();
+        let b = tiny_batch(&m, 1);
+        let l1 = m.loss(&b).unwrap();
+        let l2 = m.loss(&b).unwrap();
+        assert_eq!(l1, l2);
+        assert!(l1.is_finite() && l1 > 0.0);
+    }
+
+    #[test]
+    fn analytic_grads_match_finite_differences() {
+        let mut m = tiny();
+        let b = tiny_batch(&m, 2);
+        let (_, grads) = m.loss_and_grads(&b).unwrap();
+        let gt: Vec<Mat> =
+            grads.tensors().into_iter().cloned().collect();
+        // probe a few entries in every tensor with f32 central differences;
+        // ε is large-ish to keep f32 forward noise below the secant slope
+        let eps = 1e-2f32;
+        let n_params = gt.len();
+        for pi in 0..n_params {
+            let probes: Vec<usize> = {
+                let n = gt[pi].data.len();
+                [0, n / 3, n / 2, n - 1].iter().cloned()
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter().collect()
+            };
+            for idx in probes {
+                let x0 = m.param_entries()[pi].1.data[idx];
+                m.param_entries_mut()[pi].1.data[idx] = x0 + eps;
+                let up = m.loss(&b).unwrap();
+                m.param_entries_mut()[pi].1.data[idx] = x0 - eps;
+                let down = m.loss(&b).unwrap();
+                m.param_entries_mut()[pi].1.data[idx] = x0;
+                let fd = (up - down) / (2.0 * eps);
+                let a = gt[pi].data[idx];
+                let name = &m.param_entries()[pi].0.clone();
+                let tol = 2e-3 + 5e-2 * fd.abs().max(a.abs());
+                assert!((a - fd).abs() <= tol,
+                        "{name}[{idx}]: analytic {a} vs fd {fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_repeated_batch() {
+        let mut m = tiny();
+        let b = tiny_batch(&m, 3);
+        let mut opt = Optimizer::AdamW(AdamW::new());
+        let first = m.loss(&b).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            let (loss, grads) = m.loss_and_grads(&b).unwrap();
+            assert!(loss.is_finite());
+            let gt = grads.tensors();
+            let mut params: Vec<&mut Mat> = m
+                .param_entries_mut()
+                .into_iter()
+                .map(|(_, p)| p)
+                .collect();
+            opt.step(&mut params, &gt, 1e-2);
+            last = loss;
+        }
+        assert!(last < first * 0.7,
+                "loss did not drop on a memorizable batch: {first} -> {last}");
+    }
+
+    #[test]
+    fn decode_step_matches_training_forward() {
+        // feeding a sequence token-by-token through decode_step with the
+        // host recurrent mixer must reproduce the chunkwise training
+        // forward's next-token logits
+        let m = tiny();
+        let b = tiny_batch(&m, 4);
+        let (_, x_final) = m.forward_cached(&b).unwrap();
+        let logits_train = matmul(&x_final, &m.lm_head);
+        let bsz = b.batch;
+        let mut states = m.decode_states(bsz);
+        for t in 0..b.seq_len {
+            let tokens: Vec<i32> =
+                (0..bsz).map(|bi| b.token(bi, t)).collect();
+            let logits = m
+                .decode_step(&mut states, &tokens, |sts, q, k, v, beta| {
+                    let mut out = Mat::zeros(q.rows, v.cols);
+                    for (bi, st) in sts.iter_mut().enumerate() {
+                        let mut row = vec![0.0f32; v.cols];
+                        recurrent_step(st, q.row(bi), k.row(bi),
+                                       v.row(bi), beta[bi], &mut row);
+                        out.row_mut(bi).copy_from_slice(&row);
+                    }
+                    Ok(out)
+                })
+                .unwrap();
+            for bi in 0..bsz {
+                let want = logits_train.row(bi * b.seq_len + t);
+                let got = &logits[bi * m.cfg.vocab..(bi + 1) * m.cfg.vocab];
+                for (a, w) in got.iter().zip(want) {
+                    let tol = 1e-3 + 1e-3 * w.abs().max(a.abs());
+                    assert!((a - w).abs() < tol,
+                            "token {t} seq {bi}: {a} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn param_entries_align_with_grad_tensors() {
+        let m = tiny();
+        let b = tiny_batch(&m, 5);
+        let (_, grads) = m.loss_and_grads(&b).unwrap();
+        let names = m.param_entries();
+        let gt = grads.tensors();
+        assert_eq!(names.len(), gt.len());
+        for ((name, p), g) in names.iter().zip(&gt) {
+            assert_eq!((p.rows, p.cols), (g.rows, g.cols), "{name}");
+        }
+        assert!(m.param_count() > 0);
+    }
+}

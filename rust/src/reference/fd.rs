@@ -1,0 +1,183 @@
+//! Finite-difference oracle for the chunkwise backward pass.
+//!
+//! The analytic gradients in `kernels::backward` are checked against
+//! central differences of a *scalar f64* delta-rule recurrence: f32
+//! differences lose too many digits to resolve a 1e-3 tolerance, while f64
+//! central differences with ε = 1e-3 carry O(ε²) = 1e-6 truncation error.
+//! The loss is a fixed random linear functional of the outputs and the
+//! final state, L = ⟨W_o, O⟩ + ⟨W_s, S_L⟩, so the matching analytic
+//! backward simply takes d_o = W_o and d_state = W_s.
+
+use crate::tensor::Mat;
+
+/// Token-by-token f64 delta-rule recurrence over flat row-major slices:
+/// `q,k: [l*dk]`, `v: [l*dv]`, `beta: [l]`, optional `s0: [dk*dv]`.
+/// Returns (o: [l*dv], s: [dk*dv]).
+pub fn delta_recurrent_f64(q: &[f64], k: &[f64], v: &[f64], beta: &[f64],
+                           l: usize, dk: usize, dv: usize,
+                           s0: Option<&[f64]>) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(q.len(), l * dk);
+    assert_eq!(k.len(), l * dk);
+    assert_eq!(v.len(), l * dv);
+    assert_eq!(beta.len(), l);
+    let mut s = match s0 {
+        Some(s0) => {
+            assert_eq!(s0.len(), dk * dv);
+            s0.to_vec()
+        }
+        None => vec![0.0; dk * dv],
+    };
+    let mut o = vec![0.0; l * dv];
+    let mut v_old = vec![0.0; dv];
+    for t in 0..l {
+        let kt = &k[t * dk..(t + 1) * dk];
+        let vt = &v[t * dv..(t + 1) * dv];
+        // v_old = kᵀ S
+        v_old.fill(0.0);
+        for (i, &ki) in kt.iter().enumerate() {
+            for (j, x) in v_old.iter_mut().enumerate() {
+                *x += ki * s[i * dv + j];
+            }
+        }
+        // S += β k (v − v_old)ᵀ
+        let b = beta[t];
+        for (i, &ki) in kt.iter().enumerate() {
+            let c = b * ki;
+            for j in 0..dv {
+                s[i * dv + j] += c * (vt[j] - v_old[j]);
+            }
+        }
+        // o = q S
+        let qt = &q[t * dk..(t + 1) * dk];
+        let orow = &mut o[t * dv..(t + 1) * dv];
+        for (i, &qi) in qt.iter().enumerate() {
+            for (j, x) in orow.iter_mut().enumerate() {
+                *x += qi * s[i * dv + j];
+            }
+        }
+    }
+    (o, s)
+}
+
+/// L = ⟨w_o, O⟩ + ⟨w_s, S_L⟩ of the f64 recurrence.
+pub fn linear_loss_f64(q: &[f64], k: &[f64], v: &[f64], beta: &[f64],
+                       l: usize, dk: usize, dv: usize, s0: Option<&[f64]>,
+                       w_o: &[f64], w_s: &[f64]) -> f64 {
+    let (o, s) = delta_recurrent_f64(q, k, v, beta, l, dk, dv, s0);
+    assert_eq!(w_o.len(), o.len());
+    assert_eq!(w_s.len(), s.len());
+    let mut acc = 0.0;
+    for (a, b) in o.iter().zip(w_o) {
+        acc += a * b;
+    }
+    for (a, b) in s.iter().zip(w_s) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// Central-difference gradients of [`linear_loss_f64`] w.r.t. every input,
+/// including the initial state (zeros when `s0` is None).
+#[derive(Debug, Clone)]
+pub struct FdGrads {
+    pub dq: Vec<f64>,
+    pub dk: Vec<f64>,
+    pub dv: Vec<f64>,
+    pub dbeta: Vec<f64>,
+    pub dstate: Vec<f64>,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn fd_grads(q: &[f64], k: &[f64], v: &[f64], beta: &[f64],
+                l: usize, dk: usize, dv: usize, s0: Option<&[f64]>,
+                w_o: &[f64], w_s: &[f64], eps: f64) -> FdGrads {
+    let s0_vec = match s0 {
+        Some(s0) => s0.to_vec(),
+        None => vec![0.0; dk * dv],
+    };
+    let central = |q: &[f64], k: &[f64], v: &[f64], beta: &[f64],
+                   s0: &[f64]| {
+        linear_loss_f64(q, k, v, beta, l, dk, dv, Some(s0), w_o, w_s)
+    };
+    let grad_of = |target: usize| -> Vec<f64> {
+        // target: 0=q, 1=k, 2=v, 3=beta, 4=s0
+        let base = [q, k, v, beta, &s0_vec[..]][target];
+        let mut g = vec![0.0; base.len()];
+        let mut work = base.to_vec();
+        for i in 0..base.len() {
+            let x0 = work[i];
+            let pick = |w: &[f64], t: usize| -> f64 {
+                let args: [&[f64]; 5] = [
+                    if t == 0 { w } else { q },
+                    if t == 1 { w } else { k },
+                    if t == 2 { w } else { v },
+                    if t == 3 { w } else { beta },
+                    if t == 4 { w } else { &s0_vec },
+                ];
+                central(args[0], args[1], args[2], args[3], args[4])
+            };
+            work[i] = x0 + eps;
+            let up = pick(&work, target);
+            work[i] = x0 - eps;
+            let down = pick(&work, target);
+            work[i] = x0;
+            g[i] = (up - down) / (2.0 * eps);
+        }
+        g
+    };
+    FdGrads {
+        dq: grad_of(0),
+        dk: grad_of(1),
+        dv: grad_of(2),
+        dbeta: grad_of(3),
+        dstate: grad_of(4),
+    }
+}
+
+/// Flatten an f32 [`Mat`] to f64.
+pub fn to_f64(m: &Mat) -> Vec<f64> {
+    m.data.iter().map(|&x| x as f64).collect()
+}
+
+/// Flatten an f32 slice to f64.
+pub fn slice_to_f64(s: &[f32]) -> Vec<f64> {
+    s.iter().map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reference::{delta_recurrent, random_problem};
+
+    #[test]
+    fn f64_recurrence_matches_f32_reference() {
+        let (q, k, v, beta) = random_problem(24, 6, 5, 61);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        let (o, s) = delta_recurrent_f64(
+            &to_f64(&q), &to_f64(&k), &to_f64(&v), &slice_to_f64(&beta),
+            24, 6, 5, None);
+        for (a, b) in o.iter().zip(&want.o.data) {
+            assert!((a - *b as f64).abs() < 1e-4);
+        }
+        for (a, b) in s.iter().zip(&want.state.data) {
+            assert!((a - *b as f64).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fd_gradient_of_v_is_exact_for_single_write() {
+        // one token, q = k = e0, β = 1: o = v, S = k vᵀ, so
+        // dL/dv = w_o + w_s-row-0 exactly
+        let (l, dk, dv) = (1usize, 3usize, 2usize);
+        let q = vec![1.0, 0.0, 0.0];
+        let k = q.clone();
+        let v = vec![0.3, -0.7];
+        let beta = vec![1.0];
+        let w_o = vec![2.0, 5.0];
+        let w_s = vec![0.5, 0.25, 0.0, 0.0, 0.0, 0.0];
+        let g = fd_grads(&q, &k, &v, &beta, l, dk, dv, None, &w_o, &w_s,
+                         1e-3);
+        assert!((g.dv[0] - 2.5).abs() < 1e-6, "{:?}", g.dv);
+        assert!((g.dv[1] - 5.25).abs() < 1e-6, "{:?}", g.dv);
+    }
+}

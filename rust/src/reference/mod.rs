@@ -16,6 +16,8 @@
 //! Layout matches the Python side: state S ∈ R^{d_k×d_v} (row convention),
 //! o_t = q_t S,  S_t = (I − β_t k_t k_tᵀ) S_{t-1} + β_t k_t v_tᵀ.
 
+pub mod fd;
+
 use crate::tensor::{axpy, dot, Mat};
 
 pub use crate::kernels::Forward;

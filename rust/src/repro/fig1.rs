@@ -7,16 +7,17 @@
 //! paper isolates: O(L) sequential rank-1 steps vs O(L/C) matmul-dense
 //! steps.  The expected *shape*: speedup grows with L and with d.
 //!
-//! When the kernel artifacts (or the PJRT backend) are unavailable, the
-//! harness falls back to the batched host kernel backend
-//! (`coordinator::host`), which runs the same two forms multi-threaded on
-//! the CPU — the comparison's shape survives the substitution.
+//! The harness picks ONE backend up front via
+//! `coordinator::select_kernel_backend` — the PJRT artifact path when a
+//! real plugin is linked in, the batched host kernel backend otherwise —
+//! and every cell times the same `Backend::run_with_chunk` call.  A cell
+//! whose artifact is missing prints "-" rather than silently switching
+//! backends mid-table.
 
 use std::time::Instant;
 
-use crate::coordinator::host::{HostKernelBackend, KernelForm};
+use crate::coordinator::{select_kernel_backend, Backend, KernelForm};
 use crate::eval::Table;
-use crate::kernels::default_threads;
 use crate::runtime::{HostValue, Runtime};
 use crate::tensor::rng::Rng;
 
@@ -32,30 +33,33 @@ pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
         &["L", "d_head", "backend", "recurrent_ms", "chunkwise_ms",
           "speedup"]);
 
-    // one pool for every host-fallback measurement in the table
-    let host = HostKernelBackend::new(default_threads(), 64);
+    let backend = select_kernel_backend(runtime.artifacts_dir(), 64)?;
 
     for &d in &DS {
         for &l in &LS {
             let b = 4096 / l;
-            let artifact = time_kernel_pair(runtime, l, d, b, opts);
-            let ((rec, chk), backend) = match artifact {
-                Ok(pair) => (pair, "pjrt"),
-                Err(_) => (
-                    (time_host(&host, KernelForm::Recurrent, l, d, 64, b,
-                               opts)?,
-                     time_host(&host, KernelForm::Chunkwise, l, d, 64, b,
-                               opts)?),
-                    "host",
-                ),
+            let pair = time_backend(backend.as_ref(), KernelForm::Recurrent,
+                                    l, d, 64, b, opts)
+                .and_then(|rec| {
+                    let chk = time_backend(backend.as_ref(),
+                                           KernelForm::Chunkwise,
+                                           l, d, 64, b, opts)?;
+                    Ok((rec, chk))
+                });
+            let (rec_s, chk_s, speedup_s) = match pair {
+                Ok((rec, chk)) => (format!("{:.1}", rec * 1e3),
+                                   format!("{:.1}", chk * 1e3),
+                                   format!("{:.1}x", rec / chk)),
+                // missing artifact for this cell — leave the hole visible
+                Err(_) => ("-".into(), "-".into(), "-".into()),
             };
             table.row(vec![
                 l.to_string(),
                 d.to_string(),
-                backend.to_string(),
-                format!("{:.1}", rec * 1e3),
-                format!("{:.1}", chk * 1e3),
-                format!("{:.1}x", rec / chk),
+                backend.name().to_string(),
+                rec_s,
+                chk_s,
+                speedup_s,
             ]);
         }
     }
@@ -63,59 +67,13 @@ pub fn run(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
     Ok(())
 }
 
-/// Both forms through the artifact path, failing if either is unavailable.
-fn time_kernel_pair(runtime: &Runtime, l: usize, d: usize, b: usize,
-                    opts: &ReproOpts) -> crate::Result<(f64, f64)> {
-    let rec = time_kernel(runtime, "recurrent", l, d, 64, b, opts)?;
-    let chk = time_kernel(runtime, "chunkwise", l, d, 64, b, opts)?;
-    Ok((rec, chk))
-}
-
-/// Median-of-N wall time for one kernel artifact execution (seconds).
-pub fn time_kernel(runtime: &Runtime, form: &str, l: usize, d: usize,
-                   c: usize, b: usize, opts: &ReproOpts)
-                   -> crate::Result<f64> {
-    let name = format!("kernel_{form}_L{l}_d{d}_C{c}_B{b}");
-    let exe = runtime.load(&name)?;
-    let mut rng = Rng::new(opts.seed);
-    let mk = |rng: &mut Rng, shape: &[usize]| -> crate::Result<xla::Literal> {
-        let n: usize = shape.iter().product();
-        let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
-        HostValue::from_f32(shape, data)?.to_literal()
-    };
-    let args = vec![
-        mk(&mut rng, &[b, l, d])?,
-        mk(&mut rng, &[b, l, d])?,
-        mk(&mut rng, &[b, l, d])?,
-        // β in (0,1)
-        {
-            let data: Vec<f32> = (0..b * l)
-                .map(|_| 1.0 / (1.0 + (-rng.normal()).exp()))
-                .collect();
-            HostValue::from_f32(&[b, l], data)?.to_literal()?
-        },
-    ];
-    // warmup
-    exe.execute(&args)?;
-    let reps = 5usize;
-    let mut times: Vec<f64> = (0..reps)
-        .map(|_| -> crate::Result<f64> {
-            let t0 = Instant::now();
-            exe.execute(&args)?;
-            Ok(t0.elapsed().as_secs_f64())
-        })
-        .collect::<crate::Result<_>>()?;
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Ok(times[reps / 2])
-}
-
-/// Median-of-N wall time for the host kernel backend on the same problem
-/// (seconds).  The backend (and its worker pool) is shared across calls.
-pub fn time_host(backend: &HostKernelBackend, form: KernelForm, l: usize,
-                 d: usize, c: usize, b: usize, opts: &ReproOpts)
-                 -> crate::Result<f64> {
+/// Median-of-N wall time (seconds) for one batched kernel execution on any
+/// [`Backend`] — the single timing path for both PJRT and host cells.
+pub fn time_backend(backend: &dyn Backend, form: KernelForm, l: usize,
+                    d: usize, c: usize, b: usize, opts: &ReproOpts)
+                    -> crate::Result<f64> {
     let (q, k, v, beta) = host_inputs(b, l, d, opts.seed);
-    // warmup
+    // warmup (loads + caches the artifact on the PJRT path)
     backend.run_with_chunk(form, c, &q, &k, &v, &beta)?;
     let reps = 5usize;
     let mut times: Vec<f64> = (0..reps)
@@ -148,17 +106,16 @@ pub fn host_inputs(b: usize, l: usize, d: usize, seed: u64)
     (q, k, v, beta)
 }
 
-/// Chunk-size sweep used by the perf study (EXPERIMENTS.md §Perf), with
-/// the same host fallback as the main harness.
+/// Chunk-size sweep used by the perf study (EXPERIMENTS.md §Perf), on the
+/// same backend selection as the main harness.
 pub fn chunk_sweep(runtime: &Runtime, opts: &ReproOpts) -> crate::Result<()> {
     let mut table = Table::new(
         "Chunk-size ablation: chunkwise kernel, L=1024, d=64, B=4",
         &["C", "ms", "vs C=64"]);
-    let host = HostKernelBackend::new(default_threads(), 64);
+    let backend = select_kernel_backend(runtime.artifacts_dir(), 64)?;
     let time = |c: usize| -> crate::Result<f64> {
-        time_kernel(runtime, "chunkwise", 1024, 64, c, 4, opts).or_else(
-            |_| time_host(&host, KernelForm::Chunkwise, 1024, 64, c, 4,
-                          opts))
+        time_backend(backend.as_ref(), KernelForm::Chunkwise, 1024, 64, c,
+                     4, opts)
     };
     let base = time(64)?;
     for c in [16, 32, 64, 128] {

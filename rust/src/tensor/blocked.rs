@@ -68,6 +68,88 @@ pub fn tril_matmul_nt(a: &Mat, b: &Mat, diag: i64) -> Mat {
     out
 }
 
+/// out = A·Bᵀ (or out += A·Bᵀ when `accumulate`) with `a: [m,k]`,
+/// `b: [n,k]`, `out: [m,n]` — the transposed products of the backward pass
+/// (dQ = dO·Sᵀ, dW = −dU̅·Sᵀ, dT = dW·Kᵦᵀ + dU·Vᵦᵀ) without materializing
+/// the transpose: both operands stream row-major.
+pub fn matmul_nt_into(out: &mut Mat, a: &Mat, b: &Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.cols, "matmul_nt dims");
+    assert_eq!(out.rows, a.rows, "matmul_nt out rows");
+    assert_eq!(out.cols, b.rows, "matmul_nt out cols");
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    let (m, n) = (a.rows, b.rows);
+    for ib in (0..m).step_by(TILE_I) {
+        let ie = (ib + TILE_I).min(m);
+        for i in ib..ie {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += dot(arow, b.row(j));
+            }
+        }
+    }
+}
+
+/// A·Bᵀ as a fresh matrix.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.rows);
+    matmul_nt_into(&mut out, a, b, true);
+    out
+}
+
+/// Solve (I + A)·X = B for strictly-lower-triangular A by forward
+/// substitution over rows: X[i] = B[i] − Σ_{j<i} A[i,j]·X[j].  Cheaper and
+/// better-conditioned than materializing (I+A)⁻¹ when only the product is
+/// needed (the backward pass solves against dT twice instead of forming
+/// Tᵀ·dT·Tᵀ).
+pub fn solve_unit_lower(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols, "solve_unit_lower wants square A");
+    assert_eq!(a.rows, b.rows, "solve_unit_lower dims");
+    let (c, n) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in 0..c {
+        // rows j < i of x are final; subtract their weighted sum from row i
+        let (done, rest) = x.data.split_at_mut(i * n);
+        let xi = &mut rest[..n];
+        for j in 0..i {
+            let aij = a[(i, j)];
+            if aij != 0.0 {
+                let xj = &done[j * n..(j + 1) * n];
+                for (p, q) in xi.iter_mut().zip(xj) {
+                    *p -= aij * q;
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Solve (I + A)ᵀ·X = B for strictly-lower-triangular A by backward
+/// substitution: X[i] = B[i] − Σ_{j>i} A[j,i]·X[j], i from c−1 down.
+pub fn solve_unit_lower_t(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols, "solve_unit_lower_t wants square A");
+    assert_eq!(a.rows, b.rows, "solve_unit_lower_t dims");
+    let (c, n) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in (0..c).rev() {
+        // rows j > i of x are final; subtract their weighted sum from row i
+        let (head, done) = x.data.split_at_mut((i + 1) * n);
+        let xi = &mut head[i * n..];
+        for j in i + 1..c {
+            let aji = a[(j, i)];
+            if aji != 0.0 {
+                let xj = &done[(j - i - 1) * n..(j - i) * n];
+                for (p, q) in xi.iter_mut().zip(xj) {
+                    *p -= aji * q;
+                }
+            }
+        }
+    }
+    x
+}
+
 /// out += Aᵀ·B with `a: [t,m]`, `b: [t,n]`, `out: [m,n]` — the inter-chunk
 /// state update S += Kᵀ·U̅, streamed row-by-row over t.
 pub fn matmul_tn_acc(out: &mut Mat, a: &Mat, b: &Mat) {
@@ -202,6 +284,73 @@ mod tests {
         let mut x = a.clone();
         sub_in_place(&mut x, &a);
         assert!(x.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn nt_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(17);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (33, 65, 17), (64, 16, 64)] {
+            let a = Mat::random(m, k, &mut rng, 1.0);
+            let b = Mat::random(n, k, &mut rng, 1.0);
+            let got = matmul_nt(&a, &b);
+            let want = a.matmul(&b.transpose());
+            assert!(got.allclose(&want, 1e-4, 1e-4), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn nt_matmul_into_accumulates() {
+        let mut rng = Rng::new(18);
+        let a = Mat::random(7, 5, &mut rng, 1.0);
+        let b = Mat::random(9, 5, &mut rng, 1.0);
+        let mut out = Mat::zeros(7, 9);
+        matmul_nt_into(&mut out, &a, &b, false);
+        matmul_nt_into(&mut out, &a, &b, true);
+        let want = a.matmul(&b.transpose()).scale(2.0);
+        assert!(out.allclose(&want, 1e-4, 1e-4));
+    }
+
+    fn random_strict_lower(c: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::zeros(c, c);
+        for i in 0..c {
+            for j in 0..i {
+                a[(i, j)] = rng.normal() * 0.5;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solves_really_solve() {
+        let mut rng = Rng::new(19);
+        for c in [1usize, 2, 7, 24, 64] {
+            let a = random_strict_lower(c, &mut rng);
+            let b = Mat::random(c, 5, &mut rng, 1.0);
+            let mut ia = Mat::eye(c);
+            for i in 0..c {
+                for j in 0..i {
+                    ia[(i, j)] += a[(i, j)];
+                }
+            }
+            let x = solve_unit_lower(&a, &b);
+            assert!(ia.matmul(&x).allclose(&b, 1e-3, 1e-3), "fwd C={c}");
+            let xt = solve_unit_lower_t(&a, &b);
+            assert!(ia.transpose().matmul(&xt).allclose(&b, 1e-3, 1e-3),
+                    "bwd C={c}");
+        }
+    }
+
+    #[test]
+    fn solve_agrees_with_explicit_inverse() {
+        let mut rng = Rng::new(20);
+        let c = 16;
+        let a = random_strict_lower(c, &mut rng);
+        let b = Mat::random(c, 3, &mut rng, 1.0);
+        let t = tri_inv_unit_lower(&a);
+        assert!(solve_unit_lower(&a, &b)
+            .allclose(&t.matmul(&b), 1e-3, 1e-3));
+        assert!(solve_unit_lower_t(&a, &b)
+            .allclose(&t.transpose().matmul(&b), 1e-3, 1e-3));
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Gradient check for the chunkwise backward pass: analytic q/k/v/β (and
+//! state) gradients against central finite differences of the scalar f64
+//! oracle (`reference::fd`), across sequence lengths that exercise the
+//! partial-tail-chunk path, plus thread-count invariance of the batched
+//! fan-out.
+
+use deltanet::kernels::{
+    backward_batched, chunkwise_backward, HeadProblem, KernelConfig,
+};
+use deltanet::reference::fd::{fd_grads, slice_to_f64, to_f64};
+use deltanet::reference::random_problem;
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::Mat;
+
+fn assert_close(analytic: f32, fd: f64, what: &str) {
+    let a = analytic as f64;
+    let diff = (a - fd).abs();
+    let tol = 1e-3 + 1e-3 * a.abs().max(fd.abs());
+    assert!(diff <= tol,
+            "{what}: analytic {a:.6} vs fd {fd:.6} (diff {diff:.2e})");
+}
+
+fn check_problem(l: usize, chunks: &[usize], with_state: bool, seed: u64) {
+    let (dk, dv) = (4usize, 4usize);
+    let (q, k, v, beta) = random_problem(l, dk, dv, seed);
+    let mut rng = Rng::new(seed ^ 0xabcd);
+    let s0 = if with_state {
+        Some(Mat::random(dk, dv, &mut rng, 0.5))
+    } else {
+        None
+    };
+    // loss = <w_o, O> + <w_s, S_L>  =>  d_o = w_o, d_state = w_s
+    let w_o = Mat::random(l, dv, &mut rng, 1.0);
+    let w_s = Mat::random(dk, dv, &mut rng, 1.0);
+
+    // the FD reference does not depend on the chunking — compute it once
+    let s0_f64 = s0.as_ref().map(to_f64);
+    let fd = fd_grads(&to_f64(&q), &to_f64(&k), &to_f64(&v),
+                      &slice_to_f64(&beta), l, dk, dv,
+                      s0_f64.as_deref(), &to_f64(&w_o), &to_f64(&w_s),
+                      1e-3);
+
+    for &chunk in chunks {
+        let g = chunkwise_backward(&q, &k, &v, &beta, chunk, s0.as_ref(),
+                                   &w_o, Some(&w_s));
+        let label = format!("L={l} C={chunk} state={with_state}");
+        for (i, (&a, &f)) in g.dq.data.iter().zip(&fd.dq).enumerate() {
+            assert_close(a, f, &format!("{label} dq[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dk.data.iter().zip(&fd.dk).enumerate() {
+            assert_close(a, f, &format!("{label} dk[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dv.data.iter().zip(&fd.dv).enumerate() {
+            assert_close(a, f, &format!("{label} dv[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dbeta.iter().zip(&fd.dbeta).enumerate() {
+            assert_close(a, f, &format!("{label} dbeta[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dstate.data.iter().zip(&fd.dstate)
+            .enumerate()
+        {
+            assert_close(a, f, &format!("{label} dstate[{i}]"));
+        }
+    }
+}
+
+#[test]
+fn gradcheck_single_token() {
+    check_problem(1, &[1, 4, 16], false, 70);
+    check_problem(1, &[1, 4, 16], true, 71);
+}
+
+#[test]
+fn gradcheck_partial_tail_chunk() {
+    // L=7 against C ∈ {1,4,16}: a short tail for C=4, a single short
+    // chunk for C=16
+    check_problem(7, &[1, 4, 16], false, 72);
+    check_problem(7, &[1, 4, 16], true, 73);
+}
+
+#[test]
+fn gradcheck_long_sequence() {
+    check_problem(64, &[1, 4, 16], false, 74);
+    check_problem(64, &[1, 4, 16], true, 75);
+}
+
+#[test]
+fn gradients_invariant_to_thread_count() {
+    // same [B,H] fan-out on 1/2/8 threads must be bit-identical: each
+    // head problem is computed by exactly the same sequential code
+    let problems: Vec<HeadProblem> = (0..8)
+        .map(|i| {
+            let (q, k, v, beta) = random_problem(33, 8, 8, 400 + i as u64);
+            HeadProblem::new(q, k, v, beta)
+        })
+        .collect();
+    let mut rng = Rng::new(401);
+    let d_os: Vec<Mat> =
+        (0..8).map(|_| Mat::random(33, 8, &mut rng, 1.0)).collect();
+    let base = backward_batched(
+        &problems, &d_os, None,
+        &KernelConfig::new().chunk(16).threads(1).build().unwrap());
+    for threads in [2usize, 8] {
+        let cfg =
+            KernelConfig::new().chunk(16).threads(threads).build().unwrap();
+        let got = backward_batched(&problems, &d_os, None, &cfg);
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.dq.data, b.dq.data, "T={threads}");
+            assert_eq!(g.dk.data, b.dk.data, "T={threads}");
+            assert_eq!(g.dv.data, b.dv.data, "T={threads}");
+            assert_eq!(g.dbeta, b.dbeta, "T={threads}");
+            assert_eq!(g.dstate.data, b.dstate.data, "T={threads}");
+        }
+    }
+}

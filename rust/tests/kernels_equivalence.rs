@@ -32,7 +32,8 @@ fn batched_chunkwise_equals_recurrent_all_chunks_and_threads() {
         .collect();
     for chunk in [1usize, 4, 16, 64] {
         for threads in [1usize, 4, 8] {
-            let cfg = KernelConfig { chunk, threads };
+            let cfg = KernelConfig::new()
+                .chunk(chunk).threads(threads).build().unwrap();
             let outs = forward_batched(&problems, &cfg);
             for (i, (got, want)) in outs.iter().zip(&oracle).enumerate() {
                 assert!(got.o.allclose(&want.o, 1e-4, 1e-4),
@@ -58,7 +59,8 @@ fn state_chaining_under_blocked_path() {
     };
     for chunk in [4usize, 16] {
         for threads in [1usize, 4, 8] {
-            let cfg = KernelConfig { chunk, threads };
+            let cfg = KernelConfig::new()
+                .chunk(chunk).threads(threads).build().unwrap();
             let full = forward_batched(&problems, &cfg);
             let first: Vec<HeadProblem> = problems
                 .iter()

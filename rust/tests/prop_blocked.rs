@@ -1,0 +1,185 @@
+//! Property tests (util::prop — seeded, reproducible) for the blocked
+//! tensor primitives the backward pass is built on: transposed matmuls and
+//! the unit-lower-triangular solves, each checked against a direct scalar
+//! formulation on random shapes and values.
+
+use deltanet::tensor::blocked::{
+    matmul_nt, matmul_tn_acc, solve_unit_lower, solve_unit_lower_t,
+    tri_inv_unit_lower, tril_matmul_nt,
+};
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::Mat;
+use deltanet::util::prop::{check, f32_vec, usize_in};
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_vec(rows, cols, f32_vec(rng, rows * cols, 1.0)).unwrap()
+}
+
+/// Random strictly-lower-triangular [c, c] matrix (the UT-transform A).
+fn rand_strict_lower(rng: &mut Rng, c: usize) -> Mat {
+    let mut a = rand_mat(rng, c, c);
+    for i in 0..c {
+        for j in i..c {
+            a.data[i * c + j] = 0.0;
+        }
+    }
+    a
+}
+
+fn close(x: f32, y: f32) -> bool {
+    (x - y).abs() <= 1e-4 + 1e-4 * x.abs().max(y.abs())
+}
+
+#[test]
+fn matmul_nt_matches_scalar_triple_loop() {
+    check("matmul_nt == scalar A·Bᵀ", 40, |rng| {
+        let (m, n, kk) = (usize_in(rng, 1, 9), usize_in(rng, 1, 9),
+                          usize_in(rng, 1, 9));
+        let a = rand_mat(rng, m, kk);
+        let b = rand_mat(rng, n, kk);
+        let got = matmul_nt(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 =
+                    (0..kk).map(|p| a[(i, p)] * b[(j, p)]).sum();
+                if !close(got[(i, j)], want) {
+                    return Err(format!(
+                        "[{i},{j}] got {} want {want} (m={m} n={n} k={kk})",
+                        got[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn matmul_tn_acc_matches_scalar_triple_loop() {
+    check("matmul_tn_acc == out + AᵀB", 40, |rng| {
+        let (t, m, n) = (usize_in(rng, 1, 9), usize_in(rng, 1, 9),
+                         usize_in(rng, 1, 9));
+        let a = rand_mat(rng, t, m);
+        let b = rand_mat(rng, t, n);
+        let init = rand_mat(rng, m, n);
+        let mut got = init.clone();
+        matmul_tn_acc(&mut got, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = init[(i, j)]
+                    + (0..t).map(|p| a[(p, i)] * b[(p, j)]).sum::<f32>();
+                if !close(got[(i, j)], want) {
+                    return Err(format!("[{i},{j}] got {} want {want}",
+                                       got[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tril_matmul_nt_masks_above_the_diagonal() {
+    check("tril_matmul_nt == masked A·Bᵀ", 40, |rng| {
+        let (m, kk) = (usize_in(rng, 1, 9), usize_in(rng, 1, 9));
+        let a = rand_mat(rng, m, kk);
+        let b = rand_mat(rng, m, kk);
+        for diag in [-1i64, 0] {
+            let got = tril_matmul_nt(&a, &b, diag);
+            for i in 0..m {
+                for j in 0..m {
+                    let want: f32 = if (j as i64) <= i as i64 + diag {
+                        (0..kk).map(|p| a[(i, p)] * b[(j, p)]).sum()
+                    } else {
+                        0.0
+                    };
+                    if !close(got[(i, j)], want) {
+                        return Err(format!(
+                            "diag {diag} [{i},{j}] got {} want {want}",
+                            got[(i, j)]));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn solve_unit_lower_reconstructs_rhs() {
+    // X := solve((I+A), B)  ⇒  (I+A)·X must reproduce B
+    check("(I+A)·solve(A,B) == B", 40, |rng| {
+        let c = usize_in(rng, 1, 10);
+        let n = usize_in(rng, 1, 8);
+        let a = rand_strict_lower(rng, c);
+        let b = rand_mat(rng, c, n);
+        let x = solve_unit_lower(&a, &b);
+        for i in 0..c {
+            for j in 0..n {
+                let recon: f32 = x[(i, j)]
+                    + (0..i).map(|p| a[(i, p)] * x[(p, j)]).sum::<f32>();
+                if !close(recon, b[(i, j)]) {
+                    return Err(format!(
+                        "[{i},{j}] (I+A)X = {recon}, B = {} (c={c})",
+                        b[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn solve_unit_lower_t_reconstructs_rhs() {
+    // X := solve((I+A)ᵀ, B)  ⇒  (I+A)ᵀ·X must reproduce B
+    check("(I+A)ᵀ·solve_t(A,B) == B", 40, |rng| {
+        let c = usize_in(rng, 1, 10);
+        let n = usize_in(rng, 1, 8);
+        let a = rand_strict_lower(rng, c);
+        let b = rand_mat(rng, c, n);
+        let x = solve_unit_lower_t(&a, &b);
+        for i in 0..c {
+            // ((I+A)ᵀX)[i] = X[i] + Σ_{p>i} A[p,i]·X[p]
+            for j in 0..n {
+                let recon: f32 = x[(i, j)]
+                    + (i + 1..c).map(|p| a[(p, i)] * x[(p, j)])
+                        .sum::<f32>();
+                if !close(recon, b[(i, j)]) {
+                    return Err(format!(
+                        "[{i},{j}] (I+A)ᵀX = {recon}, B = {} (c={c})",
+                        b[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn solves_agree_with_explicit_inverse() {
+    // the two solves and the materialized T = (I+A)⁻¹ are three routes to
+    // the same UT transform; they must agree on random problems
+    check("solve == T·B and solve_t == Tᵀ·B", 30, |rng| {
+        let c = usize_in(rng, 1, 10);
+        let n = usize_in(rng, 1, 6);
+        let a = rand_strict_lower(rng, c);
+        let b = rand_mat(rng, c, n);
+        let t = tri_inv_unit_lower(&a);
+        let x1 = solve_unit_lower(&a, &b);
+        let x2 = solve_unit_lower_t(&a, &b);
+        for i in 0..c {
+            for j in 0..n {
+                let tb: f32 = (0..c).map(|p| t[(i, p)] * b[(p, j)]).sum();
+                let ttb: f32 = (0..c).map(|p| t[(p, i)] * b[(p, j)]).sum();
+                if !close(x1[(i, j)], tb) {
+                    return Err(format!("solve vs T·B at [{i},{j}]: \
+                                        {} vs {tb}", x1[(i, j)]));
+                }
+                if !close(x2[(i, j)], ttb) {
+                    return Err(format!("solve_t vs Tᵀ·B at [{i},{j}]: \
+                                        {} vs {ttb}", x2[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
