@@ -20,6 +20,8 @@ use deltanet::model::{HostModel, HostModelCfg};
 use deltanet::runtime::{Manifest, Runtime};
 
 fn main() -> deltanet::Result<()> {
+    // DELTANET_TRACE=TRACE_serve.json captures serve.batch/decode.* spans
+    deltanet::obs::trace::init_from_env();
     let artifact = "deltanet_tiny";
     let man_path = std::path::PathBuf::from(
         format!("artifacts/{artifact}.decode.manifest.json"));
@@ -93,5 +95,18 @@ fn main() -> deltanet::Result<()> {
     println!("decode throughput {:.0} tok/s | wall {:.2}s",
              st.tokens_per_sec(), wall);
     deltanet::ensure!(st.requests == n_requests);
+
+    // the same numbers the /metrics endpoint would serve
+    for name in ["serve.queue_ms", "serve.decode_ms",
+                 "serve.batch_decode_ms"] {
+        let h = deltanet::obs::metrics::histogram(name);
+        let s = h.stats();
+        println!("{name}: p50 {:.1} | p95 {:.1} | p99 {:.1} (n={})",
+                 s.p50_ms, s.p95_ms, s.p99_ms, s.count);
+    }
+    if let Some(path) = deltanet::obs::trace::write_trace_from_env()? {
+        println!("trace written to {} (open at https://ui.perfetto.dev)",
+                 path.display());
+    }
     Ok(())
 }

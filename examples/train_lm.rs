@@ -23,6 +23,9 @@ use deltanet::runtime::Runtime;
 use deltanet::util::json::Json;
 
 fn main() -> deltanet::Result<()> {
+    // DELTANET_TRACE=TRACE_train.json captures a hierarchical span trace
+    // (train.step → train.forward/backward/optimizer → kernel spans)
+    deltanet::obs::trace::init_from_env();
     let runtime = Runtime::new("artifacts")?;
     let artifact = std::env::var("DELTANET_E2E_ARTIFACT").ok()
         .or_else(|| ["deltanet_e2e", "deltanet_small", "deltanet_tiny"]
@@ -109,5 +112,16 @@ fn main() -> deltanet::Result<()> {
     deltanet::ensure!(report.final_loss < report.first_loss,
                     "loss did not decrease");
     println!("\ncheckpoint: checkpoints/train_lm.npz");
+
+    let step_hist = deltanet::obs::metrics::histogram("train.step_ms");
+    if step_hist.count() > 0 {
+        let s = step_hist.stats();
+        println!("train.step_ms: p50 {:.1} | p95 {:.1} | p99 {:.1} \
+                  (n={})", s.p50_ms, s.p95_ms, s.p99_ms, s.count);
+    }
+    if let Some(path) = deltanet::obs::trace::write_trace_from_env()? {
+        println!("trace written to {} (open at https://ui.perfetto.dev)",
+                 path.display());
+    }
     Ok(())
 }

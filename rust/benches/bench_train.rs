@@ -4,6 +4,11 @@
 //! archives `BENCH_train.json` next to `BENCH_kernels.json`, so both the
 //! perf trajectory AND the does-it-still-learn signal are tracked per PR.
 //!
+//! With DELTANET_TRACE set, also writes the span trace to
+//! `TRACE_train.json` at the repo root (CI validates it with
+//! `deltanet trace-check`).  Without tracing, the bench measures the
+//! disabled-span overhead and fails if it exceeds 2% of a train step.
+//!
 //!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_train
 
 use std::time::Instant;
@@ -20,6 +25,7 @@ const BATCH: usize = 8;
 const SEQ: usize = 64;
 
 fn main() -> deltanet::Result<()> {
+    deltanet::obs::trace::init_from_env();
     let steps = if smoke_mode() { 20 } else { 100 };
     let lr = 1e-2f32;
 
@@ -60,9 +66,32 @@ fn main() -> deltanet::Result<()> {
     println!("loss {loss_first:.4} -> {loss_last:.4} | \
               {tokens_per_sec:.0} tok/s | {total:.1}s");
 
+    // When NOT tracing, bound the cost of the disabled instrumentation:
+    // time raw disabled span() calls and scale to a generous per-step span
+    // count.  A train step opens well under 1000 spans at tiny scale
+    // (per-chunk kernel spans dominate), so 1000 × disabled-span cost must
+    // stay under 2% of the median step.
+    let mut span_overhead_frac = None;
+    if !deltanet::obs::trace::enabled() {
+        let reps = 200_000u32;
+        let t = Instant::now();
+        for _ in 0..reps {
+            let _sp = deltanet::obs::trace::span("bench.disabled_span");
+        }
+        let per_span_s = t.elapsed().as_secs_f64() / reps as f64;
+        let frac = 1000.0 * per_span_s / step_bench.median_s;
+        println!("disabled-span overhead: {:.1} ns/span \
+                  (~{:.3}% of a train step at 1000 spans/step)",
+                 per_span_s * 1e9, frac * 100.0);
+        deltanet::ensure!(frac < 0.02,
+                          "disabled tracing costs {:.2}% of a train step \
+                           (budget 2%)", frac * 100.0);
+        span_overhead_frac = Some(frac);
+    }
+
     // BENCH_kernels.json's schema plus the training trajectory
     let path = repo_root().join("BENCH_train.json");
-    let json = Json::obj(vec![
+    let mut fields = vec![
         ("suite", Json::str("train")),
         ("steps", Json::num(steps as f64)),
         ("loss_first", Json::num(loss_first as f64)),
@@ -71,9 +100,22 @@ fn main() -> deltanet::Result<()> {
         ("losses",
          Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect())),
         ("results", Json::Arr(vec![step_bench.to_json()])),
-    ]);
+    ];
+    if let Some(frac) = span_overhead_frac {
+        fields.push(("span_overhead_frac", Json::num(frac)));
+    }
+    let json = Json::obj(fields);
     std::fs::write(&path, json.render() + "\n")?;
     println!("report: {}", path.display());
+
+    // cargo bench runs with cwd = the package dir, so anchor the trace at
+    // the repo root where CI's `deltanet trace-check TRACE_train.json`
+    // (run from the checkout root) will look for it
+    if deltanet::obs::trace::enabled() {
+        let trace_path = repo_root().join("TRACE_train.json");
+        deltanet::obs::trace::write_trace(&trace_path)?;
+        println!("trace: {}", trace_path.display());
+    }
 
     deltanet::ensure!(loss_last.is_finite() && loss_last < loss_first,
                       "training smoke did not reduce loss: \

@@ -29,6 +29,7 @@ use crate::tensor::Mat;
 use crate::{bail, ensure};
 
 use super::host::{HostKernelBackend, KernelForm};
+use super::instrument::InstrumentedBackend;
 
 /// A compute backend for the DeltaNet sequence-mixing kernels plus the
 /// optional training step.  Object-safe: harnesses hold `Box<dyn Backend>`.
@@ -188,13 +189,18 @@ impl Backend for PjrtBackend {
 /// real PJRT plugin is linked in, the host kernel backend otherwise (the
 /// offline build — `Runtime::backend_available()` is false under the `xla`
 /// shim, where artifact execution cannot succeed).
+///
+/// The selection is wrapped in [`InstrumentedBackend`], so every trait call
+/// gets a `backend.*` span + counter; `name()` still reports the inner
+/// backend's identity.
 pub fn select_kernel_backend(artifacts_dir: &Path, chunk: usize)
                              -> crate::Result<Box<dyn Backend>> {
-    if Runtime::backend_available() {
-        Ok(Box::new(PjrtBackend::new(Runtime::new(artifacts_dir)?, chunk)?))
+    let inner: Box<dyn Backend> = if Runtime::backend_available() {
+        Box::new(PjrtBackend::new(Runtime::new(artifacts_dir)?, chunk)?)
     } else {
-        Ok(Box::new(HostKernelBackend::new(default_threads(), chunk)))
-    }
+        Box::new(HostKernelBackend::new(default_threads(), chunk))
+    };
+    Ok(Box::new(InstrumentedBackend::new(inner)))
 }
 
 /// Host backend preloaded with a freshly initialized DeltaNet model, ready

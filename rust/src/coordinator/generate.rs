@@ -16,7 +16,7 @@
 //! from pos 0, each row feeds prompt tokens until its prompt is exhausted,
 //! then feeds its own previous sample (standard static-batch decoding).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use xla::Literal;
 
@@ -25,12 +25,18 @@ use crate::util::error::Context;
 
 use crate::kernels::default_threads;
 use crate::model::HostModel;
+use crate::obs::{self, metrics::{counter, Counter}};
 use crate::runtime::{Executable, Role, Runtime};
 use crate::tensor::rng::Rng;
 use crate::tensor::Mat;
 
 use super::backend::Backend;
 use super::host::HostKernelBackend;
+
+fn decode_tokens_counter() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    *C.get_or_init(|| counter("decode.tokens"))
+}
 
 /// Sampling policy.
 #[derive(Debug, Clone, Copy)]
@@ -167,6 +173,8 @@ impl DecodeEngine {
         if pos >= self.max_seq_len {
             bail!("pos {} exceeds decode cache bound {}", pos, self.max_seq_len);
         }
+        let _sp = obs::trace::span("decode.step");
+        decode_tokens_counter().add(self.batch as u64);
         match &mut self.inner {
             Inner::Artifact { exe, inputs, carry, idx_token, idx_pos, .. } => {
                 inputs[*idx_token].copy_raw_from(tokens)?;
@@ -203,6 +211,9 @@ impl DecodeEngine {
         self.reset_state()?;
         let mut rng = Rng::new(seed);
         let n = prompts.len();
+        let _sp = obs::trace::span_with("decode.generate", || {
+            vec![("prompts", n as f64), ("max_new", max_new as f64)]
+        });
         let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap();
         let total_steps = (max_prompt + max_new).min(self.max_seq_len);
 

@@ -12,11 +12,14 @@
 //! one token for every sequence in the batch against carried per-sequence
 //! states (constant memory in sequence length).
 
+use std::time::Instant;
+
 use crate::data::Batch;
 use crate::kernels::{
     chunkwise::recurrent_step, map_batched_on, HeadProblem,
 };
 use crate::model::{AdamW, HostModel, Optimizer};
+use crate::obs;
 use crate::runtime::HostValue;
 use crate::tensor::Mat;
 use crate::util::error::Context;
@@ -28,6 +31,17 @@ use crate::{bail, ensure};
 pub enum KernelForm {
     Recurrent,
     Chunkwise,
+}
+
+/// Wall-clock and gradient diagnostics of one training step, surfaced in
+/// the trainer's `StepRecord` and the `train.*` histograms.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepBreakdown {
+    pub forward_ms: f64,
+    pub backward_ms: f64,
+    pub optimizer_ms: f64,
+    /// Global L2 norm over all gradient tensors.
+    pub grad_norm: f32,
 }
 
 pub struct HostKernelBackend {
@@ -69,21 +83,49 @@ impl HostKernelBackend {
     /// One AdamW step of the attached model on `batch`; returns the loss.
     pub fn train_step(&mut self, batch: &Batch, lr: f32)
                       -> crate::Result<f32> {
+        self.train_step_detailed(batch, lr).map(|(loss, _)| loss)
+    }
+
+    /// [`Self::train_step`] plus the per-phase wall-clock breakdown and
+    /// gradient norm; also feeds the `train.*` metrics.
+    pub fn train_step_detailed(&mut self, batch: &Batch, lr: f32)
+                               -> crate::Result<(f32, StepBreakdown)> {
         let (model, opt) = self
             .model
             .as_mut()
             .context("no host model attached \
                       (HostKernelBackend::with_model)")?;
-        let (loss, grads) = model.loss_and_grads(batch)?;
+        let (loss, grads, phases) = model.loss_and_grads_timed(batch)?;
         ensure!(loss.is_finite(), "non-finite host training loss");
-        let gt = grads.tensors();
-        let mut params: Vec<&mut Mat> = model
-            .param_entries_mut()
-            .into_iter()
-            .map(|(_, p)| p)
-            .collect();
-        opt.step(&mut params, &gt, lr);
-        Ok(loss)
+        let grad_norm = grads.global_norm();
+        let t_opt = Instant::now();
+        {
+            let _opt_sp = obs::trace::span("train.optimizer");
+            let gt = grads.tensors();
+            let mut params: Vec<&mut Mat> = model
+                .param_entries_mut()
+                .into_iter()
+                .map(|(_, p)| p)
+                .collect();
+            opt.step(&mut params, &gt, lr);
+        }
+        let optimizer_ms = t_opt.elapsed().as_secs_f64() * 1e3;
+
+        obs::metrics::counter("train.steps").inc();
+        obs::metrics::counter("train.tokens")
+            .add((batch.batch * batch.seq_len) as u64);
+        obs::metrics::histogram("train.forward_ms")
+            .record(phases.forward_ms);
+        obs::metrics::histogram("train.backward_ms")
+            .record(phases.backward_ms);
+        obs::metrics::histogram("train.optimizer_ms").record(optimizer_ms);
+
+        Ok((loss, StepBreakdown {
+            forward_ms: phases.forward_ms,
+            backward_ms: phases.backward_ms,
+            optimizer_ms,
+            grad_norm,
+        }))
     }
 
     pub fn threads(&self) -> usize {
@@ -186,6 +228,9 @@ impl HostKernelBackend {
         let b = states.len();
         ensure!(q.rows == b && k.rows == b && v.rows == b && beta.len() == b,
                 "decode step wants one row per sequence ({b})");
+        let _sp = obs::trace::span_with("host.decode_step", || {
+            vec![("B", b as f64)]
+        });
         let mut out = Mat::zeros(b, v.cols);
         self.pool.scope(|s| {
             // one job per sequence: disjoint &mut state and output rows

@@ -1,0 +1,158 @@
+//! [`InstrumentedBackend`]: a decorator that gives any [`Backend`] —
+//! PJRT or host — `backend.*` spans and call counters for free.
+//!
+//! `select_kernel_backend` wraps its selection in this decorator, so every
+//! harness driving a `Box<dyn Backend>` shows up in traces at the backend
+//! boundary without per-implementation instrumentation.  While tracing is
+//! disabled the wrapper costs one relaxed atomic load plus one counter
+//! increment per call — all calls here are coarse (per batch / per token),
+//! never per chunk.
+
+use std::sync::OnceLock;
+
+use crate::data::Batch;
+use crate::obs::{self, metrics::{counter, Counter}};
+use crate::runtime::HostValue;
+use crate::tensor::Mat;
+
+use super::backend::Backend;
+use super::host::KernelForm;
+
+struct BackendCounters {
+    runs: &'static Counter,
+    prefills: &'static Counter,
+    decode_steps: &'static Counter,
+    train_steps: &'static Counter,
+}
+
+fn backend_counters() -> &'static BackendCounters {
+    static M: OnceLock<BackendCounters> = OnceLock::new();
+    M.get_or_init(|| BackendCounters {
+        runs: counter("backend.run_calls"),
+        prefills: counter("backend.prefill_calls"),
+        decode_steps: counter("backend.decode_steps"),
+        train_steps: counter("backend.train_steps"),
+    })
+}
+
+fn shape_args(q: &HostValue) -> Vec<(&'static str, f64)> {
+    match q.shape() {
+        [b, l, d] => {
+            vec![("B", *b as f64), ("L", *l as f64), ("D", *d as f64)]
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Wraps an inner backend, adding a span + counter around each trait
+/// operation.  `name()` passes through so callers that branch on the
+/// backend identity ("host" / "pjrt") are unaffected.
+pub struct InstrumentedBackend {
+    inner: Box<dyn Backend>,
+}
+
+impl InstrumentedBackend {
+    pub fn new(inner: Box<dyn Backend>) -> Self {
+        InstrumentedBackend { inner }
+    }
+
+    /// Unwrap back to the inner backend.
+    pub fn into_inner(self) -> Box<dyn Backend> {
+        self.inner
+    }
+}
+
+impl Backend for InstrumentedBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn run(&self, form: KernelForm, q: &HostValue, k: &HostValue,
+           v: &HostValue, beta: &HostValue)
+           -> crate::Result<(HostValue, HostValue)> {
+        let _sp = obs::trace::span_with("backend.run", || shape_args(q));
+        backend_counters().runs.inc();
+        self.inner.run(form, q, k, v, beta)
+    }
+
+    fn run_with_chunk(&self, form: KernelForm, chunk: usize, q: &HostValue,
+                      k: &HostValue, v: &HostValue, beta: &HostValue)
+                      -> crate::Result<(HostValue, HostValue)> {
+        let _sp = obs::trace::span_with("backend.run_with_chunk", || {
+            let mut args = shape_args(q);
+            args.push(("chunk", chunk as f64));
+            args
+        });
+        backend_counters().runs.inc();
+        self.inner.run_with_chunk(form, chunk, q, k, v, beta)
+    }
+
+    fn prefill(&self, q: &HostValue, k: &HostValue, v: &HostValue,
+               beta: &HostValue) -> crate::Result<Vec<Mat>> {
+        let _sp = obs::trace::span_with("backend.prefill",
+                                        || shape_args(q));
+        backend_counters().prefills.inc();
+        self.inner.prefill(q, k, v, beta)
+    }
+
+    fn decode_step(&self, states: &mut [Mat], q: &Mat, k: &Mat, v: &Mat,
+                   beta: &[f32]) -> crate::Result<Mat> {
+        let _sp = obs::trace::span_with("backend.decode_step", || {
+            vec![("B", states.len() as f64)]
+        });
+        backend_counters().decode_steps.inc();
+        self.inner.decode_step(states, q, k, v, beta)
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> crate::Result<f32> {
+        let _sp = obs::trace::span_with("backend.train_step", || {
+            vec![("B", batch.batch as f64), ("L", batch.seq_len as f64)]
+        });
+        backend_counters().train_steps.inc();
+        self.inner.train_step(batch, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::HostKernelBackend;
+    use crate::reference::random_problem;
+
+    #[test]
+    fn wrapper_preserves_name_and_results() {
+        let inner: Box<dyn Backend> =
+            Box::new(HostKernelBackend::new(2, 8));
+        let wrapped = InstrumentedBackend::new(inner);
+        assert_eq!(wrapped.name(), "host");
+
+        let (b, l, d) = (2usize, 16usize, 4usize);
+        let mut q_all = vec![0f32; b * l * d];
+        let mut k_all = vec![0f32; b * l * d];
+        let mut v_all = vec![0f32; b * l * d];
+        let mut beta_all = vec![0f32; b * l];
+        for bi in 0..b {
+            let (q, k, v, beta) = random_problem(l, d, d, bi as u64);
+            q_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&q.data);
+            k_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&k.data);
+            v_all[bi * l * d..(bi + 1) * l * d].copy_from_slice(&v.data);
+            beta_all[bi * l..(bi + 1) * l].copy_from_slice(&beta);
+        }
+        let qh = HostValue::from_f32(&[b, l, d], q_all).unwrap();
+        let kh = HostValue::from_f32(&[b, l, d], k_all).unwrap();
+        let vh = HostValue::from_f32(&[b, l, d], v_all).unwrap();
+        let bh = HostValue::from_f32(&[b, l], beta_all).unwrap();
+
+        let runs_before = backend_counters().runs.get();
+        let (o1, s1) = wrapped
+            .run(KernelForm::Chunkwise, &qh, &kh, &vh, &bh)
+            .unwrap();
+        let direct = HostKernelBackend::new(2, 8);
+        let (o2, s2) = direct
+            .run(KernelForm::Chunkwise, &qh, &kh, &vh, &bh)
+            .unwrap();
+        assert_eq!(o1.as_f32().unwrap(), o2.as_f32().unwrap());
+        assert_eq!(s1.as_f32().unwrap(), s2.as_f32().unwrap());
+        assert!(backend_counters().runs.get() > runs_before);
+    }
+}

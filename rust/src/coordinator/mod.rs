@@ -15,6 +15,7 @@
 pub mod backend;
 pub mod generate;
 pub mod host;
+pub mod instrument;
 pub mod server;
 pub mod trainer;
 
@@ -22,6 +23,7 @@ pub use backend::{
     host_training_backend, select_kernel_backend, Backend, PjrtBackend,
 };
 pub use generate::DecodeEngine;
-pub use host::{HostKernelBackend, KernelForm};
+pub use host::{HostKernelBackend, KernelForm, StepBreakdown};
+pub use instrument::InstrumentedBackend;
 pub use server::{ServeEngine, ServeStats};
 pub use trainer::{EvalOutcome, TrainReport, Trainer};

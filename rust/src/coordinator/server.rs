@@ -9,12 +9,42 @@
 //! boundaries — the admission policy the bench harness sweeps.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::err;
+use crate::obs::{self, export::MetricsServer};
+use crate::obs::metrics::{
+    counter, gauge, histogram, Counter, Gauge, Histogram,
+};
 
 use super::generate::{DecodeEngine, Sampling};
+
+/// Cached handles for the serving path's metrics (`serve.*`).
+struct ServeMetrics {
+    requests: &'static Counter,
+    request_failures: &'static Counter,
+    tokens: &'static Counter,
+    batches: &'static Counter,
+    queue_depth: &'static Gauge,
+    queue_ms: &'static Histogram,
+    decode_ms: &'static Histogram,
+    batch_decode_ms: &'static Histogram,
+}
+
+fn metrics() -> &'static ServeMetrics {
+    static M: OnceLock<ServeMetrics> = OnceLock::new();
+    M.get_or_init(|| ServeMetrics {
+        requests: counter("serve.requests"),
+        request_failures: counter("serve.request_failures"),
+        tokens: counter("serve.tokens"),
+        batches: counter("serve.batches"),
+        queue_depth: gauge("serve.queue_depth"),
+        queue_ms: histogram("serve.queue_ms"),
+        decode_ms: histogram("serve.decode_ms"),
+        batch_decode_ms: histogram("serve.batch_decode_ms"),
+    })
+}
 
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -28,8 +58,9 @@ pub struct GenResponse {
     /// time from submission to batch start
     pub queue_ms: f64,
     /// decode time attributed to THIS request: the batch's decode wall
-    /// time scaled by this request's share of decode steps (a short
-    /// request in a group with a long one doesn't inherit the long tail)
+    /// time split proportionally to each request's share of decode steps,
+    /// so the per-request attributions partition the batch's wall time (a
+    /// short request in a group with a long one doesn't inherit the tail)
     pub decode_ms: f64,
 }
 
@@ -106,6 +137,8 @@ impl ServeEngine {
                     // drain the queue, failing every request
                     let msg = format!("engine init failed: {e:#}");
                     while let Ok(p) = rx.recv() {
+                        metrics().queue_depth.add(-1);
+                        metrics().request_failures.inc();
                         let _ = p.reply.send(Err(err!("{msg}")));
                     }
                     return;
@@ -113,6 +146,7 @@ impl ServeEngine {
             };
             let cap = engine.batch;
             while let Ok(first) = rx.recv() {
+                metrics().queue_depth.add(-1);
                 // collect a group: block on the first request, then fill
                 // until timeout or capacity
                 let mut group = vec![first];
@@ -123,7 +157,10 @@ impl ServeEngine {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(p) => group.push(p),
+                        Ok(p) => {
+                            metrics().queue_depth.add(-1);
+                            group.push(p);
+                        }
                         Err(_) => break,
                     }
                 }
@@ -132,8 +169,16 @@ impl ServeEngine {
                     group.iter().map(|p| p.req.prompt.clone()).collect();
                 let max_new =
                     group.iter().map(|p| p.req.max_new).max().unwrap_or(0);
-                let result = engine.generate(&prompts, max_new, sampling, 0);
+                let result = {
+                    let _sp = obs::trace::span_with("serve.batch", || {
+                        vec![("requests", group.len() as f64),
+                             ("max_new", max_new as f64)]
+                    });
+                    engine.generate(&prompts, max_new, sampling, 0)
+                };
                 let decode_ms = t0.elapsed().as_secs_f64() * 1e3;
+                metrics().batches.inc();
+                metrics().batch_decode_ms.record(decode_ms);
 
                 let mut st = stats2.lock().unwrap();
                 st.batches += 1;
@@ -158,6 +203,10 @@ impl ServeEngine {
                             st.tokens_generated += tokens.len();
                             st.total_queue_ms += queue_ms;
                             st.total_decode_ms += decode_ms_r;
+                            metrics().requests.inc();
+                            metrics().tokens.add(tokens.len() as u64);
+                            metrics().queue_ms.record(queue_ms);
+                            metrics().decode_ms.record(decode_ms_r);
                             let _ = p.reply.send(Ok(GenResponse {
                                 tokens,
                                 queue_ms,
@@ -167,6 +216,7 @@ impl ServeEngine {
                     }
                     Err(e) => {
                         let msg = format!("decode failed: {e:#}");
+                        metrics().request_failures.add(group.len() as u64);
                         for p in group {
                             let _ = p.reply.send(Err(err!("{msg}")));
                         }
@@ -184,11 +234,30 @@ impl ServeEngine {
         self.tx.as_ref().unwrap()
             .send(Pending { req, submitted: Instant::now(), reply: reply_tx })
             .map_err(|_| err!("engine stopped"))?;
+        metrics().queue_depth.add(1);
         Ok(Ticket { rx: reply_rx })
     }
 
     pub fn stats(&self) -> ServeStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Text rendering of the global metrics snapshot (`serve.*` histograms
+    /// included) — the payload behind `GET /metrics`.
+    pub fn metrics_text(&self) -> String {
+        obs::metrics::snapshot().render_text()
+    }
+
+    /// JSON rendering of the global metrics snapshot
+    /// (`GET /metrics.json`).
+    pub fn metrics_json(&self) -> String {
+        obs::metrics::snapshot().to_json().render()
+    }
+
+    /// Start the HTTP metrics endpoint (e.g. `"127.0.0.1:0"`); serves the
+    /// global registry, so `serve.*` latency histograms show up live.
+    pub fn serve_metrics(&self, addr: &str) -> crate::Result<MetricsServer> {
+        obs::export::serve_metrics(addr)
     }
 
     /// Stop accepting requests and join the engine thread.
@@ -202,13 +271,17 @@ impl ServeEngine {
 }
 
 /// Split a batch's decode wall time across its requests in proportion to
-/// the decode steps each occupied (prompt + generated tokens).  The longest
-/// request gets the full batch time — it was on the critical path the whole
-/// way; shorter riders get their share, not the stragglers' tail.
+/// the decode steps each occupied (prompt + generated tokens).  The shares
+/// partition the batch's wall time exactly — summing per-request decode_ms
+/// over a run reproduces total decode wall time, so cost accounting adds
+/// up (the earlier max-normalized scheme double-counted the critical path).
 fn attribute_decode_ms(batch_ms: f64, steps: &[usize]) -> Vec<f64> {
-    let max_steps = steps.iter().copied().max().unwrap_or(0).max(1);
+    let total: usize = steps.iter().sum();
+    if total == 0 {
+        return vec![0.0; steps.len()];
+    }
     steps.iter()
-        .map(|&s| batch_ms * s as f64 / max_steps as f64)
+        .map(|&s| batch_ms * s as f64 / total as f64)
         .collect()
 }
 
@@ -242,12 +315,45 @@ mod tests {
 
     #[test]
     fn decode_time_attributed_by_step_share() {
-        // batch took 100ms; request 0 drove all 50 steps, request 1 only 10
+        // batch took 100ms over 60 total steps; request 0 drove 50 of
+        // them, request 1 the other 10 — shares partition the 100ms
         let shares = attribute_decode_ms(100.0, &[50, 10]);
-        assert!((shares[0] - 100.0).abs() < 1e-9);
-        assert!((shares[1] - 20.0).abs() < 1e-9);
+        assert!((shares[0] - 100.0 * 50.0 / 60.0).abs() < 1e-9);
+        assert!((shares[1] - 100.0 * 10.0 / 60.0).abs() < 1e-9);
+        assert!((shares.iter().sum::<f64>() - 100.0).abs() < 1e-9);
         // degenerate groups don't divide by zero
         assert!(attribute_decode_ms(5.0, &[]).is_empty());
         assert_eq!(attribute_decode_ms(5.0, &[0]), vec![0.0]);
+    }
+
+    #[test]
+    fn prop_decode_shares_partition_batch_time() {
+        use crate::util::prop;
+        prop::check("decode shares partition batch time", 300, |rng| {
+            let n = prop::usize_in(rng, 1, 17);
+            let steps: Vec<usize> = (0..n)
+                .map(|_| if rng.coin(0.25) { 0 } else { rng.range(1, 400) })
+                .collect();
+            let batch_ms = rng.uniform() as f64 * 500.0;
+            let shares = attribute_decode_ms(batch_ms, &steps);
+            if shares.len() != steps.len() {
+                return Err(format!("len {} != {}", shares.len(), steps.len()));
+            }
+            for (i, (&sh, &st)) in shares.iter().zip(&steps).enumerate() {
+                if sh < 0.0 {
+                    return Err(format!("negative share {sh} at {i}"));
+                }
+                if st == 0 && sh != 0.0 {
+                    return Err(format!("zero-step request got {sh}ms"));
+                }
+            }
+            let total_steps: usize = steps.iter().sum();
+            let want = if total_steps == 0 { 0.0 } else { batch_ms };
+            let sum: f64 = shares.iter().sum();
+            if (sum - want).abs() > 1e-9 {
+                return Err(format!("shares sum {sum} != {want}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -20,6 +20,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use xla::Literal;
 
@@ -31,10 +32,11 @@ use crate::data::{Batch, TaskGen};
 use crate::kernels::default_threads;
 use crate::metrics::{RunLog, StepRecord, Throughput};
 use crate::model::{HostModel, HostModelCfg};
+use crate::obs;
 use crate::runtime::{Executable, HostValue, Manifest, Role, Runtime};
 
 use super::backend::{host_training_backend, Backend};
-use super::host::HostKernelBackend;
+use super::host::{HostKernelBackend, StepBreakdown};
 
 /// Summary of a training run.
 #[derive(Debug, Clone)]
@@ -61,6 +63,9 @@ pub struct EvalOutcome {
 pub struct Trainer {
     engine: Engine,
     step: usize,
+    /// fwd/bwd/opt split of the most recent step (host engine only — the
+    /// artifact engine's phases live inside one compiled XLA program).
+    last_breakdown: Option<StepBreakdown>,
     pub batch: usize,
     pub seq_len: usize,
 }
@@ -138,6 +143,7 @@ impl Trainer {
                 idx_mask,
             }),
             step: 0,
+            last_breakdown: None,
             batch,
             seq_len,
         })
@@ -170,6 +176,7 @@ impl Trainer {
                 backend: host_training_backend(model),
             }),
             step: 0,
+            last_breakdown: None,
             batch,
             seq_len,
         })
@@ -195,6 +202,12 @@ impl Trainer {
         self.step
     }
 
+    /// Phase breakdown of the most recent [`Self::train_step`], when the
+    /// engine reports one (host only).
+    pub fn last_breakdown(&self) -> Option<StepBreakdown> {
+        self.last_breakdown
+    }
+
     pub fn param_count(&self) -> usize {
         match &self.engine {
             Engine::Artifact(a) => a.train_exe.manifest.param_count(),
@@ -211,11 +224,22 @@ impl Trainer {
                   batch.batch, batch.seq_len, self.batch, self.seq_len);
         }
         self.step += 1;
+        let _sp = obs::trace::span_with("train.step", || {
+            vec![("step", self.step as f64), ("B", self.batch as f64),
+                 ("L", self.seq_len as f64)]
+        });
         let loss = match &mut self.engine {
-            Engine::Artifact(a) => a.train_step(self.step, batch, lr)?,
-            // the host path IS the Backend trait's training surface
+            Engine::Artifact(a) => {
+                self.last_breakdown = None;
+                a.train_step(self.step, batch, lr)?
+            }
+            // the host path IS the Backend trait's training surface; the
+            // detailed entry point also records train.* metrics
             Engine::Host(h) => {
-                Backend::train_step(&mut h.backend, batch, lr as f32)?
+                let (loss, bd) =
+                    h.backend.train_step_detailed(batch, lr as f32)?;
+                self.last_breakdown = Some(bd);
+                loss
             }
         };
         if !loss.is_finite() {
@@ -238,15 +262,23 @@ impl Trainer {
         for s in 0..cfg.steps {
             let lr = cfg.lr.at(s);
             let batch = task.sample(self.batch, self.seq_len);
+            let t0 = Instant::now();
             let loss = self.train_step(&batch, lr)?;
+            let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+            obs::metrics::histogram("train.step_ms").record(step_ms);
             first_loss.get_or_insert(loss);
             tp.record_step(self.batch * self.seq_len);
+            let bd = self.last_breakdown;
             log.log(StepRecord {
                 step: s,
                 loss,
                 lr,
                 tokens_per_sec: tp.tokens_per_sec(),
                 elapsed_secs: tp.elapsed_secs(),
+                grad_norm: bd.map(|b| b.grad_norm as f64),
+                forward_ms: bd.map(|b| b.forward_ms),
+                backward_ms: bd.map(|b| b.backward_ms),
+                optimizer_ms: bd.map(|b| b.optimizer_ms),
             })?;
             let do_eval = cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0;
             if do_eval {
@@ -263,6 +295,7 @@ impl Trainer {
         if let Some(path) = &cfg.checkpoint_path {
             self.save_checkpoint(path)?;
         }
+        log.flush()?;
         Ok(TrainReport {
             steps: cfg.steps,
             first_loss: first_loss.unwrap_or(f32::NAN),
@@ -276,6 +309,9 @@ impl Trainer {
     /// Evaluate current params on `n_batches` from `task`.
     pub fn evaluate(&self, task: &mut dyn TaskGen, n_batches: usize)
                     -> crate::Result<EvalOutcome> {
+        let _sp = obs::trace::span_with("train.eval", || {
+            vec![("batches", n_batches as f64)]
+        });
         match &self.engine {
             Engine::Artifact(a) => {
                 a.evaluate(task, n_batches)

@@ -29,6 +29,9 @@
 //! the [B,H] fan-out in [`backward_batched_on`] parallelizes across head
 //! problems exactly like the forward batch layer.
 
+use std::sync::OnceLock;
+
+use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
     matmul, matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows,
     solve_unit_lower, solve_unit_lower_t, sub_in_place, tril_matmul_nt,
@@ -38,8 +41,25 @@ use crate::tensor::{dot, Mat};
 use crate::util::threadpool::ThreadPool;
 
 use super::batch::HeadProblem;
-use super::chunkwise::slice_rows;
+use super::chunkwise::{chunk_flops, forward_bytes, slice_rows};
 use super::KernelConfig;
+
+struct BwdCounters {
+    calls: &'static Counter,
+    chunks: &'static Counter,
+    flops: &'static Counter,
+    bytes: &'static Counter,
+}
+
+fn bwd_counters() -> &'static BwdCounters {
+    static M: OnceLock<BwdCounters> = OnceLock::new();
+    M.get_or_init(|| BwdCounters {
+        calls: counter("kernels.backward.calls"),
+        chunks: counter("kernels.backward.chunks"),
+        flops: counter("kernels.backward.flops"),
+        bytes: counter("kernels.backward.bytes"),
+    })
+}
 
 /// Gradients of one sequence problem: same shapes as the inputs, plus the
 /// gradient flowing into the initial state (zero-state problems can ignore
@@ -87,27 +107,35 @@ pub fn chunkwise_backward(
         assert_eq!((dsn.rows, dsn.cols), (dk, dv), "d_state shape");
     }
 
+    let _sp = obs::trace::span_with("kernel.chunkwise.backward", || {
+        vec![("L", l as f64), ("chunk", chunk as f64),
+             ("dk", dk as f64), ("dv", dv as f64)]
+    });
+
     // ---- forward pre-pass: checkpoint the state entering each chunk
     let mut s = initial_state
         .cloned()
         .unwrap_or_else(|| Mat::zeros(dk, dv));
     let mut checkpoints: Vec<Mat> = Vec::with_capacity(l.div_ceil(chunk));
-    let mut t0 = 0;
-    while t0 < l {
-        let c = chunk.min(l - t0);
-        checkpoints.push(s.clone());
-        let kc = slice_rows(k, t0, c);
-        let vc = slice_rows(v, t0, c);
-        let bc = &beta[t0..t0 + c];
-        let kb = scale_rows(&kc, bc);
-        let a = tril_matmul_nt(&kb, &kc, -1);
-        let t = tri_inv_unit_lower(&a);
-        let w = matmul(&t, &kb);
-        let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
-        let ws = matmul(&w, &s);
-        sub_in_place(&mut u_bar, &ws);
-        matmul_tn_acc(&mut s, &kc, &u_bar);
-        t0 += c;
+    {
+        let _ckpt_sp = obs::trace::span("kernel.backward.checkpoint");
+        let mut t0 = 0;
+        while t0 < l {
+            let c = chunk.min(l - t0);
+            checkpoints.push(s.clone());
+            let kc = slice_rows(k, t0, c);
+            let vc = slice_rows(v, t0, c);
+            let bc = &beta[t0..t0 + c];
+            let kb = scale_rows(&kc, bc);
+            let a = tril_matmul_nt(&kb, &kc, -1);
+            let t = tri_inv_unit_lower(&a);
+            let w = matmul(&t, &kb);
+            let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
+            let ws = matmul(&w, &s);
+            sub_in_place(&mut u_bar, &ws);
+            matmul_tn_acc(&mut s, &kc, &u_bar);
+            t0 += c;
+        }
     }
 
     // ---- reverse scan over chunks
@@ -117,9 +145,13 @@ pub fn chunkwise_backward(
     let mut dbeta = vec![0.0f32; l];
     let mut ds = d_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
 
+    let mut flops = 0u64;
     for ci in (0..checkpoints.len()).rev() {
         let t0 = ci * chunk;
         let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.backward.chunk");
+        // recompute (≈ forward) + gradient products: ~3× the forward chunk
+        flops += 3 * chunk_flops(c, dk, dv);
         let s_in = &checkpoints[ci];
         let qc = slice_rows(q, t0, c);
         let kc = slice_rows(k, t0, c);
@@ -212,6 +244,13 @@ pub fn chunkwise_backward(
         sub_in_place(&mut ds, &wtd);
     }
 
+    let bm = bwd_counters();
+    bm.calls.inc();
+    bm.chunks.add(checkpoints.len() as u64);
+    bm.flops.add(flops);
+    // checkpoint pre-pass re-reads the inputs, gradients are written: ~3×
+    bm.bytes.add(3 * forward_bytes(l, dk, dv));
+
     Gradients { dq, dk: dk_out, dv: dv_out, dbeta, dstate: ds }
 }
 
@@ -235,6 +274,10 @@ pub fn backward_batched_on(pool: &ThreadPool, problems: &[HeadProblem],
     if let Some(dsn) = d_state {
         assert_eq!(problems.len(), dsn.len(), "one d_state per problem");
     }
+    let _sp = obs::trace::span_with("kernel.batch", || {
+        vec![("problems", problems.len() as f64),
+             ("threads", pool.size() as f64)]
+    });
     let mut slots: Vec<Option<Gradients>> = Vec::new();
     slots.resize_with(problems.len(), || None);
     pool.scope(|s| {
@@ -242,6 +285,7 @@ pub fn backward_batched_on(pool: &ThreadPool, problems: &[HeadProblem],
             let go = &d_o[i];
             let gs = d_state.map(|dsn| &dsn[i]);
             s.spawn(move || {
+                let _head_sp = obs::trace::span("kernel.head");
                 *slot = Some(p.backward(chunk, go, gs));
             });
         }

@@ -6,11 +6,19 @@
 //! the batch dimension is embarrassingly parallel — exactly how the Pallas
 //! kernel grids over (batch, head) on the accelerator.
 
+use std::sync::OnceLock;
+
+use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::Mat;
 use crate::util::threadpool::ThreadPool;
 
 use super::chunkwise::chunkwise_forward;
 use super::{Forward, KernelConfig};
+
+fn head_problems_counter() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    *C.get_or_init(|| counter("kernels.batch.problems"))
+}
 
 /// One (batch, head) sequence problem.
 #[derive(Debug, Clone)]
@@ -63,12 +71,18 @@ where
     R: Send,
     F: Fn(&HeadProblem) -> R + Sync,
 {
+    let _sp = obs::trace::span_with("kernel.batch", || {
+        vec![("problems", problems.len() as f64),
+             ("threads", pool.size() as f64)]
+    });
+    head_problems_counter().add(problems.len() as u64);
     let mut slots: Vec<Option<R>> = Vec::new();
     slots.resize_with(problems.len(), || None);
     let f = &f;
     pool.scope(|s| {
         for (slot, p) in slots.iter_mut().zip(problems) {
             s.spawn(move || {
+                let _head_sp = obs::trace::span("kernel.head");
                 *slot = Some(f(p));
             });
         }

@@ -17,6 +17,9 @@
 //! blocked/accumulating, the chunk loop reuses one set of intermediates,
 //! and a trailing partial chunk (L % C ≠ 0) is supported.
 
+use std::sync::OnceLock;
+
+use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
     matmul, matmul_into, matmul_tn_acc, scale_rows, sub_in_place,
     tril_matmul_nt, tri_inv_unit_lower,
@@ -24,6 +27,51 @@ use crate::tensor::blocked::{
 use crate::tensor::{axpy, Mat};
 
 use super::Forward;
+
+/// Work counters for the forward kernel, interned once.
+struct FwdCounters {
+    calls: &'static Counter,
+    chunks: &'static Counter,
+    flops: &'static Counter,
+    bytes: &'static Counter,
+}
+
+fn fwd_counters() -> &'static FwdCounters {
+    static M: OnceLock<FwdCounters> = OnceLock::new();
+    M.get_or_init(|| FwdCounters {
+        calls: counter("kernels.forward.calls"),
+        chunks: counter("kernels.forward.chunks"),
+        flops: counter("kernels.forward.flops"),
+        bytes: counter("kernels.forward.bytes"),
+    })
+}
+
+struct RecCounters {
+    steps: &'static Counter,
+    flops: &'static Counter,
+}
+
+fn rec_counters() -> &'static RecCounters {
+    static M: OnceLock<RecCounters> = OnceLock::new();
+    M.get_or_init(|| RecCounters {
+        steps: counter("kernels.recurrent.steps"),
+        flops: counter("kernels.recurrent.flops"),
+    })
+}
+
+/// Estimated FLOPs of one forward chunk (2mnk per dense matmul, triangle
+/// products at half, c³/3 for the unit-lower inverse) — an estimate for
+/// roofline-style ratios, not an exact op count.
+pub(crate) fn chunk_flops(c: usize, dk: usize, dv: usize) -> u64 {
+    let (c, dk, dv) = (c as u64, dk as u64, dv as u64);
+    4 * c * c * (dk + dv) + c * c * c / 3 + 6 * c * dk * dv
+}
+
+/// Estimated f32 bytes moved by one forward call (inputs + outputs +
+/// state read/write).
+pub(crate) fn forward_bytes(l: usize, dk: usize, dv: usize) -> u64 {
+    (4 * (2 * l * dk + 2 * l * dv + l + 2 * dk * dv)) as u64
+}
 
 /// Chunkwise forward for one sequence.  `q,k: [L,dk]`, `v: [L,dv]`,
 /// `beta: [L]`; `chunk` may not divide L (the tail chunk is shorter).
@@ -46,14 +94,22 @@ pub fn chunkwise_forward(
         assert_eq!((s0.rows, s0.cols), (dk, dv), "initial state shape");
     }
 
+    let _sp = obs::trace::span_with("kernel.chunkwise.forward", || {
+        vec![("L", l as f64), ("chunk", chunk as f64),
+             ("dk", dk as f64), ("dv", dv as f64)]
+    });
+
     let mut s = initial_state
         .cloned()
         .unwrap_or_else(|| Mat::zeros(dk, dv));
     let mut o = Mat::zeros(l, dv);
 
+    let mut flops = 0u64;
+    let mut nchunks = 0u64;
     let mut t0 = 0;
     while t0 < l {
         let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.chunkwise.chunk");
         let qc = slice_rows(q, t0, c);
         let kc = slice_rows(k, t0, c);
         let vc = slice_rows(v, t0, c);
@@ -80,8 +136,15 @@ pub fn chunkwise_forward(
         // S += K_cᵀ U̅
         matmul_tn_acc(&mut s, &kc, &u_bar);
 
+        flops += chunk_flops(c, dk, dv);
+        nchunks += 1;
         t0 += c;
     }
+    let m = fwd_counters();
+    m.calls.inc();
+    m.chunks.add(nchunks);
+    m.flops.add(flops);
+    m.bytes.add(forward_bytes(l, dk, dv));
     Forward { o, state: s }
 }
 
@@ -125,6 +188,9 @@ pub fn recurrent_step(
             axpy(out, qi, s.row(i));
         }
     }
+    let m = rec_counters();
+    m.steps.inc();
+    m.flops.add((6 * dk * dv) as u64);
 }
 
 pub(crate) fn slice_rows(m: &Mat, start: usize, n: usize) -> Mat {

@@ -33,6 +33,7 @@ pub mod eval;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod reference;
 pub mod repro;
 pub mod runtime;

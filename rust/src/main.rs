@@ -41,11 +41,16 @@ COMMANDS:
   reproduce   fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|chunks|all
               [--steps N] [--seed S] [--eval-batches N]
   inspect     [--artifact NAME]
+  trace-check PATH   validate a Chrome trace-event JSON written via
+                     DELTANET_TRACE (non-empty, well-formed events)
 
 TASKS: corpus | mqar | mqar:<pairs> | mad:<task> | regbench | recall:<style>
   mad tasks: compress fuzzy_recall in_context_recall memorize noisy_recall
              selective_copy
-  recall styles: swde squad fda";
+  recall styles: swde squad fda
+
+Set DELTANET_TRACE=out.json to record a hierarchical span trace of any
+command; open the file at https://ui.perfetto.dev";
 
 fn parse_task(task: &str, seed: u64) -> deltanet::Result<DataConfig> {
     Ok(match task {
@@ -68,6 +73,7 @@ fn main() -> deltanet::Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    deltanet::obs::trace::init_from_env();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let runtime = Runtime::new(&artifacts).context("creating PJRT runtime")?;
     let seed: u64 = args.get_parse("seed", 0)?;
@@ -219,6 +225,44 @@ fn main() -> deltanet::Result<()> {
                 repro::run(&runtime, which, &opts)?;
             }
         }
+        "trace-check" => {
+            let path = args.positional.get(1)
+                .context("usage: deltanet trace-check PATH")?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            let j = deltanet::util::json::Json::parse(&text)
+                .with_context(|| format!("{path} is not valid JSON"))?;
+            let events = j.get("traceEvents")
+                .context("missing traceEvents key")?
+                .as_arr()?;
+            let mut spans = 0usize;
+            for (i, e) in events.iter().enumerate() {
+                let ph = e.get("ph")
+                    .with_context(|| format!("event {i} missing ph"))?
+                    .as_str()?;
+                e.get("name")
+                    .with_context(|| format!("event {i} missing name"))?
+                    .as_str()?;
+                match ph {
+                    "X" => {
+                        e.get("ts")
+                            .with_context(|| format!("event {i} missing ts"))?
+                            .as_f64()?;
+                        e.get("dur")
+                            .with_context(|| format!("event {i} missing dur"))?
+                            .as_f64()?;
+                        spans += 1;
+                    }
+                    "M" => {}
+                    other => deltanet::bail!(
+                        "event {i} has unexpected phase {other:?}"),
+                }
+            }
+            deltanet::ensure!(spans > 0,
+                              "{path} contains no span events — the traced \
+                               run recorded nothing");
+            println!("{path}: OK ({spans} spans, {} events)", events.len());
+        }
         "inspect" => match args.get("artifact") {
             Some(name) => {
                 let exe = runtime.load(name)?;
@@ -243,6 +287,10 @@ fn main() -> deltanet::Result<()> {
         other => {
             deltanet::bail!("unknown command {other:?}\n\n{USAGE}");
         }
+    }
+    if let Some(path) = deltanet::obs::trace::write_trace_from_env()? {
+        println!("trace written to {} (open at https://ui.perfetto.dev)",
+                 path.display());
     }
     Ok(())
 }

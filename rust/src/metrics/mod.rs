@@ -39,6 +39,11 @@ pub struct Throughput {
     steps: u64,
     step_time: Ewma,
     last_step: Option<Instant>,
+    /// Clock origin for the rate: (time of the first recorded step, tokens
+    /// already counted at that moment).  Measuring from construction time
+    /// understated the rate whenever setup (model init, artifact load)
+    /// happened between `Throughput::new()` and the first step.
+    first_step: Option<(Instant, u64)>,
 }
 
 impl Default for Throughput {
@@ -55,6 +60,7 @@ impl Throughput {
             steps: 0,
             step_time: Ewma::new(0.1),
             last_step: None,
+            first_step: None,
         }
     }
 
@@ -66,10 +72,23 @@ impl Throughput {
         self.last_step = Some(now);
         self.tokens += tokens as u64;
         self.steps += 1;
+        if self.first_step.is_none() {
+            // steady-state origin: the first step's own tokens (and any
+            // cold-start cost inside it) are excluded from the rate
+            self.first_step = Some((now, self.tokens));
+        }
     }
 
+    /// Steady-state tokens/sec, clocked from the completion of the first
+    /// recorded step.  0.0 until a second step lands.
     pub fn tokens_per_sec(&self) -> f64 {
-        self.tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+        match self.first_step {
+            None => 0.0,
+            Some((t0, tok0)) => {
+                (self.tokens - tok0) as f64
+                    / t0.elapsed().as_secs_f64().max(1e-9)
+            }
+        }
     }
 
     pub fn steps(&self) -> u64 {
@@ -85,31 +104,51 @@ impl Throughput {
     }
 }
 
-/// One JSONL record of a training run.
-#[derive(Debug)]
+/// One JSONL record of a training run.  The `Option` fields are emitted
+/// only when present (the host engine reports a per-phase breakdown, the
+/// artifact engine does not), so old log consumers keep parsing.
+#[derive(Debug, Default)]
 pub struct StepRecord {
     pub step: usize,
     pub loss: f32,
     pub lr: f64,
     pub tokens_per_sec: f64,
     pub elapsed_secs: f64,
+    pub grad_norm: Option<f64>,
+    pub forward_ms: Option<f64>,
+    pub backward_ms: Option<f64>,
+    pub optimizer_ms: Option<f64>,
 }
 
 impl StepRecord {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("step", Json::num(self.step as f64)),
             ("loss", Json::num(self.loss as f64)),
             ("lr", Json::num(self.lr)),
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
             ("elapsed_secs", Json::num(self.elapsed_secs)),
-        ])
+        ];
+        let optional = [
+            ("grad_norm", self.grad_norm),
+            ("forward_ms", self.forward_ms),
+            ("backward_ms", self.backward_ms),
+            ("optimizer_ms", self.optimizer_ms),
+        ];
+        for (name, v) in optional {
+            if let Some(x) = v {
+                fields.push((name, Json::num(x)));
+            }
+        }
+        Json::obj(fields)
     }
 }
 
-/// Append-only JSONL logger (None path = in-memory only).
+/// Append-only JSONL logger (None path = in-memory only).  Writes go
+/// through a `BufWriter`; call [`Self::flush`] at run boundaries — Drop
+/// flushes too, but cannot surface I/O errors.
 pub struct RunLog {
-    file: Option<std::fs::File>,
+    file: Option<std::io::BufWriter<std::fs::File>>,
     pub records: Vec<StepRecord>,
 }
 
@@ -120,7 +159,7 @@ impl RunLog {
                 if let Some(dir) = p.parent() {
                     std::fs::create_dir_all(dir)?;
                 }
-                Some(std::fs::File::create(p)?)
+                Some(std::io::BufWriter::new(std::fs::File::create(p)?))
             }
             None => None,
         };
@@ -135,6 +174,14 @@ impl RunLog {
         Ok(())
     }
 
+    /// Flush buffered records to disk, surfacing any I/O error.
+    pub fn flush(&mut self) -> crate::Result<()> {
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
+
     /// Mean loss of the last `n` records (loss-curve summaries).
     pub fn recent_loss(&self, n: usize) -> Option<f32> {
         if self.records.is_empty() {
@@ -142,6 +189,14 @@ impl RunLog {
         }
         let tail = &self.records[self.records.len().saturating_sub(n)..];
         Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+}
+
+impl Drop for RunLog {
+    fn drop(&mut self) {
+        if let Some(f) = &mut self.file {
+            let _ = f.flush();
+        }
     }
 }
 
@@ -168,6 +223,23 @@ mod tests {
     }
 
     #[test]
+    fn throughput_clock_starts_at_first_step() {
+        // idle setup time before the first step must not dilute the rate
+        let mut t = Throughput::new();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        assert_eq!(t.tokens_per_sec(), 0.0); // no steps yet
+        t.record_step(100);
+        t.record_step(100);
+        let steady = t.tokens_per_sec();
+        let naive = t.tokens as f64 / t.elapsed_secs();
+        assert!(steady > 0.0);
+        // naive rate spans the 25ms sleep over 200 tokens; steady spans
+        // only the inter-step gap over 100 tokens and must be far higher
+        assert!(steady > naive,
+                "steady {steady} should beat naive {naive}");
+    }
+
+    #[test]
     fn runlog_writes_jsonl() {
         let dir = std::env::temp_dir().join("deltanet_test_log");
         let path = dir.join("run.jsonl");
@@ -175,10 +247,35 @@ mod tests {
         log.log(StepRecord {
             step: 1, loss: 2.5, lr: 1e-4,
             tokens_per_sec: 10.0, elapsed_secs: 0.1,
+            ..Default::default()
         }).unwrap();
         drop(log);
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"loss\":2.5"));
+        // absent optional fields stay out of the record entirely
+        assert!(!text.contains("grad_norm"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn runlog_flush_persists_without_drop() {
+        let dir = std::env::temp_dir().join("deltanet_test_log_flush");
+        let path = dir.join("run.jsonl");
+        let mut log = RunLog::new(Some(&path)).unwrap();
+        log.log(StepRecord {
+            step: 0, loss: 1.0, lr: 1e-3,
+            tokens_per_sec: 5.0, elapsed_secs: 0.01,
+            grad_norm: Some(0.75),
+            forward_ms: Some(3.0),
+            backward_ms: Some(6.0),
+            optimizer_ms: Some(1.0),
+        }).unwrap();
+        log.flush().unwrap();
+        // read while `log` is still alive: only flush made this visible
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"grad_norm\":0.75"));
+        assert!(text.contains("\"forward_ms\":3"));
+        drop(log);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -189,6 +286,7 @@ mod tests {
             log.log(StepRecord {
                 step: i, loss: *l, lr: 0.0,
                 tokens_per_sec: 0.0, elapsed_secs: 0.0,
+                ..Default::default()
             }).unwrap();
         }
         assert_eq!(log.recent_loss(2), Some(1.5));

@@ -22,10 +22,13 @@
 
 pub mod opt;
 
+use std::time::Instant;
+
 use crate::data::Batch;
 use crate::kernels::{
     backward_batched_on, forward_batched_on, HeadProblem,
 };
+use crate::obs;
 use crate::tensor::blocked::{matmul, matmul_nt_into, matmul_tn_acc};
 use crate::tensor::rng::Rng;
 use crate::tensor::{axpy, dot, l2_normalize, softmax, Mat};
@@ -33,6 +36,15 @@ use crate::util::threadpool::ThreadPool;
 use crate::ensure;
 
 pub use opt::{AdamW, Optimizer, Sgd};
+
+/// Wall-clock of the two phases inside one `loss_and_grads` call,
+/// reported by [`HostModel::loss_and_grads_timed`] and surfaced through
+/// `StepRecord`'s per-phase fields.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseMillis {
+    pub forward_ms: f64,
+    pub backward_ms: f64,
+}
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
@@ -239,6 +251,9 @@ impl HostModel {
                       -> crate::Result<(Vec<LayerCache>, Mat)> {
         let (bsz, l) = (batch.batch, batch.seq_len);
         ensure!(bsz > 0 && l > 0, "empty batch");
+        let _sp = obs::trace::span_with("model.forward", || {
+            vec![("B", bsz as f64), ("L", l as f64)]
+        });
         let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
         let dh = d / h;
 
@@ -255,7 +270,10 @@ impl HostModel {
         }
 
         let mut caches = Vec::with_capacity(self.layers.len());
-        for layer in &self.layers {
+        for (li, layer) in self.layers.iter().enumerate() {
+            let _layer_sp = obs::trace::span_with("model.layer", || {
+                vec![("layer", li as f64)]
+            });
             let q_all = matmul(&x, &layer.wq);
             let k_all = matmul(&x, &layer.wk);
             let v_all = matmul(&x, &layer.wv);
@@ -336,7 +354,24 @@ impl HostModel {
     /// gradients.
     pub fn loss_and_grads(&self, batch: &Batch)
                           -> crate::Result<(f32, ModelGrads)> {
-        let (caches, x_final) = self.forward_cached(batch)?;
+        let (loss, grads, _) = self.loss_and_grads_timed(batch)?;
+        Ok((loss, grads))
+    }
+
+    /// [`Self::loss_and_grads`] plus per-phase wall-clock, for step-level
+    /// breakdowns in the trainer's log.
+    pub fn loss_and_grads_timed(&self, batch: &Batch)
+                                -> crate::Result<(f32, ModelGrads,
+                                                  PhaseMillis)> {
+        let t_fwd = Instant::now();
+        let (caches, x_final) = {
+            let _fwd_sp = obs::trace::span("train.forward");
+            self.forward_cached(batch)?
+        };
+        let forward_ms = t_fwd.elapsed().as_secs_f64() * 1e3;
+
+        let t_bwd = Instant::now();
+        let _bwd_sp = obs::trace::span("train.backward");
         let (bsz, l) = (batch.batch, batch.seq_len);
         let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
         let dh = d / h;
@@ -457,7 +492,8 @@ impl HostModel {
                 axpy(g.embed.row_mut(tok), 1.0, dx.row(b * l + t));
             }
         }
-        Ok((loss as f32, g))
+        let backward_ms = t_bwd.elapsed().as_secs_f64() * 1e3;
+        Ok((loss as f32, g, PhaseMillis { forward_ms, backward_ms }))
     }
 
     /// Forward evaluation: (nll_sum, mask_sum, argmax preds [B·L]).
@@ -521,6 +557,9 @@ impl HostModel {
             -> crate::Result<Mat>,
     {
         let bsz = tokens.len();
+        let _sp = obs::trace::span_with("model.decode_step", || {
+            vec![("B", bsz as f64)]
+        });
         let (d, h) = (self.cfg.d_model, self.cfg.n_heads);
         let dh = d / h;
         ensure!(states.len() == self.cfg.n_layers * h * bsz,

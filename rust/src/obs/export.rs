@@ -1,0 +1,113 @@
+//! Minimal metrics snapshot endpoint over `std::net` — no async runtime.
+//!
+//! Serves the [`super::metrics`] registry on demand:
+//!
+//! * `GET /metrics` — one metric per line (text)
+//! * `GET /metrics.json` — the JSON snapshot
+//!
+//! The listener polls non-blocking accepts on a named thread so shutdown
+//! (drop or [`MetricsServer::shutdown`]) never hangs on a blocked accept.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics;
+
+const POLL: Duration = Duration::from_millis(25);
+
+/// Handle to a running metrics endpoint; stops serving when dropped.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// The bound address (useful with a `:0` ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:9464"` or `"127.0.0.1:0"`) and serve the
+/// metrics snapshot until the returned handle is dropped.
+pub fn serve_metrics(addr: &str) -> crate::Result<MetricsServer> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| crate::err!("binding metrics endpoint {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("metrics-endpoint".to_string())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = handle_conn(stream);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(POLL);
+                    }
+                    Err(_) => std::thread::sleep(POLL),
+                }
+            }
+        })?;
+    Ok(MetricsServer { addr: bound, stop, handle: Some(handle) })
+}
+
+fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/");
+
+    let (status, ctype, body) = match path {
+        "/metrics" | "/" => (
+            "200 OK",
+            "text/plain; charset=utf-8",
+            metrics::snapshot().render_text(),
+        ),
+        "/metrics.json" => (
+            "200 OK",
+            "application/json",
+            metrics::snapshot().to_json().render() + "\n",
+        ),
+        _ => ("404 Not Found", "text/plain; charset=utf-8",
+              "not found\n".to_string()),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}

@@ -1,0 +1,387 @@
+//! Global metrics registry: atomic counters, gauges, and log-linear
+//! latency histograms addressable by static name.
+//!
+//! Handles are interned once and live for the process
+//! (`&'static Counter`), so hot paths cache them in a `OnceLock` and pay
+//! only a relaxed atomic op per update:
+//!
+//! ```ignore
+//! fn steps() -> &'static Counter {
+//!     static C: OnceLock<&'static Counter> = OnceLock::new();
+//!     *C.get_or_init(|| counter("train.steps"))
+//! }
+//! steps().inc();
+//! ```
+//!
+//! Histograms use HdrHistogram-style log-linear buckets over integer
+//! microseconds: exact below 16 µs, then 16 sub-buckets per power of two
+//! (≤ ~6.25% relative quantile error), covering the full `u64` range in
+//! 976 fixed buckets with no allocation on record.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, live workers, ...).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.v.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, value: i64) {
+        self.v.store(value, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// 16 linear sub-buckets per power of two above 2^SUB_BITS.
+const SUB_BITS: u32 = 4;
+const SUB: u32 = 1 << SUB_BITS; // 16
+/// 16 exact + 16 per octave for octaves 4..=63.
+const N_BUCKETS: usize = (SUB + (64 - SUB_BITS) * SUB) as usize; // 976
+
+/// Lock-free latency histogram over integer microseconds.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// Point-in-time quantile summary of one [`Histogram`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistStats {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+fn bucket_index(us: u64) -> usize {
+    if us < SUB as u64 {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros(); // >= SUB_BITS
+    let octave = (msb - SUB_BITS) as u64;
+    let sub = (us >> (msb - SUB_BITS)) & (SUB as u64 - 1);
+    (SUB as u64 + octave * SUB as u64 + sub) as usize
+}
+
+/// Inclusive upper edge of a bucket — the value reported for quantiles
+/// falling in it (over-estimate bounded by the bucket width).
+fn bucket_upper_us(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let octave = ((idx - SUB as usize) / SUB as usize) as u32;
+    let sub = ((idx - SUB as usize) % SUB as usize) as u64;
+    let msb = octave + SUB_BITS;
+    let lower = (1u64 << msb) + (sub << (msb - SUB_BITS));
+    lower + ((1u64 << (msb - SUB_BITS)) - 1)
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in milliseconds (negative / non-finite
+    /// values clamp to zero).
+    pub fn record(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 {
+            (ms * 1e3).round() as u64 // saturating float→int cast
+        } else {
+            0
+        };
+        self.record_us(us);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Quantile in milliseconds, `q` in [0, 1]; 0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                let us =
+                    bucket_upper_us(i).min(self.max_us.load(Ordering::Relaxed));
+                return us as f64 / 1e3;
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn stats(&self) -> HistStats {
+        HistStats {
+            count: self.count(),
+            mean_ms: self.mean_ms(),
+            p50_ms: self.quantile_ms(0.50),
+            p95_ms: self.quantile_ms(0.95),
+            p99_ms: self.quantile_ms(0.99),
+            max_ms: self.max_ms(),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: RwLock<BTreeMap<&'static str, &'static Counter>>,
+    gauges: RwLock<BTreeMap<&'static str, &'static Gauge>>,
+    histograms: RwLock<BTreeMap<&'static str, &'static Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+fn intern<T: Default>(
+    map: &RwLock<BTreeMap<&'static str, &'static T>>,
+    name: &'static str,
+) -> &'static T {
+    if let Some(&found) = map.read().unwrap().get(name) {
+        return found;
+    }
+    let mut w = map.write().unwrap();
+    let slot = w.entry(name).or_insert_with(|| {
+        let leaked: &'static T = Box::leak(Box::new(T::default()));
+        leaked
+    });
+    *slot
+}
+
+/// Interned counter for `name` (created on first use, lives forever).
+pub fn counter(name: &'static str) -> &'static Counter {
+    intern(&registry().counters, name)
+}
+
+/// Interned gauge for `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    intern(&registry().gauges, name)
+}
+
+/// Interned latency histogram for `name`.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    intern(&registry().histograms, name)
+}
+
+/// Point-in-time copy of every registered metric.
+pub struct MetricsSnapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, i64)>,
+    pub histograms: Vec<(&'static str, HistStats)>,
+}
+
+/// Snapshot the whole registry (sorted by name — BTreeMap order).
+pub fn snapshot() -> MetricsSnapshot {
+    let r = registry();
+    MetricsSnapshot {
+        counters: r.counters.read().unwrap().iter()
+            .map(|(&n, c)| (n, c.get())).collect(),
+        gauges: r.gauges.read().unwrap().iter()
+            .map(|(&n, g)| (n, g.get())).collect(),
+        histograms: r.histograms.read().unwrap().iter()
+            .map(|(&n, h)| (n, h.stats())).collect(),
+    }
+}
+
+impl MetricsSnapshot {
+    /// One metric per line — the `/metrics` text payload.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("counter {name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("gauge {name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!(
+                "hist {name} count {} mean_ms {:.3} p50_ms {:.3} \
+                 p95_ms {:.3} p99_ms {:.3} max_ms {:.3}\n",
+                h.count, h.mean_ms, h.p50_ms, h.p95_ms, h.p99_ms, h.max_ms));
+        }
+        out
+    }
+
+    /// The `/metrics.json` payload.
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.iter()
+            .map(|&(n, v)| (n, Json::num(v as f64)))
+            .collect::<Vec<_>>();
+        let gauges = self.gauges.iter()
+            .map(|&(n, v)| (n, Json::num(v as f64)))
+            .collect::<Vec<_>>();
+        let hists = self.histograms.iter()
+            .map(|&(n, h)| {
+                (n, Json::obj(vec![
+                    ("count", Json::num(h.count as f64)),
+                    ("mean_ms", Json::num(h.mean_ms)),
+                    ("p50_ms", Json::num(h.p50_ms)),
+                    ("p95_ms", Json::num(h.p95_ms)),
+                    ("p99_ms", Json::num(h.p99_ms)),
+                    ("max_ms", Json::num(h.max_ms)),
+                ]))
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = counter("test.metrics.counter");
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), before + 5);
+        // same name → same interned handle
+        assert!(std::ptr::eq(c, counter("test.metrics.counter")));
+
+        let g = gauge("test.metrics.gauge");
+        g.set(3);
+        g.add(-5);
+        assert_eq!(g.get(), -2);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        for us in [0u64, 1, 15, 16, 17, 31, 32, 100, 1000, 123_456,
+                   u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(us);
+            assert!(i < N_BUCKETS, "index {i} out of range for {us}");
+            assert!(i >= prev, "index not monotone at {us}");
+            // the bucket's upper edge must not under-report the value
+            // by more than one sub-bucket width
+            assert!(bucket_upper_us(i) >= us,
+                    "upper edge {} < value {us}", bucket_upper_us(i));
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_relative_error() {
+        let h = Histogram::new();
+        for ms in 1..=1000u64 {
+            h.record(ms as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        for (q, want_ms) in [(0.50, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let got = h.quantile_ms(q);
+            let rel = (got - want_ms).abs() / want_ms;
+            assert!(rel < 0.07, "p{q}: got {got} want ~{want_ms}");
+            assert!(got >= want_ms * 0.999,
+                    "quantile must not under-report: {got} < {want_ms}");
+        }
+        assert!((h.max_ms() - 1000.0).abs() < 1e-9);
+        assert!((h.mean_ms() - 500.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn snapshot_renders_all_kinds() {
+        counter("test.snap.counter").inc();
+        gauge("test.snap.gauge").set(7);
+        histogram("test.snap.hist").record(2.5);
+        let s = snapshot();
+        let text = s.render_text();
+        assert!(text.contains("counter test.snap.counter"));
+        assert!(text.contains("gauge test.snap.gauge 7"));
+        assert!(text.contains("hist test.snap.hist"));
+        assert!(text.contains("p95_ms"));
+        let j = s.to_json();
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert!(parsed.get("histograms").unwrap()
+            .get("test.snap.hist").unwrap()
+            .get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Zero-dependency observability: hierarchical trace spans + a global
+//! metrics registry.
+//!
+//! Two complementary views of the same run:
+//!
+//! * [`trace`] — scoped RAII spans with per-thread span stacks, exported
+//!   as Chrome trace-event JSON (load in Perfetto or `chrome://tracing`).
+//!   Off by default; one relaxed atomic load per span when disabled, so
+//!   instrumentation can live permanently on hot paths.  Enable with
+//!   `DELTANET_TRACE=out.json` (see [`trace::init_from_env`]).
+//! * [`metrics`] — always-on atomic counters, gauges, and log-linear
+//!   latency histograms (p50/p95/p99) addressable by static name, e.g.
+//!   `metrics::counter("kernels.forward.flops").add(n)`.
+//! * [`export`] — a `std::net`-only HTTP endpoint serving the metrics
+//!   snapshot as text (`/metrics`) or JSON (`/metrics.json`).
+//!
+//! Naming convention (dot-separated, coarse→fine):
+//! `kernel.*` / `kernels.*` for the chunkwise/backward/batch layer,
+//! `pool.*` for the thread pool, `model.*` + `train.*` for the training
+//! stack, `decode.*` + `serve.*` for inference, `backend.*` for the
+//! `Backend`-trait boundary.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;

@@ -18,9 +18,36 @@
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::metrics::{counter, gauge, Counter, Gauge};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool-wide observability handles, interned once (all pools share them).
+struct PoolMetrics {
+    /// jobs enqueued but not yet picked up by a worker
+    queue_depth: &'static Gauge,
+    /// live worker threads across all pools
+    workers: &'static Gauge,
+    jobs_completed: &'static Counter,
+    job_panics: &'static Counter,
+    /// cumulative wall time workers spent executing jobs (utilization =
+    /// busy_us / (workers × elapsed))
+    busy_us: &'static Counter,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: OnceLock<PoolMetrics> = OnceLock::new();
+    M.get_or_init(|| PoolMetrics {
+        queue_depth: gauge("pool.queue_depth"),
+        workers: gauge("pool.workers"),
+        jobs_completed: counter("pool.jobs_completed"),
+        job_panics: counter("pool.job_panics"),
+        busy_us: counter("pool.busy_us"),
+    })
+}
 
 /// Fixed-size thread pool executing boxed jobs.
 pub struct ThreadPool {
@@ -32,22 +59,37 @@ impl ThreadPool {
     pub fn new(n: usize) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n.max(1))
-            .map(|_| {
+        let workers: Vec<_> = (0..n.max(1))
+            .map(|i| {
                 let rx = rx.clone();
-                std::thread::spawn(move || loop {
-                    let job = rx.lock().unwrap().recv();
-                    match job {
-                        // a panicking job must not kill the worker; panics
-                        // are surfaced through JobHandle / scope instead
-                        Ok(job) => {
-                            let _ = catch_unwind(AssertUnwindSafe(job));
+                std::thread::Builder::new()
+                    .name(format!("pool-w{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            // a panicking job must not kill the worker;
+                            // panics are surfaced through JobHandle / scope
+                            Ok(job) => {
+                                let m = pool_metrics();
+                                m.queue_depth.add(-1);
+                                let t = Instant::now();
+                                let ok =
+                                    catch_unwind(AssertUnwindSafe(job))
+                                        .is_ok();
+                                m.busy_us
+                                    .add(t.elapsed().as_micros() as u64);
+                                m.jobs_completed.inc();
+                                if !ok {
+                                    m.job_panics.inc();
+                                }
+                            }
+                            Err(_) => break,
                         }
-                        Err(_) => break,
-                    }
-                })
+                    })
+                    .expect("spawning pool worker thread")
             })
             .collect();
+        pool_metrics().workers.add(workers.len() as i64);
         ThreadPool { tx: Some(tx), workers }
     }
 
@@ -59,6 +101,7 @@ impl ThreadPool {
     fn send(&self, job: Job) {
         // workers are panic-proof, so the channel can only close on Drop;
         // &self guarantees the pool (and tx) is still alive here
+        pool_metrics().queue_depth.add(1);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -78,6 +121,11 @@ impl ThreadPool {
         let s2 = state.clone();
         self.send(Box::new(move || {
             let ok = catch_unwind(AssertUnwindSafe(f)).is_ok();
+            if !ok {
+                // the worker-level catch sees Ok (this wrapper caught it),
+                // so count the panic here
+                pool_metrics().job_panics.inc();
+            }
             *s2.done.lock().unwrap() = Some(ok);
             s2.cv.notify_all();
         }));
@@ -117,6 +165,7 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.tx.take());
+        pool_metrics().workers.add(-(self.workers.len() as i64));
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -202,6 +251,7 @@ impl<'pool, 'env> Scope<'pool, 'env> {
         self.pool.send(Box::new(move || {
             if catch_unwind(AssertUnwindSafe(job)).is_err() {
                 state.panics.fetch_add(1, Ordering::SeqCst);
+                pool_metrics().job_panics.inc();
             }
             let mut pending = state.pending.lock().unwrap();
             *pending -= 1;
@@ -299,6 +349,21 @@ mod tests {
         for (i, x) in data.iter().enumerate() {
             assert_eq!(*x, i * 2);
         }
+    }
+
+    #[test]
+    fn pool_metrics_count_completed_jobs() {
+        // global monotone counter: assert on the delta (other tests may
+        // run pools concurrently, so >= not ==)
+        let before = pool_metrics().jobs_completed.get();
+        let pool = ThreadPool::new(2);
+        let hs: Vec<JobHandle> =
+            (0..10).map(|_| pool.submit(|| {})).collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        drop(pool);
+        assert!(pool_metrics().jobs_completed.get() >= before + 10);
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Observability integration: a traced host training run must produce a
+//! valid Chrome trace with the expected span hierarchy, and the metrics
+//! endpoint must serve the registry over HTTP.
+
+use std::io::{Read, Write};
+
+use deltanet::config::DataConfig;
+use deltanet::data::build_task;
+use deltanet::obs;
+use deltanet::runtime::Runtime;
+use deltanet::util::json::Json;
+
+#[derive(Debug)]
+struct Ev {
+    name: String,
+    ts: f64,
+    dur: f64,
+    tid: f64,
+    depth: f64,
+}
+
+fn span_events(trace: &Json) -> Vec<Ev> {
+    trace
+        .get("traceEvents")
+        .expect("traceEvents key")
+        .as_arr()
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+        .map(|e| Ev {
+            name: e.get("name").unwrap().as_str().unwrap().to_string(),
+            ts: e.get("ts").unwrap().as_f64().unwrap(),
+            dur: e.get("dur").unwrap().as_f64().unwrap(),
+            tid: e.get("tid").unwrap().as_f64().unwrap(),
+            depth: e
+                .get("args")
+                .and_then(|a| a.get("depth"))
+                .map(|d| d.as_f64().unwrap())
+                .unwrap_or(0.0),
+        })
+        .collect()
+}
+
+/// `inner` strictly nests inside `outer`: same thread, time-contained,
+/// one or more levels deeper.
+fn nests_within(inner: &Ev, outer: &Ev) -> bool {
+    let eps = 1e-3; // µs slop for f64 rounding
+    inner.tid == outer.tid
+        && inner.ts + eps >= outer.ts
+        && inner.ts + inner.dur <= outer.ts + outer.dur + eps
+        && inner.depth > outer.depth
+}
+
+#[test]
+fn traced_host_training_emits_nested_chrome_trace() {
+    obs::trace::enable();
+
+    // two host training steps through the Trainer (span: train.step)
+    let runtime = Runtime::new("definitely-missing-artifacts").unwrap();
+    let mut trainer = deltanet::coordinator::Trainer::new(
+        &runtime, "deltanet_tiny", 3).unwrap();
+    let mut task = build_task(&DataConfig::Mqar { num_pairs: 4, seed: 9 });
+    for _ in 0..2 {
+        let b = task.sample(trainer.batch, trainer.seq_len);
+        trainer.train_step(&b, 1e-3).unwrap();
+    }
+    let bd = trainer.last_breakdown().expect("host engine breakdown");
+    assert!(bd.forward_ms >= 0.0 && bd.backward_ms >= 0.0);
+    assert!(bd.grad_norm.is_finite());
+
+    let dir = std::env::temp_dir().join("deltanet_obs_trace_test");
+    let path = dir.join("trace.json");
+    obs::trace::write_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let trace = Json::parse(&text).unwrap();
+    let events = span_events(&trace);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let have = |n: &str| events.iter().filter(|e| e.name == n);
+    for name in ["train.step", "train.forward", "train.backward",
+                 "train.optimizer", "model.forward", "kernel.batch",
+                 "kernel.chunkwise.forward", "kernel.chunkwise.chunk"] {
+        assert!(have(name).next().is_some(),
+                "no {name:?} span in trace; got {:?}",
+                events.iter().map(|e| &e.name).collect::<Vec<_>>());
+    }
+
+    // phases nest inside a train.step on the SAME thread
+    for phase in ["train.forward", "train.backward", "train.optimizer"] {
+        assert!(
+            have(phase).any(|p| have("train.step")
+                .any(|s| nests_within(p, s))),
+            "{phase} span does not nest inside any train.step span");
+    }
+    // per-chunk kernel spans nest inside a kernel forward (pool threads)
+    assert!(
+        have("kernel.chunkwise.chunk").any(|c| have("kernel.chunkwise.forward")
+            .any(|f| nests_within(c, f))),
+        "kernel.chunkwise.chunk does not nest in kernel.chunkwise.forward");
+
+    // the train.* step histograms were fed by the same run
+    assert!(obs::metrics::histogram("train.forward_ms").count() >= 2);
+    assert!(obs::metrics::counter("train.steps").get() >= 2);
+}
+
+fn fetch(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: t\r\n\
+                  Connection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    conn.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn metrics_endpoint_serves_decode_histograms() {
+    // the serving path records these; simulate a few decode latencies
+    let h = obs::metrics::histogram("serve.decode_ms");
+    for ms in [4.0, 8.0, 15.0, 40.0] {
+        h.record(ms);
+    }
+    let server = match obs::export::serve_metrics("127.0.0.1:0") {
+        Ok(s) => s,
+        // sandboxes without loopback sockets: skip rather than fail
+        Err(_) => return,
+    };
+    let addr = server.addr();
+
+    let text = fetch(addr, "/metrics");
+    assert!(text.starts_with("HTTP/1.1 200"), "bad response: {text}");
+    assert!(text.contains("serve.decode_ms"));
+    assert!(text.contains("p50_ms") && text.contains("p95_ms")
+            && text.contains("p99_ms"));
+
+    let raw = fetch(addr, "/metrics.json");
+    assert!(raw.starts_with("HTTP/1.1 200"));
+    let body = &raw[raw.find("\r\n\r\n").unwrap() + 4..];
+    let j = Json::parse(body).unwrap();
+    let hist = j.get("histograms").expect("histograms section")
+        .get("serve.decode_ms").expect("serve.decode_ms histogram");
+    assert!(hist.get("p95_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(hist.get("count").unwrap().as_f64().unwrap() >= 4.0);
+
+    assert!(fetch(addr, "/definitely-not-a-route")
+        .starts_with("HTTP/1.1 404"));
+    server.shutdown();
+}
