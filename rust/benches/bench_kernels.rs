@@ -1,0 +1,210 @@
+//! Microbench: scalar vs SIMD GFLOP/s per tensor primitive, at the
+//! chunkwise kernel's operating point (C=64, d=64..128).  Writes
+//! `BENCH_kernels.json` at the repo root (archived by CI's bench-smoke
+//! job), so the dispatch layer's speedup is measured per PR, not
+//! asserted.
+//!
+//!     cargo bench --bench bench_kernels
+//!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_kernels  # CI
+//!
+//! Each primitive runs twice through the same `tensor::blocked` /
+//! `tensor::simd` entry points: once with the dispatch level forced to
+//! Scalar, once at the natively detected level (AVX2+FMA where
+//! available).  Outputs of the two legs are pinned allclose(1e-4) to each
+//! other before timing, and on AVX2 hosts the matmul primitives must
+//! show >= 1.5x scalar GFLOP/s or the bench fails.
+//!
+//! Single-threaded by design: `simd::force_level` flips a process-global
+//! dispatch atomic, so nothing else may run kernels concurrently.
+
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::simd::{self, Level};
+use deltanet::tensor::{blocked, Mat};
+use deltanet::util::bench::{bench, repo_root, smoke_mode, BenchResult};
+use deltanet::util::json::Json;
+
+/// One primitive's scalar-vs-SIMD comparison.
+struct PrimResult {
+    name: String,
+    flops_per_call: f64,
+    scalar: BenchResult,
+    simd: BenchResult,
+}
+
+impl PrimResult {
+    fn gflops_scalar(&self) -> f64 {
+        self.flops_per_call / self.scalar.median_s / 1e9
+    }
+
+    fn gflops_simd(&self) -> f64 {
+        self.flops_per_call / self.simd.median_s / 1e9
+    }
+
+    fn speedup(&self) -> f64 {
+        self.scalar.median_s / self.simd.median_s
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("flops_per_call", Json::num(self.flops_per_call)),
+            ("gflops_scalar", Json::num(self.gflops_scalar())),
+            ("gflops_simd", Json::num(self.gflops_simd())),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// Time `f` once per dispatch level.  `iters` inner calls per timed rep
+/// keep each rep well above timer resolution; `flops` is per inner call.
+fn compare<F: FnMut()>(name: &str, native: Level, flops: f64,
+                       iters: usize, reps: usize, mut f: F) -> PrimResult {
+    simd::force_level(Level::Scalar);
+    let scalar = bench(&format!("{name}_scalar"), 1, reps, || {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    simd::force_level(native);
+    let simd_r = bench(&format!("{name}_{}", native.name()), 1, reps, || {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    PrimResult {
+        name: name.to_string(),
+        flops_per_call: flops,
+        scalar,
+        simd: simd_r,
+    }
+}
+
+/// Run `f` at both levels and pin the two outputs together.
+fn pin_equiv<F: FnMut() -> Mat>(name: &str, native: Level, mut f: F) {
+    simd::force_level(Level::Scalar);
+    let want = f();
+    simd::force_level(native);
+    let got = f();
+    assert!(got.allclose(&want, 1e-4, 1e-4),
+            "{name}: SIMD output diverged from scalar");
+}
+
+fn main() {
+    let native = simd::detect_level();
+    println!("# kernel primitives: scalar vs {} dispatch", native.name());
+    if native == Level::Scalar {
+        println!("  (no SIMD level detected or DELTANET_SIMD=off; \
+                  both legs run the scalar path)");
+    }
+    let smoke = smoke_mode();
+    let reps = if smoke { 7 } else { 21 };
+    let mut rng = Rng::new(17);
+    let mut prims: Vec<PrimResult> = vec![];
+
+    // ---- vector primitives ------------------------------------------
+    for n in [64usize, 128, 1024] {
+        let a = Mat::random(1, n, &mut rng, 1.0);
+        let b = Mat::random(1, n, &mut rng, 1.0);
+        let iters = if smoke { 20_000 } else { 100_000 };
+        let mut acc = 0f32;
+        prims.push(compare(&format!("dot_n{n}"), native,
+                           2.0 * n as f64, iters, reps, || {
+            acc += simd::dot(&a.data, &b.data);
+        }));
+        std::hint::black_box(acc);
+
+        let mut y = Mat::zeros(1, n);
+        prims.push(compare(&format!("axpy_n{n}"), native,
+                           2.0 * n as f64, iters, reps, || {
+            simd::axpy(&mut y.data, 0.5, &b.data);
+        }));
+        std::hint::black_box(&y);
+    }
+
+    // ---- matmul microkernels at the chunk operating point ------------
+    // C=64 rows; d sweeps the head dims the model actually uses.
+    let c = 64usize;
+    for d in [64usize, 128] {
+        let a = Mat::random(c, d, &mut rng, 1.0);
+        let b = Mat::random(d, d, &mut rng, 1.0);
+        let bt = Mat::random(c, d, &mut rng, 1.0);
+        let iters = if smoke { 50 } else { 200 };
+        let mut out = Mat::zeros(c, d);
+
+        pin_equiv("matmul_into", native, || {
+            let mut o = Mat::zeros(c, d);
+            blocked::matmul_into(&mut o, &a, &b, false);
+            o
+        });
+        prims.push(compare(&format!("matmul_into_{c}x{d}x{d}"), native,
+                           2.0 * (c * d * d) as f64, iters, reps, || {
+            blocked::matmul_into(&mut out, &a, &b, false);
+        }));
+        std::hint::black_box(&out);
+
+        pin_equiv("matmul_nt_into", native, || {
+            let mut o = Mat::zeros(c, c);
+            blocked::matmul_nt_into(&mut o, &a, &bt, false);
+            o
+        });
+        let mut out_nt = Mat::zeros(c, c);
+        prims.push(compare(&format!("matmul_nt_into_{c}x{d}x{c}"), native,
+                           2.0 * (c * d * c) as f64, iters, reps, || {
+            blocked::matmul_nt_into(&mut out_nt, &a, &bt, false);
+        }));
+        std::hint::black_box(&out_nt);
+
+        pin_equiv("matmul_tn_acc", native, || {
+            let mut o = Mat::zeros(d, d);
+            blocked::matmul_tn_acc(&mut o, &a, &bt);
+            o
+        });
+        let mut out_tn = Mat::zeros(d, d);
+        prims.push(compare(&format!("matmul_tn_acc_{d}x{c}x{d}"), native,
+                           2.0 * (c * d * d) as f64, iters, reps, || {
+            out_tn.reset(d, d);
+            blocked::matmul_tn_acc(&mut out_tn, &a, &bt);
+        }));
+        std::hint::black_box(&out_tn);
+    }
+    simd::force_level(native);
+
+    // ---- report ------------------------------------------------------
+    println!("\n{:<28} {:>12} {:>12} {:>9}", "primitive", "scalar GF/s",
+             "simd GF/s", "speedup");
+    for p in &prims {
+        println!("{:<28} {:>12.2} {:>12.2} {:>8.2}x", p.name,
+                 p.gflops_scalar(), p.gflops_simd(), p.speedup());
+    }
+
+    let mut results: Vec<Json> = vec![];
+    for p in &prims {
+        results.push(p.scalar.to_json());
+        results.push(p.simd.to_json());
+    }
+    let json = Json::obj(vec![
+        ("suite", Json::str("kernels")),
+        ("simd_level", Json::str(native.name())),
+        ("primitives",
+         Json::Arr(prims.iter().map(PrimResult::to_json).collect())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = repo_root().join("BENCH_kernels.json");
+    std::fs::write(&path, json.render() + "\n").expect("write report");
+    println!("\nwrote {}", path.display());
+
+    // The PR's acceptance bar: on AVX2 hosts the matmul entry points must
+    // beat scalar by >= 1.5x at the chunk operating point.
+    if native == Level::Avx2 {
+        for p in &prims {
+            if p.name.starts_with("matmul_into")
+                || p.name.starts_with("matmul_nt_into")
+            {
+                assert!(p.speedup() >= 1.5,
+                        "{}: SIMD speedup {:.2}x below the 1.5x bar",
+                        p.name, p.speedup());
+            }
+        }
+        println!("matmul SIMD speedups clear the 1.5x bar");
+    }
+}

@@ -1,7 +1,8 @@
 //! Bench: the host kernel layer — parallel blocked chunkwise vs the
 //! scalar recurrent/chunkwise reference paths, the UT-transform cost, and
-//! the literal-creation perf notes.  Writes `BENCH_kernels.json` at the
-//! repo root (archived by the CI bench-smoke job).
+//! the literal-creation perf notes.  Writes `BENCH_reference.json` at the
+//! repo root (archived by the CI bench-smoke job; per-primitive
+//! scalar-vs-SIMD numbers live in `bench_kernels` / `BENCH_kernels.json`).
 //!
 //!     cargo bench --bench bench_reference
 //!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_reference  # CI
@@ -124,7 +125,7 @@ fn main() {
              two_copy.median_s / one_copy.median_s);
     report.extend([one_copy, two_copy]);
 
-    match write_report("kernels", &report) {
+    match write_report("reference", &report) {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write bench report: {e}"),
     }

@@ -14,10 +14,11 @@
 use std::time::Instant;
 
 use deltanet::config::DataConfig;
-use deltanet::coordinator::{host_training_backend, Backend};
+use deltanet::coordinator::host_training_backend;
 use deltanet::data::build_task;
 use deltanet::kernels::default_threads;
 use deltanet::model::{HostModel, HostModelCfg};
+use deltanet::tensor::simd;
 use deltanet::util::bench::{repo_root, smoke_mode, BenchResult};
 use deltanet::util::json::Json;
 
@@ -37,19 +38,24 @@ fn main() -> deltanet::Result<()> {
 
     let mut losses: Vec<f32> = Vec::with_capacity(steps);
     let mut times: Vec<f64> = Vec::with_capacity(steps);
+    let mut gflops: Vec<f64> = Vec::with_capacity(steps);
     let t0 = Instant::now();
     for s in 0..steps {
         let batch = task.sample(BATCH, SEQ);
         let ts = Instant::now();
-        let loss = Backend::train_step(&mut backend, &batch, lr)?;
+        let (loss, bd) = backend.train_step_detailed(&batch, lr)?;
         times.push(ts.elapsed().as_secs_f64());
         losses.push(loss);
+        gflops.push(bd.gflops);
         if s % 10 == 0 || s + 1 == steps {
-            println!("step {s:>4}  loss {loss:.4}");
+            println!("step {s:>4}  loss {loss:.4}  \
+                      {:>7.0} tok/s  {:>6.2} GFLOP/s",
+                     bd.tokens_per_sec, bd.gflops);
         }
     }
     let total = t0.elapsed().as_secs_f64();
     let tokens_per_sec = (steps * BATCH * SEQ) as f64 / total;
+    let gflops_mean = gflops.iter().sum::<f64>() / gflops.len() as f64;
 
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
@@ -64,7 +70,9 @@ fn main() -> deltanet::Result<()> {
 
     let (loss_first, loss_last) = (losses[0], losses[steps - 1]);
     println!("loss {loss_first:.4} -> {loss_last:.4} | \
-              {tokens_per_sec:.0} tok/s | {total:.1}s");
+              {tokens_per_sec:.0} tok/s | {gflops_mean:.2} GFLOP/s \
+              ({} kernels) | {total:.1}s",
+             simd::level().name());
 
     // When NOT tracing, bound the cost of the disabled instrumentation:
     // time raw disabled span() calls and scale to a generous per-step span
@@ -89,7 +97,7 @@ fn main() -> deltanet::Result<()> {
         span_overhead_frac = Some(frac);
     }
 
-    // BENCH_kernels.json's schema plus the training trajectory
+    // the BENCH_<suite>.json schema plus the training trajectory
     let path = repo_root().join("BENCH_train.json");
     let mut fields = vec![
         ("suite", Json::str("train")),
@@ -97,6 +105,8 @@ fn main() -> deltanet::Result<()> {
         ("loss_first", Json::num(loss_first as f64)),
         ("loss_last", Json::num(loss_last as f64)),
         ("tokens_per_sec", Json::num(tokens_per_sec)),
+        ("gflops_mean", Json::num(gflops_mean)),
+        ("simd_level", Json::str(simd::level().name())),
         ("losses",
          Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect())),
         ("results", Json::Arr(vec![step_bench.to_json()])),

@@ -42,6 +42,14 @@ pub struct StepBreakdown {
     pub optimizer_ms: f64,
     /// Global L2 norm over all gradient tensors.
     pub grad_norm: f32,
+    /// Tokens processed per wall-clock second of this step (forward +
+    /// backward + optimizer).
+    pub tokens_per_sec: f64,
+    /// Achieved kernel compute rate over the step, in GFLOP/s: the delta
+    /// of the `kernels.*.flops` counters divided by the step wall time.
+    /// Compared against a machine peak this is the roofline position of
+    /// the training loop.
+    pub gflops: f64,
 }
 
 pub struct HostKernelBackend {
@@ -95,6 +103,8 @@ impl HostKernelBackend {
             .as_mut()
             .context("no host model attached \
                       (HostKernelBackend::with_model)")?;
+        let flops_before = kernel_flops_total();
+        let t_step = Instant::now();
         let (loss, grads, phases) = model.loss_and_grads_timed(batch)?;
         ensure!(loss.is_finite(), "non-finite host training loss");
         let grad_norm = grads.global_norm();
@@ -110,6 +120,14 @@ impl HostKernelBackend {
             opt.step(&mut params, &gt, lr);
         }
         let optimizer_ms = t_opt.elapsed().as_secs_f64() * 1e3;
+        let step_s = t_step.elapsed().as_secs_f64();
+        let tokens = (batch.batch * batch.seq_len) as f64;
+        let tokens_per_sec = if step_s > 0.0 { tokens / step_s } else { 0.0 };
+        let gflops = if step_s > 0.0 {
+            (kernel_flops_total() - flops_before) as f64 / step_s / 1e9
+        } else {
+            0.0
+        };
 
         obs::metrics::counter("train.steps").inc();
         obs::metrics::counter("train.tokens")
@@ -119,12 +137,17 @@ impl HostKernelBackend {
         obs::metrics::histogram("train.backward_ms")
             .record(phases.backward_ms);
         obs::metrics::histogram("train.optimizer_ms").record(optimizer_ms);
+        obs::metrics::histogram("train.tokens_per_sec")
+            .record(tokens_per_sec);
+        obs::metrics::histogram("train.gflops").record(gflops);
 
         Ok((loss, StepBreakdown {
             forward_ms: phases.forward_ms,
             backward_ms: phases.backward_ms,
             optimizer_ms,
             grad_norm,
+            tokens_per_sec,
+            gflops,
         }))
     }
 
@@ -247,6 +270,15 @@ impl HostKernelBackend {
         });
         Ok(out)
     }
+}
+
+/// Total FLOPs recorded by the kernel work counters so far (forward +
+/// backward + recurrent); the delta across a step, over its wall time,
+/// is the achieved compute rate reported in [`StepBreakdown::gflops`].
+fn kernel_flops_total() -> u64 {
+    obs::metrics::counter("kernels.forward.flops").get()
+        + obs::metrics::counter("kernels.backward.flops").get()
+        + obs::metrics::counter("kernels.recurrent.flops").get()
 }
 
 fn batched_dims(q: &HostValue) -> crate::Result<(usize, usize, usize)> {

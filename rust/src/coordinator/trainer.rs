@@ -279,6 +279,8 @@ impl Trainer {
                 forward_ms: bd.map(|b| b.forward_ms),
                 backward_ms: bd.map(|b| b.backward_ms),
                 optimizer_ms: bd.map(|b| b.optimizer_ms),
+                step_tokens_per_sec: bd.map(|b| b.tokens_per_sec),
+                gflops: bd.map(|b| b.gflops),
             })?;
             let do_eval = cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0;
             if do_eval {

@@ -33,15 +33,16 @@ use std::sync::OnceLock;
 
 use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
-    matmul, matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows,
-    solve_unit_lower, solve_unit_lower_t, sub_in_place, tril_matmul_nt,
-    tri_inv_unit_lower,
+    matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows_into,
+    solve_unit_lower_in_place, solve_unit_lower_t_into, sub_in_place,
+    transpose_into, tril_matmul_nt_into, tri_inv_unit_lower_into,
 };
-use crate::tensor::{dot, Mat};
+use crate::tensor::{simd, Mat, MatRef};
 use crate::util::threadpool::ThreadPool;
 
 use super::batch::HeadProblem;
-use super::chunkwise::{chunk_flops, forward_bytes, slice_rows};
+use super::chunkwise::{chunk_flops, forward_bytes};
+use super::workspace::with_thread_workspace;
 use super::KernelConfig;
 
 struct BwdCounters {
@@ -112,141 +113,158 @@ pub fn chunkwise_backward(
              ("dk", dk as f64), ("dv", dv as f64)]
     });
 
-    // ---- forward pre-pass: checkpoint the state entering each chunk
-    let mut s = initial_state
-        .cloned()
-        .unwrap_or_else(|| Mat::zeros(dk, dv));
-    let mut checkpoints: Vec<Mat> = Vec::with_capacity(l.div_ceil(chunk));
-    {
-        let _ckpt_sp = obs::trace::span("kernel.backward.checkpoint");
-        let mut t0 = 0;
-        while t0 < l {
-            let c = chunk.min(l - t0);
-            checkpoints.push(s.clone());
-            let kc = slice_rows(k, t0, c);
-            let vc = slice_rows(v, t0, c);
-            let bc = &beta[t0..t0 + c];
-            let kb = scale_rows(&kc, bc);
-            let a = tril_matmul_nt(&kb, &kc, -1);
-            let t = tri_inv_unit_lower(&a);
-            let w = matmul(&t, &kb);
-            let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
-            let ws = matmul(&w, &s);
-            sub_in_place(&mut u_bar, &ws);
-            matmul_tn_acc(&mut s, &kc, &u_bar);
-            t0 += c;
-        }
-    }
-
-    // ---- reverse scan over chunks
+    // ---- gradient outputs (the only per-call allocations)
     let mut dq = Mat::zeros(l, dk);
     let mut dk_out = Mat::zeros(l, dk);
     let mut dv_out = Mat::zeros(l, dv);
     let mut dbeta = vec![0.0f32; l];
+    let mut s = initial_state
+        .cloned()
+        .unwrap_or_else(|| Mat::zeros(dk, dv));
     let mut ds = d_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
 
+    let n_chunks = l.div_ceil(chunk);
     let mut flops = 0u64;
-    for ci in (0..checkpoints.len()).rev() {
-        let t0 = ci * chunk;
-        let c = chunk.min(l - t0);
-        let _chunk_sp = obs::trace::span("kernel.backward.chunk");
-        // recompute (≈ forward) + gradient products: ~3× the forward chunk
-        flops += 3 * chunk_flops(c, dk, dv);
-        let s_in = &checkpoints[ci];
-        let qc = slice_rows(q, t0, c);
-        let kc = slice_rows(k, t0, c);
-        let vc = slice_rows(v, t0, c);
-        let bc = &beta[t0..t0 + c];
-        let d_oc = slice_rows(d_o, t0, c);
-
-        // recompute the chunk intermediates
-        let kb = scale_rows(&kc, bc);
-        let vb = scale_rows(&vc, bc);
-        let a = tril_matmul_nt(&kb, &kc, -1);
-        let t = tri_inv_unit_lower(&a);
-        let w = matmul(&t, &kb);
-        let mut u_bar = matmul(&t, &vb);
-        let ws = matmul(&w, s_in);
-        sub_in_place(&mut u_bar, &ws);
-        let attn = tril_matmul_nt(&qc, &kc, 0);
-
-        // dU̅ = Attnᵀ dO + K dS
-        let mut du_bar = Mat::zeros(c, dv);
-        matmul_tn_acc(&mut du_bar, &attn, &d_oc);
-        matmul_into(&mut du_bar, &kc, &ds, true);
-
-        // dAttn = tril(dO U̅ᵀ, 0)
-        let d_attn = tril_matmul_nt(&d_oc, &u_bar, 0);
-
-        // dQ = dO S_inᵀ + dAttn K
-        let mut dqc = Mat::zeros(c, dk);
-        matmul_nt_into(&mut dqc, &d_oc, s_in, false);
-        matmul_into(&mut dqc, &d_attn, &kc, true);
-
-        // dK = dAttnᵀ Q + U̅ dSᵀ — must see dS *before* the carry update
-        let mut dkc = Mat::zeros(c, dk);
-        matmul_tn_acc(&mut dkc, &d_attn, &qc);
-        matmul_nt_into(&mut dkc, &u_bar, &ds, true);
-
-        // dW = −dU̅ S_inᵀ; dU aliases dU̅
-        let mut dw = Mat::zeros(c, dk);
-        matmul_nt_into(&mut dw, &du_bar, s_in, false);
-        for x in dw.data.iter_mut() {
-            *x = -*x;
-        }
-
-        // dT = dW Kᵦᵀ + dU Vᵦᵀ
-        let mut dt = Mat::zeros(c, c);
-        matmul_nt_into(&mut dt, &dw, &kb, false);
-        matmul_nt_into(&mut dt, &du_bar, &vb, true);
-
-        // dA = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1): two triangular solves
-        // instead of three dense products with the explicit inverse
-        let x = solve_unit_lower_t(&a, &dt);
-        let m = solve_unit_lower(&a, &x.transpose());
-        let mut da = Mat::zeros(c, c);
-        for i in 0..c {
-            for j in 0..i {
-                da[(i, j)] = -m[(j, i)];
+    // both scans run inside this thread's workspace: intermediates are
+    // reused buffers, chunk inputs are borrowed row windows, and the
+    // chunk-entry checkpoints land in one flat reused Vec
+    with_thread_workspace(|scr| {
+        // ---- forward pre-pass: checkpoint the state entering each chunk
+        {
+            let _ckpt_sp = obs::trace::span("kernel.backward.checkpoint");
+            scr.checkpoints.clear();
+            scr.checkpoints.reserve(n_chunks * dk * dv);
+            let mut t0 = 0;
+            while t0 < l {
+                let c = chunk.min(l - t0);
+                scr.checkpoints.extend_from_slice(&s.data);
+                let kc = k.rows_window(t0, c);
+                let vc = v.rows_window(t0, c);
+                let bc = &beta[t0..t0 + c];
+                scale_rows_into(&mut scr.kb, kc, bc);
+                scale_rows_into(&mut scr.vb, vc, bc);
+                tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
+                tri_inv_unit_lower_into(&mut scr.t, &scr.a);
+                matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
+                matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
+                matmul_into(&mut scr.ws, &scr.w, &s, false);
+                sub_in_place(&mut scr.u_bar, &scr.ws);
+                matmul_tn_acc(&mut s, kc, &scr.u_bar);
+                t0 += c;
             }
         }
 
-        // dKᵦ = Tᵀ dW + dA K,  dVᵦ = Tᵀ dU
-        let mut dkb = Mat::zeros(c, dk);
-        matmul_tn_acc(&mut dkb, &t, &dw);
-        matmul_into(&mut dkb, &da, &kc, true);
-        let mut dvb = Mat::zeros(c, dv);
-        matmul_tn_acc(&mut dvb, &t, &du_bar);
+        // ---- reverse scan over chunks
+        for ci in (0..n_chunks).rev() {
+            let t0 = ci * chunk;
+            let c = chunk.min(l - t0);
+            let _chunk_sp = obs::trace::span("kernel.backward.chunk");
+            // recompute (≈ forward) + gradient products: ~3× the forward chunk
+            flops += 3 * chunk_flops(c, dk, dv);
+            let s_in = MatRef {
+                rows: dk,
+                cols: dv,
+                data: &scr.checkpoints[ci * dk * dv..(ci + 1) * dk * dv],
+            };
+            let qc = q.rows_window(t0, c);
+            let kc = k.rows_window(t0, c);
+            let vc = v.rows_window(t0, c);
+            let bc = &beta[t0..t0 + c];
+            let d_oc = d_o.rows_window(t0, c);
 
-        // dK += dAᵀ Kᵦ + diag(β) dKᵦ,  dV = diag(β) dVᵦ,  dβ from Kᵦ/Vᵦ
-        matmul_tn_acc(&mut dkc, &da, &kb);
-        let mut dvc = Mat::zeros(c, dv);
-        for i in 0..c {
-            let b = bc[i];
-            for (x, &g) in dkc.row_mut(i).iter_mut().zip(dkb.row(i)) {
-                *x += b * g;
+            // recompute the chunk intermediates
+            scale_rows_into(&mut scr.kb, kc, bc);
+            scale_rows_into(&mut scr.vb, vc, bc);
+            tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
+            tri_inv_unit_lower_into(&mut scr.t, &scr.a);
+            matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
+            matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
+            matmul_into(&mut scr.ws, &scr.w, s_in, false);
+            sub_in_place(&mut scr.u_bar, &scr.ws);
+            tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+
+            // dU̅ = Attnᵀ dO + K dS
+            scr.du_bar.reset(c, dv);
+            matmul_tn_acc(&mut scr.du_bar, &scr.attn, d_oc);
+            matmul_into(&mut scr.du_bar, kc, &ds, true);
+
+            // dAttn = tril(dO U̅ᵀ, 0)
+            tril_matmul_nt_into(&mut scr.d_attn, d_oc, &scr.u_bar, 0);
+
+            // dQ = dO S_inᵀ + dAttn K
+            matmul_nt_into(&mut scr.dqc, d_oc, s_in, false);
+            matmul_into(&mut scr.dqc, &scr.d_attn, kc, true);
+
+            // dK = dAttnᵀ Q + U̅ dSᵀ — must see dS *before* the carry update
+            scr.dkc.reset(c, dk);
+            matmul_tn_acc(&mut scr.dkc, &scr.d_attn, qc);
+            matmul_nt_into(&mut scr.dkc, &scr.u_bar, &ds, true);
+
+            // dW = −dU̅ S_inᵀ; dU aliases dU̅
+            matmul_nt_into(&mut scr.dw, &scr.du_bar, s_in, false);
+            for x in scr.dw.data.iter_mut() {
+                *x = -*x;
             }
-            for (x, &g) in dvc.row_mut(i).iter_mut().zip(dvb.row(i)) {
-                *x = b * g;
+
+            // dT = dW Kᵦᵀ + dU Vᵦᵀ
+            matmul_nt_into(&mut scr.dt, &scr.dw, &scr.kb, false);
+            matmul_nt_into(&mut scr.dt, &scr.du_bar, &scr.vb, true);
+
+            // dA = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1): two triangular solves
+            // instead of three dense products with the explicit inverse
+            solve_unit_lower_t_into(&mut scr.sol, &scr.a, &scr.dt);
+            transpose_into(&mut scr.solt, &scr.sol);
+            solve_unit_lower_in_place(&scr.a, &mut scr.solt);
+            scr.da.reset(c, c);
+            for i in 0..c {
+                for j in 0..i {
+                    scr.da[(i, j)] = -scr.solt[(j, i)];
+                }
             }
-            dbeta[t0 + i] =
-                dot(dkb.row(i), kc.row(i)) + dot(dvb.row(i), vc.row(i));
+
+            // dKᵦ = Tᵀ dW + dA K,  dVᵦ = Tᵀ dU
+            scr.dkb.reset(c, dk);
+            matmul_tn_acc(&mut scr.dkb, &scr.t, &scr.dw);
+            matmul_into(&mut scr.dkb, &scr.da, kc, true);
+            scr.dvb.reset(c, dv);
+            matmul_tn_acc(&mut scr.dvb, &scr.t, &scr.du_bar);
+
+            // dK += dAᵀ Kᵦ + diag(β) dKᵦ,  dV = diag(β) dVᵦ,  dβ from Kᵦ/Vᵦ
+            matmul_tn_acc(&mut scr.dkc, &scr.da, &scr.kb);
+            scr.dvc.reset(c, dv);
+            for i in 0..c {
+                let b = bc[i];
+                for (x, &g) in
+                    scr.dkc.row_mut(i).iter_mut().zip(scr.dkb.row(i))
+                {
+                    *x += b * g;
+                }
+                for (x, &g) in
+                    scr.dvc.row_mut(i).iter_mut().zip(scr.dvb.row(i))
+                {
+                    *x = b * g;
+                }
+                dbeta[t0 + i] = simd::dot(scr.dkb.row(i), kc.row(i))
+                    + simd::dot(scr.dvb.row(i), vc.row(i));
+            }
+
+            dq.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&scr.dqc.data);
+            dk_out.data[t0 * dk..(t0 + c) * dk]
+                .copy_from_slice(&scr.dkc.data);
+            dv_out.data[t0 * dv..(t0 + c) * dv]
+                .copy_from_slice(&scr.dvc.data);
+
+            // carry: dS ← dS + Qᵀ dO − Wᵀ dU̅ (last — earlier terms need old dS)
+            matmul_tn_acc(&mut ds, qc, d_oc);
+            scr.wtd.reset(dk, dv);
+            matmul_tn_acc(&mut scr.wtd, &scr.w, &scr.du_bar);
+            sub_in_place(&mut ds, &scr.wtd);
         }
-
-        dq.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&dqc.data);
-        dk_out.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&dkc.data);
-        dv_out.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&dvc.data);
-
-        // carry: dS ← dS + Qᵀ dO − Wᵀ dU̅ (last — earlier terms need old dS)
-        matmul_tn_acc(&mut ds, &qc, &d_oc);
-        let mut wtd = Mat::zeros(dk, dv);
-        matmul_tn_acc(&mut wtd, &w, &du_bar);
-        sub_in_place(&mut ds, &wtd);
-    }
+    });
 
     let bm = bwd_counters();
     bm.calls.inc();
-    bm.chunks.add(checkpoints.len() as u64);
+    bm.chunks.add(n_chunks as u64);
     bm.flops.add(flops);
     // checkpoint pre-pass re-reads the inputs, gradients are written: ~3×
     bm.bytes.add(3 * forward_bytes(l, dk, dv));
@@ -320,6 +338,7 @@ pub fn backward_batched(problems: &[HeadProblem], d_o: &[Mat],
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::chunkwise::slice_rows;
     use crate::reference::random_problem;
     use crate::tensor::rng::Rng;
 

@@ -5,6 +5,11 @@
 //! sequence problem (heads never mix inside the sequence-mixing layer), so
 //! the batch dimension is embarrassingly parallel — exactly how the Pallas
 //! kernel grids over (batch, head) on the accelerator.
+//!
+//! Each pool worker owns a thread-local [`super::ChunkWorkspace`]
+//! (`workspace::with_thread_workspace`), so concurrent head problems reuse
+//! per-thread scratch buffers with no sharing or locking — the chunk loops
+//! stay allocation-free no matter how many heads land on one worker.
 
 use std::sync::OnceLock;
 

@@ -21,11 +21,12 @@ use std::sync::OnceLock;
 
 use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
-    matmul, matmul_into, matmul_tn_acc, scale_rows, sub_in_place,
-    tril_matmul_nt, tri_inv_unit_lower,
+    matmul_into, matmul_tn_acc, scale_rows_into, sub_in_place,
+    tril_matmul_nt_into, tri_inv_unit_lower_into,
 };
-use crate::tensor::{axpy, Mat};
+use crate::tensor::{simd, Mat};
 
+use super::workspace::with_thread_workspace;
 use super::Forward;
 
 /// Work counters for the forward kernel, interned once.
@@ -106,40 +107,45 @@ pub fn chunkwise_forward(
 
     let mut flops = 0u64;
     let mut nchunks = 0u64;
-    let mut t0 = 0;
-    while t0 < l {
-        let c = chunk.min(l - t0);
-        let _chunk_sp = obs::trace::span("kernel.chunkwise.chunk");
-        let qc = slice_rows(q, t0, c);
-        let kc = slice_rows(k, t0, c);
-        let vc = slice_rows(v, t0, c);
-        let bc = &beta[t0..t0 + c];
+    // the chunk loop runs entirely inside this thread's workspace: every
+    // intermediate is a reused buffer, every chunk input a borrowed row
+    // window — zero heap allocations at steady state
+    with_thread_workspace(|scr| {
+        let mut t0 = 0;
+        while t0 < l {
+            let c = chunk.min(l - t0);
+            let _chunk_sp = obs::trace::span("kernel.chunkwise.chunk");
+            let qc = q.rows_window(t0, c);
+            let kc = k.rows_window(t0, c);
+            let vc = v.rows_window(t0, c);
+            let bc = &beta[t0..t0 + c];
 
-        // UT transform: T = (I + tril(diag(β)KKᵀ, −1))⁻¹, W/U = T·diag(β)·{K,V}
-        let kb = scale_rows(&kc, bc);
-        let a = tril_matmul_nt(&kb, &kc, -1);
-        let t = tri_inv_unit_lower(&a);
-        let w = matmul(&t, &kb);
-        let mut u_bar = matmul(&t, &scale_rows(&vc, bc));
+            // UT transform: T = (I + tril(diag(β)KKᵀ, −1))⁻¹, W/U = T·diag(β)·{K,V}
+            scale_rows_into(&mut scr.kb, kc, bc);
+            scale_rows_into(&mut scr.vb, vc, bc);
+            tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
+            tri_inv_unit_lower_into(&mut scr.t, &scr.a);
+            matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
+            matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
 
-        // U̅ = U − W S
-        let ws = matmul(&w, &s);
-        sub_in_place(&mut u_bar, &ws);
+            // U̅ = U − W S
+            matmul_into(&mut scr.ws, &scr.w, &s, false);
+            sub_in_place(&mut scr.u_bar, &scr.ws);
 
-        // O_c = Q_c S + tril(Q_c K_cᵀ) U̅
-        let attn = tril_matmul_nt(&qc, &kc, 0);
-        let mut oc = Mat::zeros(c, dv);
-        matmul_into(&mut oc, &qc, &s, false);
-        matmul_into(&mut oc, &attn, &u_bar, true);
-        o.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&oc.data);
+            // O_c = Q_c S + tril(Q_c K_cᵀ) U̅
+            tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+            matmul_into(&mut scr.oc, qc, &s, false);
+            matmul_into(&mut scr.oc, &scr.attn, &scr.u_bar, true);
+            o.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&scr.oc.data);
 
-        // S += K_cᵀ U̅
-        matmul_tn_acc(&mut s, &kc, &u_bar);
+            // S += K_cᵀ U̅
+            matmul_tn_acc(&mut s, kc, &scr.u_bar);
 
-        flops += chunk_flops(c, dk, dv);
-        nchunks += 1;
-        t0 += c;
-    }
+            flops += chunk_flops(c, dk, dv);
+            nchunks += 1;
+            t0 += c;
+        }
+    });
     let m = fwd_counters();
     m.calls.inc();
     m.chunks.add(nchunks);
@@ -168,7 +174,7 @@ pub fn recurrent_step(
     let mut v_old = vec![0.0f32; dv];
     for (i, &ki) in k.iter().enumerate() {
         if ki != 0.0 {
-            axpy(&mut v_old, ki, s.row(i));
+            simd::axpy(&mut v_old, ki, s.row(i));
         }
     }
     // S += β k (v − v_old)ᵀ
@@ -185,7 +191,7 @@ pub fn recurrent_step(
     out.fill(0.0);
     for (i, &qi) in q.iter().enumerate() {
         if qi != 0.0 {
-            axpy(out, qi, s.row(i));
+            simd::axpy(out, qi, s.row(i));
         }
     }
     let m = rec_counters();

@@ -24,6 +24,7 @@
 pub mod backward;
 pub mod batch;
 pub mod chunkwise;
+pub mod workspace;
 
 pub use backward::{
     backward_batched, backward_batched_on, chunkwise_backward, Gradients,
@@ -32,6 +33,7 @@ pub use batch::{
     forward_batched, forward_batched_on, map_batched_on, HeadProblem,
 };
 pub use chunkwise::{chunkwise_forward, recurrent_step};
+pub use workspace::ChunkWorkspace;
 
 use crate::tensor::Mat;
 

@@ -1,0 +1,140 @@
+//! Reusable per-thread scratch buffers for the chunkwise kernels.
+//!
+//! The forward and backward chunk loops need a dozen chunk-shaped
+//! intermediates (C×C triangles, C×d panels, the d_k×d_v state products).
+//! Allocating them fresh every chunk put the allocator on the hot path —
+//! O(chunks) round trips per sequence.  A [`ChunkWorkspace`] owns one set
+//! of buffers that every `_into` primitive reshapes in place
+//! ([`crate::tensor::Mat::reset`] keeps the backing allocation), so after
+//! the first chunk of the largest shape the steady-state loop performs
+//! ZERO heap allocations — `tests/alloc_steady.rs` counts them.
+//!
+//! Ownership model: one workspace per thread, fetched by
+//! [`with_thread_workspace`].  The batch layer (`super::batch`) fans head
+//! problems out over pool workers; each worker thread lazily materializes
+//! its own workspace on first use and keeps it for the life of the
+//! thread, so parallel heads never contend and no locking is involved.
+
+use std::cell::RefCell;
+
+use crate::tensor::Mat;
+
+/// Scratch buffers for one chunk of the forward/backward scan.  Field
+/// names mirror the math in `chunkwise.rs` / `backward.rs` (`kb` = βK,
+/// `t` = (I+A)⁻¹, `u_bar` = U̅, `d*` = gradients of `*`…).  All buffers
+/// start empty and grow to their steady-state size on first use.
+#[derive(Debug)]
+pub struct ChunkWorkspace {
+    // ---- forward (and the backward's recompute pass)
+    pub(crate) kb: Mat,
+    pub(crate) vb: Mat,
+    pub(crate) a: Mat,
+    pub(crate) t: Mat,
+    pub(crate) w: Mat,
+    pub(crate) u_bar: Mat,
+    pub(crate) ws: Mat,
+    pub(crate) attn: Mat,
+    pub(crate) oc: Mat,
+    // ---- backward
+    pub(crate) du_bar: Mat,
+    pub(crate) d_attn: Mat,
+    pub(crate) dqc: Mat,
+    pub(crate) dkc: Mat,
+    pub(crate) dvc: Mat,
+    pub(crate) dw: Mat,
+    pub(crate) dt: Mat,
+    pub(crate) sol: Mat,
+    pub(crate) solt: Mat,
+    pub(crate) da: Mat,
+    pub(crate) dkb: Mat,
+    pub(crate) dvb: Mat,
+    pub(crate) wtd: Mat,
+    /// Chunk-entry state checkpoints of the backward pre-pass, flattened
+    /// `[n_chunks × (d_k·d_v)]` — one reused buffer instead of one
+    /// `Mat::clone` per chunk.
+    pub(crate) checkpoints: Vec<f32>,
+}
+
+impl ChunkWorkspace {
+    pub fn new() -> Self {
+        let empty = || Mat::zeros(0, 0);
+        ChunkWorkspace {
+            kb: empty(),
+            vb: empty(),
+            a: empty(),
+            t: empty(),
+            w: empty(),
+            u_bar: empty(),
+            ws: empty(),
+            attn: empty(),
+            oc: empty(),
+            du_bar: empty(),
+            d_attn: empty(),
+            dqc: empty(),
+            dkc: empty(),
+            dvc: empty(),
+            dw: empty(),
+            dt: empty(),
+            sol: empty(),
+            solt: empty(),
+            da: empty(),
+            dkb: empty(),
+            dvb: empty(),
+            wtd: empty(),
+            checkpoints: Vec::new(),
+        }
+    }
+}
+
+impl Default for ChunkWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run `f` with this thread's [`ChunkWorkspace`] (created on first use).
+///
+/// The borrow is scoped to the call, so kernels must not call back into
+/// another workspace-using kernel from inside `f` — the forward and
+/// backward entry points each take the workspace exactly once around
+/// their whole chunk loop.
+pub(crate) fn with_thread_workspace<R>(
+    f: impl FnOnce(&mut ChunkWorkspace) -> R,
+) -> R {
+    thread_local! {
+        static WS: RefCell<ChunkWorkspace> =
+            RefCell::new(ChunkWorkspace::new());
+    }
+    WS.with(|w| f(&mut w.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_workspace_persists_across_calls() {
+        // buffers grown by one call must still be there for the next —
+        // that persistence is the whole point
+        with_thread_workspace(|ws| {
+            ws.kb.reset(8, 8);
+            ws.checkpoints.resize(64, 0.0);
+        });
+        with_thread_workspace(|ws| {
+            assert!(ws.kb.data.capacity() >= 64);
+            assert!(ws.checkpoints.capacity() >= 64);
+        });
+    }
+
+    #[test]
+    fn workspaces_are_per_thread() {
+        with_thread_workspace(|ws| ws.a.reset(4, 4));
+        std::thread::spawn(|| {
+            with_thread_workspace(|ws| {
+                assert_eq!((ws.a.rows, ws.a.cols), (0, 0));
+            });
+        })
+        .join()
+        .unwrap();
+    }
+}

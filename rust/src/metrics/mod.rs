@@ -118,6 +118,12 @@ pub struct StepRecord {
     pub forward_ms: Option<f64>,
     pub backward_ms: Option<f64>,
     pub optimizer_ms: Option<f64>,
+    /// This step's own tokens/sec (unlike the top-level `tokens_per_sec`,
+    /// which is the run's steady-state rate).
+    pub step_tokens_per_sec: Option<f64>,
+    /// Achieved kernel GFLOP/s over the step (see
+    /// `StepBreakdown::gflops`).
+    pub gflops: Option<f64>,
 }
 
 impl StepRecord {
@@ -134,6 +140,8 @@ impl StepRecord {
             ("forward_ms", self.forward_ms),
             ("backward_ms", self.backward_ms),
             ("optimizer_ms", self.optimizer_ms),
+            ("step_tokens_per_sec", self.step_tokens_per_sec),
+            ("gflops", self.gflops),
         ];
         for (name, v) in optional {
             if let Some(x) = v {
@@ -269,12 +277,16 @@ mod tests {
             forward_ms: Some(3.0),
             backward_ms: Some(6.0),
             optimizer_ms: Some(1.0),
+            step_tokens_per_sec: Some(5.5),
+            gflops: Some(0.25),
         }).unwrap();
         log.flush().unwrap();
         // read while `log` is still alive: only flush made this visible
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"grad_norm\":0.75"));
         assert!(text.contains("\"forward_ms\":3"));
+        assert!(text.contains("\"step_tokens_per_sec\":5.5"));
+        assert!(text.contains("\"gflops\":0.25"));
         drop(log);
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -4,111 +4,136 @@
 //! The naive `Mat::matmul` streams the whole right-hand operand once per
 //! output row; for the chunk-sized operands the kernels use (C×C, C×d with
 //! C, d ∈ {16..128}) that already fits cache, but state-sized and
-//! attention-shaped products benefit from i/k tiling and from computing
-//! only the causal triangle.  These free functions also provide in-place /
-//! accumulating variants so the per-chunk hot loop allocates O(C·d)
-//! instead of reallocating every intermediate.
+//! attention-shaped products benefit from tiling and from computing only
+//! the causal triangle.  The inner loops all dispatch through
+//! [`super::simd`] (AVX2+FMA microkernels with a scalar fallback), so this
+//! module owns shapes, masks and triangular structure while `simd` owns
+//! the flop loops.
+//!
+//! Two conventions serve the zero-allocation chunk loop in
+//! `crate::kernels`:
+//!
+//! * inputs are `impl Into<MatRef>` — a `&Mat` converts implicitly (all
+//!   pre-existing call sites unchanged), and the kernels pass borrowed row
+//!   windows (`Mat::rows_window`) instead of copied chunk slices;
+//! * non-accumulating `_into` entry points RESHAPE their output via
+//!   [`Mat::reset`] instead of asserting its shape, so a reused workspace
+//!   buffer adapts to tail chunks without reallocating.  Accumulating
+//!   calls still assert — accumulation onto a wrongly-shaped output is a
+//!   bug, not a resize request.
 
-use super::{axpy, dot, Mat};
+use super::{simd, Mat, MatRef};
 
-/// Row tile for the output (fits comfortably in L1 alongside a B panel).
-const TILE_I: usize = 32;
-/// Depth tile: one panel of B rows streamed per output tile.
-const TILE_K: usize = 64;
-
-/// out = A·B (or out += A·B when `accumulate`), i/k-tiled.
-pub fn matmul_into(out: &mut Mat, a: &Mat, b: &Mat, accumulate: bool) {
+/// out = A·B (or out += A·B when `accumulate`), tiled + SIMD-dispatched.
+pub fn matmul_into<'a, 'b>(out: &mut Mat, a: impl Into<MatRef<'a>>,
+                           b: impl Into<MatRef<'b>>, accumulate: bool) {
+    let (a, b) = (a.into(), b.into());
     assert_eq!(a.cols, b.rows, "matmul dims");
-    assert_eq!(out.rows, a.rows, "matmul out rows");
-    assert_eq!(out.cols, b.cols, "matmul out cols");
-    if !accumulate {
-        out.data.fill(0.0);
-    }
     let (m, kd, n) = (a.rows, a.cols, b.cols);
-    for ib in (0..m).step_by(TILE_I) {
-        let ie = (ib + TILE_I).min(m);
-        for kb in (0..kd).step_by(TILE_K) {
-            let ke = (kb + TILE_K).min(kd);
-            for i in ib..ie {
-                let arow = &a.data[i * kd..(i + 1) * kd];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for k in kb..ke {
-                    let av = arow[k];
-                    if av != 0.0 {
-                        axpy(orow, av, &b.data[k * n..(k + 1) * n]);
-                    }
-                }
-            }
-        }
+    if accumulate {
+        assert_eq!((out.rows, out.cols), (m, n), "matmul out shape");
+    } else {
+        out.reset(m, n);
     }
+    simd::matmul_acc(&mut out.data, a.data, b.data, m, kd, n);
 }
 
 /// A·B as a fresh matrix (blocked).
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+pub fn matmul<'a, 'b>(a: impl Into<MatRef<'a>>,
+                      b: impl Into<MatRef<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
     let mut out = Mat::zeros(a.rows, b.cols);
     matmul_into(&mut out, a, b, true);
     out
 }
 
-/// tril(A·Bᵀ, diag) computing ONLY the kept triangle (the causal masks of
-/// the chunkwise form: diag=0 for Q·Kᵀ, diag=−1 for the UT transform's
-/// strictly-lower K·Kᵀ).  Entries above the diagonal are exact zeros.
-pub fn tril_matmul_nt(a: &Mat, b: &Mat, diag: i64) -> Mat {
+/// out = tril(A·Bᵀ, diag) computing ONLY the kept triangle (the causal
+/// masks of the chunkwise form: diag=0 for Q·Kᵀ, diag=−1 for the UT
+/// transform's strictly-lower K·Kᵀ).  Entries above the diagonal are
+/// exact zeros — `reset` wipes the whole output before the triangle is
+/// filled, so a reused workspace can't leak stale upper entries.
+pub fn tril_matmul_nt_into<'a, 'b>(out: &mut Mat, a: impl Into<MatRef<'a>>,
+                                   b: impl Into<MatRef<'b>>, diag: i64) {
+    let (a, b) = (a.into(), b.into());
     assert_eq!(a.cols, b.cols, "tril_matmul_nt dims");
     let (m, n) = (a.rows, b.rows);
-    let mut out = Mat::zeros(m, n);
+    out.reset(m, n);
     for i in 0..m {
         let hi = (i as i64 + diag + 1).clamp(0, n as i64) as usize;
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for (j, o) in orow.iter_mut().enumerate().take(hi) {
-            *o = dot(arow, b.row(j));
+        if hi == 0 {
+            continue;
         }
+        let arow = a.row(i);
+        // one 1×hi A·Bᵀ strip: B rows 0..hi stay hot across the 2×4 tile
+        simd::matmul_nt_acc(&mut out.data[i * n..i * n + hi], arow,
+                            &b.data[..hi * b.cols], 1, a.cols, hi);
     }
+}
+
+/// tril(A·Bᵀ, diag) as a fresh matrix.
+pub fn tril_matmul_nt<'a, 'b>(a: impl Into<MatRef<'a>>,
+                              b: impl Into<MatRef<'b>>, diag: i64) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    tril_matmul_nt_into(&mut out, a, b, diag);
     out
 }
 
 /// out = A·Bᵀ (or out += A·Bᵀ when `accumulate`) with `a: [m,k]`,
 /// `b: [n,k]`, `out: [m,n]` — the transposed products of the backward pass
 /// (dQ = dO·Sᵀ, dW = −dU̅·Sᵀ, dT = dW·Kᵦᵀ + dU·Vᵦᵀ) without materializing
-/// the transpose: both operands stream row-major.
-pub fn matmul_nt_into(out: &mut Mat, a: &Mat, b: &Mat, accumulate: bool) {
+/// the transpose: both operands stream row-major, depth-tiled so long k
+/// extents are consumed in cache-sized slabs.
+pub fn matmul_nt_into<'a, 'b>(out: &mut Mat, a: impl Into<MatRef<'a>>,
+                              b: impl Into<MatRef<'b>>, accumulate: bool) {
+    let (a, b) = (a.into(), b.into());
     assert_eq!(a.cols, b.cols, "matmul_nt dims");
-    assert_eq!(out.rows, a.rows, "matmul_nt out rows");
-    assert_eq!(out.cols, b.rows, "matmul_nt out cols");
-    if !accumulate {
-        out.data.fill(0.0);
-    }
     let (m, n) = (a.rows, b.rows);
-    for ib in (0..m).step_by(TILE_I) {
-        let ie = (ib + TILE_I).min(m);
-        for i in ib..ie {
-            let arow = a.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += dot(arow, b.row(j));
-            }
-        }
+    if accumulate {
+        assert_eq!((out.rows, out.cols), (m, n), "matmul_nt out shape");
+    } else {
+        out.reset(m, n);
     }
+    simd::matmul_nt_acc(&mut out.data, a.data, b.data, m, a.cols, n);
 }
 
 /// A·Bᵀ as a fresh matrix.
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+pub fn matmul_nt<'a, 'b>(a: impl Into<MatRef<'a>>,
+                         b: impl Into<MatRef<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
     let mut out = Mat::zeros(a.rows, b.rows);
     matmul_nt_into(&mut out, a, b, true);
     out
 }
 
-/// Solve (I + A)·X = B for strictly-lower-triangular A by forward
-/// substitution over rows: X[i] = B[i] − Σ_{j<i} A[i,j]·X[j].  Cheaper and
-/// better-conditioned than materializing (I+A)⁻¹ when only the product is
-/// needed (the backward pass solves against dT twice instead of forming
-/// Tᵀ·dT·Tᵀ).
-pub fn solve_unit_lower(a: &Mat, b: &Mat) -> Mat {
+/// Copy `src` into `out`, reusing `out`'s allocation.
+pub fn copy_into<'a>(out: &mut Mat, src: impl Into<MatRef<'a>>) {
+    let src = src.into();
+    out.rows = src.rows;
+    out.cols = src.cols;
+    out.data.clear();
+    out.data.extend_from_slice(src.data);
+}
+
+/// out = Aᵀ, reusing `out`'s allocation.
+pub fn transpose_into<'a>(out: &mut Mat, a: impl Into<MatRef<'a>>) {
+    let a = a.into();
+    out.reset(a.cols, a.rows);
+    for i in 0..a.rows {
+        for (j, &x) in a.row(i).iter().enumerate() {
+            out.data[j * a.rows + i] = x;
+        }
+    }
+}
+
+/// In-place core of [`solve_unit_lower`]: overwrite `x` (initially B) with
+/// the solution of (I + A)·X = B by forward substitution over rows:
+/// X[i] = B[i] − Σ_{j<i} A[i,j]·X[j].  Cheaper and better-conditioned than
+/// materializing (I+A)⁻¹ when only the product is needed (the backward
+/// pass solves against dT twice instead of forming Tᵀ·dT·Tᵀ).
+pub fn solve_unit_lower_in_place(a: &Mat, x: &mut Mat) {
     assert_eq!(a.rows, a.cols, "solve_unit_lower wants square A");
-    assert_eq!(a.rows, b.rows, "solve_unit_lower dims");
-    let (c, n) = (b.rows, b.cols);
-    let mut x = b.clone();
+    assert_eq!(a.rows, x.rows, "solve_unit_lower dims");
+    let (c, n) = (x.rows, x.cols);
     for i in 0..c {
         // rows j < i of x are final; subtract their weighted sum from row i
         let (done, rest) = x.data.split_at_mut(i * n);
@@ -116,23 +141,33 @@ pub fn solve_unit_lower(a: &Mat, b: &Mat) -> Mat {
         for j in 0..i {
             let aij = a[(i, j)];
             if aij != 0.0 {
-                let xj = &done[j * n..(j + 1) * n];
-                for (p, q) in xi.iter_mut().zip(xj) {
-                    *p -= aij * q;
-                }
+                simd::axpy(xi, -aij, &done[j * n..(j + 1) * n]);
             }
         }
     }
+}
+
+/// Solve (I + A)·X = B into `out` (workspace-reusing).
+pub fn solve_unit_lower_into<'a>(out: &mut Mat, a: &Mat,
+                                 b: impl Into<MatRef<'a>>) {
+    copy_into(out, b);
+    solve_unit_lower_in_place(a, out);
+}
+
+/// Solve (I + A)·X = B as a fresh matrix.
+pub fn solve_unit_lower(a: &Mat, b: &Mat) -> Mat {
+    let mut x = b.clone();
+    solve_unit_lower_in_place(a, &mut x);
     x
 }
 
-/// Solve (I + A)ᵀ·X = B for strictly-lower-triangular A by backward
-/// substitution: X[i] = B[i] − Σ_{j>i} A[j,i]·X[j], i from c−1 down.
-pub fn solve_unit_lower_t(a: &Mat, b: &Mat) -> Mat {
+/// In-place core of [`solve_unit_lower_t`]: overwrite `x` (initially B)
+/// with the solution of (I + A)ᵀ·X = B by backward substitution:
+/// X[i] = B[i] − Σ_{j>i} A[j,i]·X[j], i from c−1 down.
+pub fn solve_unit_lower_t_in_place(a: &Mat, x: &mut Mat) {
     assert_eq!(a.rows, a.cols, "solve_unit_lower_t wants square A");
-    assert_eq!(a.rows, b.rows, "solve_unit_lower_t dims");
-    let (c, n) = (b.rows, b.cols);
-    let mut x = b.clone();
+    assert_eq!(a.rows, x.rows, "solve_unit_lower_t dims");
+    let (c, n) = (x.rows, x.cols);
     for i in (0..c).rev() {
         // rows j > i of x are final; subtract their weighted sum from row i
         let (head, done) = x.data.split_at_mut((i + 1) * n);
@@ -140,74 +175,121 @@ pub fn solve_unit_lower_t(a: &Mat, b: &Mat) -> Mat {
         for j in i + 1..c {
             let aji = a[(j, i)];
             if aji != 0.0 {
-                let xj = &done[(j - i - 1) * n..(j - i) * n];
-                for (p, q) in xi.iter_mut().zip(xj) {
-                    *p -= aji * q;
-                }
+                simd::axpy(xi, -aji, &done[(j - i - 1) * n..(j - i) * n]);
             }
         }
     }
+}
+
+/// Solve (I + A)ᵀ·X = B into `out` (workspace-reusing).
+pub fn solve_unit_lower_t_into<'a>(out: &mut Mat, a: &Mat,
+                                   b: impl Into<MatRef<'a>>) {
+    copy_into(out, b);
+    solve_unit_lower_t_in_place(a, out);
+}
+
+/// Solve (I + A)ᵀ·X = B as a fresh matrix.
+pub fn solve_unit_lower_t(a: &Mat, b: &Mat) -> Mat {
+    let mut x = b.clone();
+    solve_unit_lower_t_in_place(a, &mut x);
     x
 }
 
 /// out += Aᵀ·B with `a: [t,m]`, `b: [t,n]`, `out: [m,n]` — the inter-chunk
-/// state update S += Kᵀ·U̅, streamed row-by-row over t.
-pub fn matmul_tn_acc(out: &mut Mat, a: &Mat, b: &Mat) {
+/// state update S += Kᵀ·U̅, streamed over t.  Four t-rows are fused per
+/// pass ([`simd::axpy4`]) so each destination row is loaded and stored
+/// once per quad instead of once per source row; all-zero coefficient
+/// quads (the upper triangle when A is a causal attention block) are
+/// skipped outright.
+pub fn matmul_tn_acc<'a, 'b>(out: &mut Mat, a: impl Into<MatRef<'a>>,
+                             b: impl Into<MatRef<'b>>) {
+    let (a, b) = (a.into(), b.into());
     assert_eq!(a.rows, b.rows, "matmul_tn_acc dims");
     assert_eq!(out.rows, a.cols, "matmul_tn_acc out rows");
     assert_eq!(out.cols, b.cols, "matmul_tn_acc out cols");
-    for t in 0..a.rows {
+    let (t_total, m) = (a.rows, a.cols);
+    let mut t = 0;
+    while t + 4 <= t_total {
+        let (a0, a1, a2, a3) = (a.row(t), a.row(t + 1), a.row(t + 2),
+                                a.row(t + 3));
+        let bq = [b.row(t), b.row(t + 1), b.row(t + 2), b.row(t + 3)];
+        for i in 0..m {
+            let s = [a0[i], a1[i], a2[i], a3[i]];
+            if s != [0.0; 4] {
+                simd::axpy4(out.row_mut(i), s, bq);
+            }
+        }
+        t += 4;
+    }
+    while t < t_total {
         let arow = a.row(t);
         let brow = b.row(t);
         for (i, &av) in arow.iter().enumerate() {
             if av != 0.0 {
-                axpy(out.row_mut(i), av, brow);
+                simd::axpy(out.row_mut(i), av, brow);
             }
         }
+        t += 1;
     }
 }
 
 /// a −= b, elementwise.
-pub fn sub_in_place(a: &mut Mat, b: &Mat) {
+pub fn sub_in_place<'a>(a: &mut Mat, b: impl Into<MatRef<'a>>) {
+    let b = b.into();
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
-    for (x, y) in a.data.iter_mut().zip(&b.data) {
+    for (x, y) in a.data.iter_mut().zip(b.data) {
         *x -= y;
     }
 }
 
-/// diag(s)·A — rows of `a` scaled by `s`.
-pub fn scale_rows(a: &Mat, s: &[f32]) -> Mat {
+/// out = diag(s)·A — rows of `a` scaled by `s` (workspace-reusing).
+pub fn scale_rows_into<'a>(out: &mut Mat, a: impl Into<MatRef<'a>>,
+                           s: &[f32]) {
+    let a = a.into();
     assert_eq!(a.rows, s.len(), "scale_rows dims");
-    let mut out = a.clone();
+    copy_into(out, a);
     for (i, &si) in s.iter().enumerate() {
         for x in out.row_mut(i) {
             *x *= si;
         }
     }
+}
+
+/// diag(s)·A as a fresh matrix.
+pub fn scale_rows<'a>(a: impl Into<MatRef<'a>>, s: &[f32]) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    scale_rows_into(&mut out, a, s);
     out
 }
 
-/// (I + A)⁻¹ for strictly-lower-triangular A, by forward substitution:
-/// row i of the inverse = e_i − Σ_{j<i} A[i,j] · row j.  Exploits the
-/// triangular fill-in (row j of the inverse has support [0, j]).
-pub fn tri_inv_unit_lower(a: &Mat) -> Mat {
+/// out = (I + A)⁻¹ for strictly-lower-triangular A, by forward
+/// substitution: row i of the inverse = e_i − Σ_{j<i} A[i,j] · row j.
+/// Exploits the triangular fill-in (row j of the inverse has support
+/// [0, j]).
+pub fn tri_inv_unit_lower_into(out: &mut Mat, a: &Mat) {
     assert_eq!(a.rows, a.cols, "tri_inv_unit_lower wants square");
     let c = a.rows;
-    let mut t = Mat::eye(c);
+    out.reset(c, c);
+    for i in 0..c {
+        out.data[i * c + i] = 1.0;
+    }
     for i in 0..c {
         for j in 0..i {
             let aij = a[(i, j)];
             if aij != 0.0 {
-                // rows i and j of t are disjoint slices; split to borrow both
-                let (head, tail) = t.data.split_at_mut(i * c);
-                let tj = &head[j * c..j * c + j + 1];
-                let ti = &mut tail[..c];
-                for (x, y) in ti.iter_mut().zip(tj) {
-                    *x -= aij * y;
-                }
+                // rows i and j of out are disjoint slices; split to borrow both
+                let (head, tail) = out.data.split_at_mut(i * c);
+                simd::axpy(&mut tail[..j + 1], -aij,
+                           &head[j * c..j * c + j + 1]);
             }
         }
     }
+}
+
+/// (I + A)⁻¹ as a fresh matrix.
+pub fn tri_inv_unit_lower(a: &Mat) -> Mat {
+    let mut t = Mat::zeros(0, 0);
+    tri_inv_unit_lower_into(&mut t, a);
     t
 }
 
@@ -246,6 +328,48 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reshape_stale_workspaces() {
+        // a workspace Mat left at the wrong shape by a previous (larger)
+        // chunk must be adapted, not trip an assert or leak stale values
+        let mut rng = Rng::new(13);
+        let a = Mat::random(5, 6, &mut rng, 1.0);
+        let b = Mat::random(6, 3, &mut rng, 1.0);
+        let mut ws = Mat::random(64, 64, &mut rng, 1.0);
+        matmul_into(&mut ws, &a, &b, false);
+        assert!(ws.allclose(&naive_matmul(&a, &b), 1e-4, 1e-4));
+
+        let bt = Mat::random(7, 6, &mut rng, 1.0);
+        matmul_nt_into(&mut ws, &a, &bt, false);
+        assert!(ws.allclose(&a.matmul(&bt.transpose()), 1e-4, 1e-4));
+
+        let sq = Mat::random(4, 6, &mut rng, 1.0);
+        tril_matmul_nt_into(&mut ws, &sq, &sq, -1);
+        assert!(ws.allclose(&sq.matmul(&sq.transpose()).tril(-1),
+                            1e-4, 1e-4));
+
+        transpose_into(&mut ws, &a);
+        assert!(ws.allclose(&a.transpose(), 1e-6, 1e-6));
+
+        scale_rows_into(&mut ws, &a, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!((ws.rows, ws.cols), (5, 6));
+    }
+
+    #[test]
+    fn windows_give_same_products_as_copies() {
+        // MatRef row windows must be interchangeable with sliced copies
+        let mut rng = Rng::new(21);
+        let big = Mat::random(20, 6, &mut rng, 1.0);
+        let b = Mat::random(6, 4, &mut rng, 1.0);
+        let copy = Mat::from_vec(
+            4, 6, big.data[5 * 6..9 * 6].to_vec()).unwrap();
+        let got = matmul(big.rows_window(5, 4), &b);
+        assert!(got.allclose(&matmul(&copy, &b), 0.0, 0.0));
+        let got_nt = matmul_nt(big.rows_window(5, 4), big.rows_window(0, 3));
+        let copy0 = Mat::from_vec(3, 6, big.data[..3 * 6].to_vec()).unwrap();
+        assert!(got_nt.allclose(&matmul_nt(&copy, &copy0), 0.0, 0.0));
+    }
+
+    #[test]
     fn tril_nt_masks_exactly() {
         let mut rng = Rng::new(14);
         let a = Mat::random(12, 6, &mut rng, 1.0);
@@ -268,12 +392,15 @@ mod tests {
     #[test]
     fn tn_acc_matches_transpose_matmul() {
         let mut rng = Rng::new(15);
-        let a = Mat::random(10, 6, &mut rng, 1.0);
-        let b = Mat::random(10, 4, &mut rng, 1.0);
-        let mut out = Mat::random(6, 4, &mut rng, 1.0);
-        let want = out.add(&a.transpose().matmul(&b));
-        matmul_tn_acc(&mut out, &a, &b);
-        assert!(out.allclose(&want, 1e-4, 1e-4));
+        // sizes straddle the 4-row quad boundary of the fused update
+        for t in [1usize, 3, 4, 7, 10, 16] {
+            let a = Mat::random(t, 6, &mut rng, 1.0);
+            let b = Mat::random(t, 4, &mut rng, 1.0);
+            let mut out = Mat::random(6, 4, &mut rng, 1.0);
+            let want = out.add(&a.transpose().matmul(&b));
+            matmul_tn_acc(&mut out, &a, &b);
+            assert!(out.allclose(&want, 1e-4, 1e-4), "t={t}");
+        }
     }
 
     #[test]
@@ -337,6 +464,12 @@ mod tests {
             let xt = solve_unit_lower_t(&a, &b);
             assert!(ia.transpose().matmul(&xt).allclose(&b, 1e-3, 1e-3),
                     "bwd C={c}");
+            // the _into forms write the same solutions into a workspace
+            let mut ws = Mat::zeros(1, 1);
+            solve_unit_lower_into(&mut ws, &a, &b);
+            assert!(ws.allclose(&x, 0.0, 0.0), "into fwd C={c}");
+            solve_unit_lower_t_into(&mut ws, &a, &b);
+            assert!(ws.allclose(&xt, 0.0, 0.0), "into bwd C={c}");
         }
     }
 

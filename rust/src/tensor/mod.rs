@@ -9,6 +9,7 @@
 
 pub mod blocked;
 pub mod rng;
+pub mod simd;
 
 use crate::bail;
 
@@ -18,6 +19,30 @@ pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// Borrowed row-major matrix view — a (rows, cols) window over someone
+/// else's storage.  The blocked primitives accept `impl Into<MatRef>` so
+/// the chunkwise hot loop can hand them row windows of the full-sequence
+/// tensors (`Mat::rows_window`) without `slice_rows`-style copies; a
+/// `&Mat` converts implicitly, so existing call sites are unchanged.
+#[derive(Debug, Clone, Copy)]
+pub struct MatRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatRef<'a> {
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl<'a> From<&'a Mat> for MatRef<'a> {
+    fn from(m: &'a Mat) -> MatRef<'a> {
+        MatRef { rows: m.rows, cols: m.cols, data: &m.data }
+    }
 }
 
 impl Mat {
@@ -70,6 +95,32 @@ impl Mat {
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrowed view of the whole matrix.
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Borrowed view of rows `start..start + n` (no copy — the chunkwise
+    /// kernels' replacement for `slice_rows`).
+    pub fn rows_window(&self, start: usize, n: usize) -> MatRef<'_> {
+        MatRef {
+            rows: n,
+            cols: self.cols,
+            data: &self.data[start * self.cols..(start + n) * self.cols],
+        }
+    }
+
+    /// Reshape to `rows × cols` and zero the contents WITHOUT releasing
+    /// the backing allocation — the workspace-reuse primitive: once the
+    /// buffer has grown to its steady-state size, `reset` never touches
+    /// the allocator again.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
     }
 
     /// self @ other

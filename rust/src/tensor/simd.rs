@@ -1,0 +1,581 @@
+//! Runtime-dispatched SIMD microkernels for the f32 primitives the
+//! blocked tensor layer (and through it the chunkwise DeltaNet kernels)
+//! spends its time in: `dot`, `axpy`, a fused four-source `axpy4`, a
+//! register-tiled 4×16 matmul microkernel with a packed B panel, and a
+//! 2×4 dot-product microkernel for A·Bᵀ.
+//!
+//! Dispatch is decided ONCE per process (`level()`), from two inputs:
+//!
+//! * `DELTANET_SIMD=off|0|scalar` forces the portable scalar fallback —
+//!   the debugging escape hatch, also exercised by CI so the portable
+//!   path stays green;
+//! * otherwise `is_x86_feature_detected!` picks AVX2+FMA when the CPU has
+//!   both, scalar everywhere else (non-x86_64 builds compile only the
+//!   scalar path; there is no `unsafe` outside this module's `avx2`
+//!   submodule).
+//!
+//! The scalar fallbacks are the pre-existing loops from `tensor`/
+//! `tensor::blocked`, kept as the semantic reference: `tests/simd_equiv.rs`
+//! pins every SIMD kernel to its fallback across odd sizes and unaligned
+//! tails, and the AVX2 kernels use FMA so results may differ from scalar
+//! by normal f32 rounding (well inside the 1e-4 tolerances every kernel
+//! test uses).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which microkernel set the process dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar loops (autovectorized at best).
+    Scalar,
+    /// AVX2 + FMA `std::arch` kernels (x86_64 only).
+    Avx2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// 0 = undecided, 1 = scalar, 2 = avx2.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn level_code(l: Level) -> u8 {
+    match l {
+        Level::Scalar => 1,
+        Level::Avx2 => 2,
+    }
+}
+
+/// What dispatch WOULD pick right now: the `DELTANET_SIMD` override, else
+/// CPU feature detection.  Does not consult or touch the cached decision —
+/// benches use it to recover the hardware level after forcing scalar.
+pub fn detect_level() -> Level {
+    if matches!(
+        std::env::var("DELTANET_SIMD").ok().as_deref(),
+        Some("off") | Some("0") | Some("scalar")
+    ) {
+        return Level::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        {
+            return Level::Avx2;
+        }
+    }
+    Level::Scalar
+}
+
+/// The process-wide dispatch decision, resolved on first use.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => Level::Scalar,
+        2 => Level::Avx2,
+        _ => {
+            let l = detect_level();
+            LEVEL.store(level_code(l), Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Override the dispatch decision (benches compare scalar vs SIMD legs
+/// in one process; single-threaded callers only — a concurrent kernel
+/// call may observe either level, both of which are correct).
+pub fn force_level(l: Level) {
+    LEVEL.store(level_code(l), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------- dot --
+
+/// v ⋅ w, SIMD-dispatched.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only selected when avx2+fma are detected
+        return unsafe { avx2::dot(a, b) };
+    }
+    crate::tensor::dot(a, b)
+}
+
+// --------------------------------------------------------------- axpy --
+
+/// a ← a + s·b, SIMD-dispatched.
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only selected when avx2+fma are detected
+        unsafe { avx2::axpy(a, s, b) };
+        return;
+    }
+    crate::tensor::axpy(a, s, b)
+}
+
+/// out ← out + s[0]·b[0] + s[1]·b[1] + s[2]·b[2] + s[3]·b[3] in one pass:
+/// the destination row is loaded and stored once instead of four times
+/// (the inner step of Aᵀ·B accumulation over four source rows).
+pub fn axpy4(out: &mut [f32], s: [f32; 4], b: [&[f32]; 4]) {
+    for r in b {
+        debug_assert_eq!(out.len(), r.len());
+    }
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only selected when avx2+fma are detected
+        unsafe { avx2::axpy4(out, s, b) };
+        return;
+    }
+    // element-wise accumulation order matches the vector kernel
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += s[0] * b[0][i] + s[1] * b[1][i] + s[2] * b[2][i]
+            + s[3] * b[3][i];
+    }
+}
+
+// ------------------------------------------------------------- matmul --
+
+/// out += A·B over row-major slices: `a: [m,kd]`, `b: [kd,n]`,
+/// `out: [m,n]`.  AVX2 path: depth-tiled packed B panels driven through a
+/// 4×16 register-tiled microkernel; scalar path: the i/k-tiled axpy
+/// formulation.
+pub fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                  kd: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), kd * n);
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        avx2::matmul_acc(out, a, b, m, kd, n);
+        return;
+    }
+    scalar_matmul_acc(out, a, b, m, kd, n);
+}
+
+/// out += A·Bᵀ over row-major slices: `a: [m,kd]`, `b: [n,kd]`,
+/// `out: [m,n]`.  Both paths are depth-tiled so long k extents stream
+/// through cache-sized slabs; the AVX2 path computes 2×4 output tiles so
+/// each loaded B row is reused across A rows (and vice versa).
+pub fn matmul_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                     kd: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), n * kd);
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        avx2::matmul_nt_acc(out, a, b, m, kd, n);
+        return;
+    }
+    scalar_matmul_nt_acc(out, a, b, m, kd, n);
+}
+
+/// Row tile of the scalar fallbacks (matches the historical
+/// `tensor::blocked` tiling).
+const TILE_I: usize = 32;
+/// Depth tile: one slab of the k extent per pass.
+const TILE_K: usize = 256;
+
+fn scalar_matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                     kd: usize, n: usize) {
+    for ib in (0..m).step_by(TILE_I) {
+        let ie = (ib + TILE_I).min(m);
+        for kb in (0..kd).step_by(TILE_K) {
+            let ke = (kb + TILE_K).min(kd);
+            for i in ib..ie {
+                let arow = &a[i * kd..(i + 1) * kd];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for k in kb..ke {
+                    let av = arow[k];
+                    if av != 0.0 {
+                        crate::tensor::axpy(orow, av, &b[k * n..(k + 1) * n]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn scalar_matmul_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                        kd: usize, n: usize) {
+    // depth tiling keeps the streamed B rows inside a cache-sized k slab
+    // (the fix for the historically untiled A·Bᵀ)
+    for kb in (0..kd).step_by(TILE_K) {
+        let ke = (kb + TILE_K).min(kd);
+        for ib in (0..m).step_by(TILE_I) {
+            let ie = (ib + TILE_I).min(m);
+            for i in ib..ie {
+                let arow = &a[i * kd + kb..i * kd + ke];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += crate::tensor::dot(arow, &b[j * kd + kb..j * kd + ke]);
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- AVX2 kernels --
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+    use std::cell::RefCell;
+
+    /// Microkernel output-tile width (two 8-lane registers).
+    const NR: usize = 16;
+    /// Microkernel output-tile height.
+    const MR: usize = 4;
+    /// Depth slab per packed panel.
+    const TILE_K: usize = 256;
+    /// Row tile of the NT driver (B rows stay hot across it).
+    const TILE_I: usize = 32;
+
+    /// Reusable packed-panel buffer, one per thread: steady-state matmuls
+    /// never touch the allocator.
+    fn with_panel<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+        thread_local! {
+            static PANEL: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+        }
+        PANEL.with(|p| f(&mut p.borrow_mut()))
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)),
+                                   _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i + 8)),
+                                   _mm256_loadu_ps(pb.add(i + 8)), acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)),
+                                   _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+        let n = a.len();
+        let sv = _mm256_set1_ps(s);
+        let (pa, pb) = (a.as_mut_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(pa.add(i));
+            let bv = _mm256_loadu_ps(pb.add(i));
+            _mm256_storeu_ps(pa.add(i), _mm256_fmadd_ps(sv, bv, av));
+            i += 8;
+        }
+        while i < n {
+            a[i] += s * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy4(out: &mut [f32], s: [f32; 4],
+                               b: [&[f32]; 4]) {
+        let n = out.len();
+        let po = out.as_mut_ptr();
+        let sv = [_mm256_set1_ps(s[0]), _mm256_set1_ps(s[1]),
+                  _mm256_set1_ps(s[2]), _mm256_set1_ps(s[3])];
+        let mut i = 0;
+        while i + 8 <= n {
+            let mut o = _mm256_loadu_ps(po.add(i));
+            o = _mm256_fmadd_ps(sv[0], _mm256_loadu_ps(b[0].as_ptr().add(i)), o);
+            o = _mm256_fmadd_ps(sv[1], _mm256_loadu_ps(b[1].as_ptr().add(i)), o);
+            o = _mm256_fmadd_ps(sv[2], _mm256_loadu_ps(b[2].as_ptr().add(i)), o);
+            o = _mm256_fmadd_ps(sv[3], _mm256_loadu_ps(b[3].as_ptr().add(i)), o);
+            _mm256_storeu_ps(po.add(i), o);
+            i += 8;
+        }
+        while i < n {
+            out[i] += s[0] * b[0][i] + s[1] * b[1][i] + s[2] * b[2][i]
+                + s[3] * b[3][i];
+            i += 1;
+        }
+    }
+
+    /// out += A·B: pack B column panels, drive the 4×16 microkernel.
+    pub(super) fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32],
+                             m: usize, kd: usize, n: usize) {
+        with_panel(|panel| {
+            let mut kb = 0;
+            while kb < kd {
+                let ke = (kb + TILE_K).min(kd);
+                let mut j0 = 0;
+                while j0 < n {
+                    let jw = NR.min(n - j0);
+                    pack_panel(panel, b, n, kb, ke, j0, jw);
+                    let mut i0 = 0;
+                    while i0 < m {
+                        let rows = MR.min(m - i0);
+                        // SAFETY: caller checked avx2+fma; indices bounded
+                        unsafe {
+                            mm_tile_4x16(out, n, i0, j0, rows, jw, a, kd,
+                                         kb, ke, panel);
+                        }
+                        i0 += MR;
+                    }
+                    j0 += NR;
+                }
+                kb = ke;
+            }
+        })
+    }
+
+    /// Pack `b[kb..ke, j0..j0+jw]` into a contiguous `(ke−kb)×NR` panel,
+    /// zero-padded to NR columns so the microkernel always loads full
+    /// registers.
+    fn pack_panel(panel: &mut Vec<f32>, b: &[f32], n: usize, kb: usize,
+                  ke: usize, j0: usize, jw: usize) {
+        panel.clear();
+        panel.resize((ke - kb) * NR, 0.0);
+        for (kk, k) in (kb..ke).enumerate() {
+            panel[kk * NR..kk * NR + jw]
+                .copy_from_slice(&b[k * n + j0..k * n + j0 + jw]);
+        }
+    }
+
+    /// One 4×16 output tile: 8 accumulator registers over the packed
+    /// panel's k slab.  For edge tiles with fewer than 4 rows the last
+    /// valid A row is duplicated (reads stay in bounds) and the
+    /// write-back skips the duplicates.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn mm_tile_4x16(out: &mut [f32], ldo: usize, i0: usize,
+                           j0: usize, rows: usize, jw: usize, a: &[f32],
+                           lda: usize, kb: usize, ke: usize,
+                           panel: &[f32]) {
+        let ridx = |r: usize| i0 + r.min(rows - 1);
+        let pp = panel.as_ptr();
+        let mut acc = [_mm256_setzero_ps(); 2 * MR];
+        for kk in 0..(ke - kb) {
+            let p0 = _mm256_loadu_ps(pp.add(kk * NR));
+            let p1 = _mm256_loadu_ps(pp.add(kk * NR + 8));
+            let k = kb + kk;
+            for r in 0..MR {
+                let av = _mm256_set1_ps(a[ridx(r) * lda + k]);
+                acc[2 * r] = _mm256_fmadd_ps(av, p0, acc[2 * r]);
+                acc[2 * r + 1] = _mm256_fmadd_ps(av, p1, acc[2 * r + 1]);
+            }
+        }
+        let mut buf = [0f32; NR];
+        for r in 0..rows {
+            _mm256_storeu_ps(buf.as_mut_ptr(), acc[2 * r]);
+            _mm256_storeu_ps(buf.as_mut_ptr().add(8), acc[2 * r + 1]);
+            let o0 = (i0 + r) * ldo + j0;
+            for (o, &x) in out[o0..o0 + jw].iter_mut().zip(&buf[..jw]) {
+                *o += x;
+            }
+        }
+    }
+
+    /// out += A·Bᵀ: depth-tiled 2×4 dot-product tiles — each loaded B
+    /// vector feeds 2 FMAs, each A vector 4, instead of one dot per
+    /// (i, j) streaming the full k extent.
+    pub(super) fn matmul_nt_acc(out: &mut [f32], a: &[f32], b: &[f32],
+                                m: usize, kd: usize, n: usize) {
+        let mut kb = 0;
+        while kb < kd {
+            let ke = (kb + TILE_K).min(kd);
+            let mut ib = 0;
+            while ib < m {
+                let ie = (ib + TILE_I).min(m);
+                let mut j0 = 0;
+                while j0 < n {
+                    let jr = 4.min(n - j0);
+                    let mut i0 = ib;
+                    while i0 < ie {
+                        let rows = 2.min(ie - i0);
+                        // SAFETY: caller checked avx2+fma; indices bounded
+                        unsafe {
+                            nt_tile_2x4(out, n, i0, j0, rows, jr, a, b, kd,
+                                        kb, ke);
+                        }
+                        i0 += 2;
+                    }
+                    j0 += 4;
+                }
+                ib = ie;
+            }
+            kb = ke;
+        }
+    }
+
+    /// One 2×4 tile of dots over `k ∈ [kb, ke)`; duplicate-row/col
+    /// clamping handles the edges like [`mm_tile_4x16`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn nt_tile_2x4(out: &mut [f32], ldo: usize, i0: usize,
+                          j0: usize, rows: usize, jr: usize, a: &[f32],
+                          b: &[f32], kd: usize, kb: usize, ke: usize) {
+        let ridx = |r: usize| i0 + r.min(rows - 1);
+        let cidx = |c: usize| j0 + c.min(jr - 1);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = [_mm256_setzero_ps(); 8];
+        let mut k = kb;
+        while k + 8 <= ke {
+            let b0 = _mm256_loadu_ps(pb.add(cidx(0) * kd + k));
+            let b1 = _mm256_loadu_ps(pb.add(cidx(1) * kd + k));
+            let b2 = _mm256_loadu_ps(pb.add(cidx(2) * kd + k));
+            let b3 = _mm256_loadu_ps(pb.add(cidx(3) * kd + k));
+            for r in 0..2 {
+                let av = _mm256_loadu_ps(pa.add(ridx(r) * kd + k));
+                acc[4 * r] = _mm256_fmadd_ps(av, b0, acc[4 * r]);
+                acc[4 * r + 1] = _mm256_fmadd_ps(av, b1, acc[4 * r + 1]);
+                acc[4 * r + 2] = _mm256_fmadd_ps(av, b2, acc[4 * r + 2]);
+                acc[4 * r + 3] = _mm256_fmadd_ps(av, b3, acc[4 * r + 3]);
+            }
+            k += 8;
+        }
+        for r in 0..rows {
+            let arow = (i0 + r) * kd;
+            for c in 0..jr {
+                let brow = (j0 + c) * kd;
+                let mut s = hsum(acc[4 * r + c]);
+                for kt in k..ke {
+                    s += a[arow + kt] * b[brow + kt];
+                }
+                out[(i0 + r) * ldo + j0 + c] += s;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut buf = [0f32; 8];
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+        buf.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn close(x: f32, y: f32) -> bool {
+        (x - y).abs() <= 1e-4 + 1e-4 * x.abs().max(y.abs())
+    }
+
+    // these compare the dispatched kernels against the scalar reference;
+    // on hardware without AVX2 both sides are the same code and the tests
+    // degenerate to identities (the SIMD leg is then covered by CI's
+    // x86_64 runners)
+
+    #[test]
+    fn dot_matches_scalar_across_tails() {
+        let mut rng = Rng::new(91);
+        for n in [0usize, 1, 7, 8, 15, 16, 31, 33, 100] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            assert!(close(dot(&a, &b), crate::tensor::dot(&a, &b)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_across_tails() {
+        let mut rng = Rng::new(92);
+        for n in [1usize, 7, 8, 31, 33, 100] {
+            let b = rand_vec(&mut rng, n);
+            let mut x = rand_vec(&mut rng, n);
+            let mut y = x.clone();
+            axpy(&mut x, 0.37, &b);
+            crate::tensor::axpy(&mut y, 0.37, &b);
+            for (p, q) in x.iter().zip(&y) {
+                assert!(close(*p, *q), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_matches_four_axpys() {
+        let mut rng = Rng::new(93);
+        for n in [1usize, 7, 33, 100] {
+            let rows: Vec<Vec<f32>> =
+                (0..4).map(|_| rand_vec(&mut rng, n)).collect();
+            let s = [0.5, -1.25, 2.0, 0.125];
+            let mut fused = rand_vec(&mut rng, n);
+            let mut serial = fused.clone();
+            axpy4(&mut fused, s,
+                  [&rows[0], &rows[1], &rows[2], &rows[3]]);
+            for (r, &sr) in s.iter().enumerate() {
+                crate::tensor::axpy(&mut serial, sr, &rows[r]);
+            }
+            for (p, q) in fused.iter().zip(&serial) {
+                assert!(close(*p, *q), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_acc_matches_triple_loop() {
+        let mut rng = Rng::new(94);
+        for (m, kd, n) in [(1, 1, 1), (3, 7, 5), (4, 16, 16), (5, 31, 17),
+                           (33, 65, 33), (64, 64, 100)] {
+            let a = rand_vec(&mut rng, m * kd);
+            let b = rand_vec(&mut rng, kd * n);
+            let mut got = rand_vec(&mut rng, m * n);
+            let init = got.clone();
+            matmul_acc(&mut got, &a, &b, m, kd, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = init[i * n + j]
+                        + (0..kd).map(|k| a[i * kd + k] * b[k * n + j])
+                            .sum::<f32>();
+                    assert!(close(got[i * n + j], want),
+                            "{m}x{kd}x{n} [{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_acc_matches_triple_loop() {
+        let mut rng = Rng::new(95);
+        for (m, kd, n) in [(1, 1, 1), (2, 8, 4), (3, 7, 5), (5, 31, 17),
+                           (33, 100, 9), (31, 64, 33)] {
+            let a = rand_vec(&mut rng, m * kd);
+            let b = rand_vec(&mut rng, n * kd);
+            let mut got = rand_vec(&mut rng, m * n);
+            let init = got.clone();
+            matmul_nt_acc(&mut got, &a, &b, m, kd, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = init[i * n + j]
+                        + (0..kd).map(|k| a[i * kd + k] * b[j * kd + k])
+                            .sum::<f32>();
+                    assert!(close(got[i * n + j], want),
+                            "{m}x{kd}x{n} [{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_name_is_stable() {
+        // whatever hardware this runs on, the decision must be one of the
+        // two published names (README documents both)
+        assert!(matches!(level().name(), "scalar" | "avx2"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Steady-state allocation audit of the chunkwise hot path.
+//!
+//! The chunk loops in `kernels::chunkwise` / `kernels::backward` run on
+//! thread-local [`ChunkWorkspace`] scratch, so after warmup the heap
+//! traffic of a forward or backward call must not depend on how many
+//! chunks the sequence has: only the per-call outputs (o, gradients,
+//! state) allocate.  A counting `#[global_allocator]` makes that claim a
+//! test — one extra allocation per chunk shows up as a count difference
+//! between a 2-chunk and a 16-chunk problem.
+//!
+//! Single `#[test]` on purpose: the counter is process-global, and a
+//! concurrent test would perturb the counts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use deltanet::kernels::{chunkwise_backward, chunkwise_forward};
+use deltanet::reference::random_problem;
+use deltanet::tensor::Mat;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+const C: usize = 16;
+const D: usize = 16;
+
+struct Problem {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    beta: Vec<f32>,
+    d_o: Mat,
+}
+
+fn problem(n_chunks: usize, seed: u64) -> Problem {
+    let l = n_chunks * C;
+    let (q, k, v, beta) = random_problem(l, D, D, seed);
+    let (_, _, d_o, _) = random_problem(l, D, D, seed + 1);
+    Problem { q, k, v, beta, d_o }
+}
+
+fn run_forward(p: &Problem) {
+    let f = chunkwise_forward(&p.q, &p.k, &p.v, &p.beta, C, None);
+    std::hint::black_box(&f);
+}
+
+fn run_backward(p: &Problem) {
+    let g = chunkwise_backward(&p.q, &p.k, &p.v, &p.beta, C, None, &p.d_o,
+                               None);
+    std::hint::black_box(&g);
+}
+
+fn counted<F: FnOnce()>(f: F) -> u64 {
+    let before = alloc_calls();
+    f();
+    alloc_calls() - before
+}
+
+#[test]
+fn chunk_loop_is_allocation_free_at_steady_state() {
+    // inputs built up front so only the kernel calls are counted
+    let small = problem(2, 11);
+    let big = problem(16, 12);
+
+    // Warmup sizes the thread-local workspace (and the backward
+    // checkpoint buffer) for the LARGEST problem, and interns the
+    // kernels.* counters — after this, steady state.
+    for _ in 0..2 {
+        run_forward(&big);
+        run_backward(&big);
+        run_forward(&small);
+        run_backward(&small);
+    }
+
+    let fwd_small = counted(|| run_forward(&small));
+    let fwd_big = counted(|| run_forward(&big));
+    assert_eq!(
+        fwd_small, fwd_big,
+        "forward allocation count grew with chunk count \
+         (2 chunks: {fwd_small}, 16 chunks: {fwd_big}) — \
+         something in the chunk loop allocates per chunk"
+    );
+
+    let bwd_small = counted(|| run_backward(&small));
+    let bwd_big = counted(|| run_backward(&big));
+    assert_eq!(
+        bwd_small, bwd_big,
+        "backward allocation count grew with chunk count \
+         (2 chunks: {bwd_small}, 16 chunks: {bwd_big}) — \
+         something in the pre-pass or reverse scan allocates per chunk"
+    );
+
+    // The per-call budget is the outputs plus a couple of temporaries;
+    // a generous ceiling still catches a per-chunk regression (16 chunks
+    // x several mats each would blow straight past it).
+    assert!(fwd_big <= 16,
+            "forward makes {fwd_big} allocations per call (budget 16)");
+    assert!(bwd_big <= 32,
+            "backward makes {bwd_big} allocations per call (budget 32)");
+}

@@ -1,0 +1,205 @@
+//! Pin the dispatched SIMD kernels to independent scalar references.
+//!
+//! Every `tensor::simd` primitive is checked against a plainly-written
+//! scalar loop (re-implemented here, NOT the library's own fallback) at
+//! deliberately awkward sizes — 1, 7, 31, 33, 100 — and on unaligned
+//! slices, so lane remainders, edge tiles, and tail handling are all
+//! exercised.  Under `DELTANET_SIMD=off` (CI runs this whole suite that
+//! way too) both sides take the scalar path and the tests pin the
+//! fallback to the same contract.
+//!
+//! These tests never call `simd::force_level` — the test harness runs
+//! them in parallel and the dispatch level is process-global.
+
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::simd;
+
+const SIZES: [usize; 5] = [1, 7, 31, 33, 100];
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-4f32 + 1e-4 * w.abs();
+        assert!((g - w).abs() <= tol,
+                "{what}[{i}]: got {g}, want {w} (tol {tol})");
+    }
+}
+
+// ------------------------------------------------- scalar references --
+
+fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn ref_axpy(y: &mut [f32], s: f32, b: &[f32]) {
+    for (yi, bi) in y.iter_mut().zip(b) {
+        *yi += s * bi;
+    }
+}
+
+fn ref_matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                  kd: usize, n: usize) {
+    for i in 0..m {
+        for p in 0..kd {
+            let aip = a[i * kd + p];
+            for j in 0..n {
+                out[i * n + j] += aip * b[p * n + j];
+            }
+        }
+    }
+}
+
+fn ref_matmul_nt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                     kd: usize, n: usize) {
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] += ref_dot(&a[i * kd..(i + 1) * kd],
+                                      &b[j * kd..(j + 1) * kd]);
+        }
+    }
+}
+
+// -------------------------------------------------------------- tests --
+
+#[test]
+fn dot_matches_reference_at_odd_sizes() {
+    let mut rng = Rng::new(1);
+    for n in SIZES {
+        let a = fill(&mut rng, n);
+        let b = fill(&mut rng, n);
+        let got = simd::dot(&a, &b);
+        let want = ref_dot(&a, &b);
+        assert_close(&[got], &[want], &format!("dot n={n}"));
+    }
+}
+
+#[test]
+fn dot_handles_unaligned_tails() {
+    let mut rng = Rng::new(2);
+    let a = fill(&mut rng, 128);
+    let b = fill(&mut rng, 128);
+    // offset slices shift the data off any 32-byte boundary the Vec
+    // allocation might have landed on
+    for off in [1usize, 3, 5] {
+        for n in SIZES {
+            let (xa, xb) = (&a[off..off + n], &b[off..off + n]);
+            assert_close(&[simd::dot(xa, xb)], &[ref_dot(xa, xb)],
+                         &format!("dot off={off} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn axpy_matches_reference_at_odd_sizes() {
+    let mut rng = Rng::new(3);
+    for n in SIZES {
+        let b = fill(&mut rng, n);
+        let mut got = fill(&mut rng, n);
+        let mut want = got.clone();
+        simd::axpy(&mut got, -0.37, &b);
+        ref_axpy(&mut want, -0.37, &b);
+        assert_close(&got, &want, &format!("axpy n={n}"));
+    }
+}
+
+#[test]
+fn axpy_handles_unaligned_tails() {
+    let mut rng = Rng::new(4);
+    let b = fill(&mut rng, 128);
+    for off in [1usize, 3, 7] {
+        for n in SIZES {
+            let mut got = fill(&mut rng, off + n + 4);
+            let mut want = got.clone();
+            simd::axpy(&mut got[off..off + n], 1.25, &b[off..off + n]);
+            ref_axpy(&mut want[off..off + n], 1.25, &b[off..off + n]);
+            assert_close(&got, &want, &format!("axpy off={off} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn axpy4_matches_four_single_axpys() {
+    let mut rng = Rng::new(5);
+    for n in SIZES {
+        let rows: Vec<Vec<f32>> =
+            (0..4).map(|_| fill(&mut rng, n)).collect();
+        let s = [0.5f32, -1.25, 0.0, 2.0];
+        let mut got = fill(&mut rng, n);
+        let mut want = got.clone();
+        simd::axpy4(&mut got, s,
+                    [&rows[0], &rows[1], &rows[2], &rows[3]]);
+        for (si, row) in s.iter().zip(&rows) {
+            ref_axpy(&mut want, *si, row);
+        }
+        assert_close(&got, &want, &format!("axpy4 n={n}"));
+    }
+}
+
+#[test]
+fn matmul_acc_matches_reference_at_odd_sizes() {
+    let mut rng = Rng::new(6);
+    // (m, k, n) triples hit sub-tile, tile-edge, and multi-tile shapes
+    let cases = [(1usize, 1usize, 1usize), (7, 31, 33), (33, 7, 100),
+                 (100, 33, 7), (31, 100, 1), (33, 33, 33)];
+    for (m, kd, n) in cases {
+        let a = fill(&mut rng, m * kd);
+        let b = fill(&mut rng, kd * n);
+        let mut got = fill(&mut rng, m * n);
+        let mut want = got.clone();
+        simd::matmul_acc(&mut got, &a, &b, m, kd, n);
+        ref_matmul_acc(&mut want, &a, &b, m, kd, n);
+        assert_close(&got, &want, &format!("matmul_acc {m}x{kd}x{n}"));
+    }
+}
+
+#[test]
+fn matmul_nt_acc_matches_reference_at_odd_sizes() {
+    let mut rng = Rng::new(7);
+    let cases = [(1usize, 1usize, 1usize), (7, 31, 33), (33, 7, 100),
+                 (100, 33, 7), (31, 100, 1), (33, 33, 33)];
+    for (m, kd, n) in cases {
+        let a = fill(&mut rng, m * kd);
+        let b = fill(&mut rng, n * kd);
+        let mut got = fill(&mut rng, m * n);
+        let mut want = got.clone();
+        simd::matmul_nt_acc(&mut got, &a, &b, m, kd, n);
+        ref_matmul_nt_acc(&mut want, &a, &b, m, kd, n);
+        assert_close(&got, &want, &format!("matmul_nt_acc {m}x{kd}x{n}"));
+    }
+}
+
+#[test]
+fn matmul_acc_deep_k_exercises_depth_tiling() {
+    // k = 300 spans two 256-deep slabs; accumulation across slabs must
+    // be exact in structure (only rounding-level differences allowed)
+    let mut rng = Rng::new(8);
+    let (m, kd, n) = (5usize, 300usize, 17usize);
+    let a = fill(&mut rng, m * kd);
+    let b = fill(&mut rng, kd * n);
+    let mut got = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    simd::matmul_acc(&mut got, &a, &b, m, kd, n);
+    ref_matmul_acc(&mut want, &a, &b, m, kd, n);
+    assert_close(&got, &want, "matmul_acc deep-k");
+
+    let bt = fill(&mut rng, n * kd);
+    let mut got_nt = vec![0.0f32; m * n];
+    let mut want_nt = vec![0.0f32; m * n];
+    simd::matmul_nt_acc(&mut got_nt, &a, &bt, m, kd, n);
+    ref_matmul_nt_acc(&mut want_nt, &a, &bt, m, kd, n);
+    assert_close(&got_nt, &want_nt, "matmul_nt_acc deep-k");
+}
+
+#[test]
+fn dispatch_level_reports_a_name() {
+    // whatever the host supports, the decision must be queryable and
+    // stable across calls
+    let l1 = simd::level();
+    let l2 = simd::level();
+    assert_eq!(l1, l2);
+    assert!(!l1.name().is_empty());
+}
