@@ -22,6 +22,7 @@ use deltanet::runtime::{Manifest, Runtime};
 fn main() -> deltanet::Result<()> {
     // DELTANET_TRACE=TRACE_serve.json captures serve.batch/decode.* spans
     deltanet::obs::trace::init_from_env();
+    deltanet::obs::flight::init_from_env();
     let artifact = "deltanet_tiny";
     let man_path = std::path::PathBuf::from(
         format!("artifacts/{artifact}.decode.manifest.json"));

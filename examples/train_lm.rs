@@ -21,11 +21,14 @@ use deltanet::data::batcher::Split;
 use deltanet::metrics::Ewma;
 use deltanet::runtime::Runtime;
 use deltanet::util::json::Json;
+use deltanet::Context;
 
 fn main() -> deltanet::Result<()> {
     // DELTANET_TRACE=TRACE_train.json captures a hierarchical span trace
     // (train.step → train.forward/backward/optimizer → kernel spans)
     deltanet::obs::trace::init_from_env();
+    // arm the crash post-mortem (FLIGHT_<run>.json on any panic)
+    deltanet::obs::flight::init_from_env();
     let runtime = Runtime::new("artifacts")?;
     let artifact = std::env::var("DELTANET_E2E_ARTIFACT").ok()
         .or_else(|| ["deltanet_e2e", "deltanet_small", "deltanet_tiny"]
@@ -85,8 +88,11 @@ fn main() -> deltanet::Result<()> {
         println!("  {}", records[idx]);
     }
 
+    // steps >= 1 here, so both endpoints are recorded
+    let first_loss = report.first_loss.context("no first loss recorded")?;
+    let final_loss = report.final_loss.context("no final loss recorded")?;
     println!("\nsummary: loss {:.4} -> {:.4} | {:.0} tok/s | {:.1}s total",
-             report.first_loss, report.final_loss,
+             first_loss, final_loss,
              report.tokens_per_sec, report.elapsed_secs);
     for (step, e) in &report.evals {
         println!("  eval@{step}: held-out ppl {:.3} (nll {:.4}) acc {:.1}%",
@@ -109,8 +115,7 @@ fn main() -> deltanet::Result<()> {
                           "smoothed loss is not strictly decreasing: \
                            {s25:.4} -> {s50:.4} -> {s100:.4}");
     }
-    deltanet::ensure!(report.final_loss < report.first_loss,
-                    "loss did not decrease");
+    deltanet::ensure!(final_loss < first_loss, "loss did not decrease");
     println!("\ncheckpoint: checkpoints/train_lm.npz");
 
     let step_hist = deltanet::obs::metrics::histogram("train.step_ms");

@@ -27,8 +27,22 @@ const SEQ: usize = 64;
 
 fn main() -> deltanet::Result<()> {
     deltanet::obs::trace::init_from_env();
+    // Arm the flight recorder: a panic anywhere in the bench (including a
+    // pool worker) leaves FLIGHT_train.json at the repo root.
+    if std::env::var_os("DELTANET_FLIGHT_DIR").is_none() {
+        deltanet::obs::flight::set_dump_dir(&repo_root());
+    }
+    if std::env::var_os("DELTANET_RUN_ID").is_none() {
+        deltanet::obs::flight::set_run_id("train");
+    }
+    deltanet::obs::flight::init_from_env();
     let steps = if smoke_mode() { 20 } else { 100 };
     let lr = 1e-2f32;
+    // Crash-drill knob: panic a pool worker at the given step to prove the
+    // flight recorder dumps a valid post-mortem mid-bench.
+    let inject_panic: Option<usize> = std::env::var("DELTANET_INJECT_PANIC")
+        .ok()
+        .and_then(|v| v.parse().ok());
 
     let model = HostModel::new(HostModelCfg::tiny(), 7, default_threads())?;
     println!("host training bench: {} params, {BATCH}x{SEQ} tokens/step, \
@@ -41,6 +55,15 @@ fn main() -> deltanet::Result<()> {
     let mut gflops: Vec<f64> = Vec::with_capacity(steps);
     let t0 = Instant::now();
     for s in 0..steps {
+        if inject_panic == Some(s) {
+            println!("injecting pool-worker panic at step {s} (crash drill)");
+            let pool = deltanet::util::threadpool::ThreadPool::new(1);
+            let r = pool.submit(|| panic!("bench_train injected panic"))
+                .join();
+            assert!(r.is_err(), "injected job did not panic");
+            println!("pool survived; flight dump at {}",
+                     deltanet::obs::flight::dump_path().display());
+        }
         let batch = task.sample(BATCH, SEQ);
         let ts = Instant::now();
         let (loss, bd) = backend.train_step_detailed(&batch, lr)?;

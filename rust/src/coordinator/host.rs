@@ -20,6 +20,7 @@ use crate::kernels::{
 };
 use crate::model::{AdamW, HostModel, Optimizer};
 use crate::obs;
+use crate::obs::health::{HealthConfig, HealthMonitor, Verdict};
 use crate::runtime::HostValue;
 use crate::tensor::Mat;
 use crate::util::error::Context;
@@ -58,6 +59,11 @@ pub struct HostKernelBackend {
     /// Model + optimizer state backing `Backend::train_step` (attached
     /// via [`Self::with_model`]; `None` for pure kernel workloads).
     model: Option<(HostModel, Optimizer)>,
+    /// Training health monitor: classifies every step's (loss, grad norm)
+    /// before the optimizer applies the update.  The default policy
+    /// (abort on NaN/Inf/spike) preserves the old bare "non-finite loss"
+    /// bail, now with rolling context and a flight-recorder trail.
+    health: HealthMonitor,
 }
 
 impl HostKernelBackend {
@@ -69,7 +75,18 @@ impl HostKernelBackend {
             pool: ThreadPool::new(threads),
             chunk,
             model: None,
+            health: HealthMonitor::from_env(),
         }
+    }
+
+    /// Replace the health-monitor configuration (policy + detector
+    /// thresholds); resets the monitor's rolling state.
+    pub fn set_health(&mut self, cfg: HealthConfig) {
+        self.health = HealthMonitor::new(cfg);
+    }
+
+    pub fn health(&self) -> &HealthMonitor {
+        &self.health
     }
 
     /// Attach a host DeltaNet model (with fresh AdamW state) so the
@@ -106,10 +123,20 @@ impl HostKernelBackend {
         let flops_before = kernel_flops_total();
         let t_step = Instant::now();
         let (loss, grads, phases) = model.loss_and_grads_timed(batch)?;
-        ensure!(loss.is_finite(), "non-finite host training loss");
         let grad_norm = grads.global_norm();
+        // classify the step BEFORE the optimizer touches the params, so
+        // SkipStep can actually drop a poisoned update
+        let verdict = self.health.observe(loss, Some(grad_norm));
+        let skip_update = match &verdict {
+            Verdict::Abort(issue) => {
+                bail!("training health abort at step {}: {issue}",
+                      self.health.steps_seen());
+            }
+            Verdict::Skip(_) => true,
+            Verdict::Ok | Verdict::Warn(_) => false,
+        };
         let t_opt = Instant::now();
-        {
+        if !skip_update {
             let _opt_sp = obs::trace::span("train.optimizer");
             let gt = grads.tensors();
             let mut params: Vec<&mut Mat> = model
@@ -140,6 +167,14 @@ impl HostKernelBackend {
         obs::metrics::histogram("train.tokens_per_sec")
             .record(tokens_per_sec);
         obs::metrics::histogram("train.gflops").record(gflops);
+        obs::flight::record(
+            obs::flight::EventKind::Step,
+            "train.step",
+            &[("step", self.health.steps_seen() as f64),
+              ("loss", loss as f64),
+              ("grad_norm", grad_norm as f64),
+              ("ms", step_s * 1e3)],
+        );
 
         Ok((loss, StepBreakdown {
             forward_ms: phases.forward_ms,

@@ -42,8 +42,9 @@ use super::host::{HostKernelBackend, StepBreakdown};
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub steps: usize,
-    pub first_loss: f32,
-    pub final_loss: f32,
+    /// Loss of the first/last recorded step; `None` when no steps ran.
+    pub first_loss: Option<f32>,
+    pub final_loss: Option<f32>,
     pub tokens_per_sec: f64,
     pub elapsed_secs: f64,
     pub evals: Vec<(usize, EvalOutcome)>,
@@ -66,6 +67,11 @@ pub struct Trainer {
     /// fwd/bwd/opt split of the most recent step (host engine only — the
     /// artifact engine's phases live inside one compiled XLA program).
     last_breakdown: Option<StepBreakdown>,
+    /// Health monitor for the artifact engine (the host engine's monitor
+    /// lives inside `HostKernelBackend` where it can drop the optimizer
+    /// update; the compiled artifact fuses the update into the program,
+    /// so here `skip_step` degrades to a warning).
+    health: obs::health::HealthMonitor,
     pub batch: usize,
     pub seq_len: usize,
 }
@@ -144,6 +150,7 @@ impl Trainer {
             }),
             step: 0,
             last_breakdown: None,
+            health: obs::health::HealthMonitor::from_env(),
             batch,
             seq_len,
         })
@@ -177,6 +184,7 @@ impl Trainer {
             }),
             step: 0,
             last_breakdown: None,
+            health: obs::health::HealthMonitor::from_env(),
             batch,
             seq_len,
         })
@@ -231,10 +239,25 @@ impl Trainer {
         let loss = match &mut self.engine {
             Engine::Artifact(a) => {
                 self.last_breakdown = None;
-                a.train_step(self.step, batch, lr)?
+                let loss = a.train_step(self.step, batch, lr)?;
+                // the compiled step already applied its update, so Skip
+                // cannot drop it — only Abort stops the run here
+                if let obs::health::Verdict::Abort(issue) =
+                    self.health.observe(loss, None)
+                {
+                    bail!("training health abort at step {}: {issue}",
+                          self.step);
+                }
+                obs::flight::record(
+                    obs::flight::EventKind::Step,
+                    "train.step",
+                    &[("step", self.step as f64), ("loss", loss as f64)],
+                );
+                loss
             }
             // the host path IS the Backend trait's training surface; the
-            // detailed entry point also records train.* metrics
+            // detailed entry point records train.* metrics, runs its own
+            // health monitor, and emits the flight step event
             Engine::Host(h) => {
                 let (loss, bd) =
                     h.backend.train_step_detailed(batch, lr as f32)?;
@@ -242,9 +265,6 @@ impl Trainer {
                 loss
             }
         };
-        if !loss.is_finite() {
-            bail!("non-finite loss at step {}", self.step);
-        }
         Ok(loss)
     }
 
@@ -266,6 +286,15 @@ impl Trainer {
             let loss = self.train_step(&batch, lr)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             obs::metrics::histogram("train.step_ms").record(step_ms);
+            // periodic counter snapshots give the flight recorder a
+            // progress trail even when the ring has wrapped past the
+            // early steps
+            if s % 16 == 0 {
+                obs::flight::record_counters(&[
+                    "train.steps", "train.tokens",
+                    "kernels.forward.flops", "pool.job_panics",
+                ]);
+            }
             first_loss.get_or_insert(loss);
             tp.record_step(self.batch * self.seq_len);
             let bd = self.last_breakdown;
@@ -300,8 +329,8 @@ impl Trainer {
         log.flush()?;
         Ok(TrainReport {
             steps: cfg.steps,
-            first_loss: first_loss.unwrap_or(f32::NAN),
-            final_loss: log.recent_loss(5).unwrap_or(f32::NAN),
+            first_loss,
+            final_loss: log.recent_loss(5),
             tokens_per_sec: tp.tokens_per_sec(),
             elapsed_secs: tp.elapsed_secs(),
             evals,

@@ -41,8 +41,16 @@ COMMANDS:
   reproduce   fig1|fig2|fig3|fig4|tab1|tab2|tab3|ablate|chunks|all
               [--steps N] [--seed S] [--eval-batches N]
   inspect     [--artifact NAME]
-  trace-check PATH   validate a Chrome trace-event JSON written via
-                     DELTANET_TRACE (non-empty, well-formed events)
+  trace-check PATH   validate an observability artifact: a Chrome
+                     trace-event JSON (DELTANET_TRACE), a flight-recorder
+                     dump (FLIGHT_*.json / /flight.json), or a metrics
+                     snapshot (/metrics.json) — schema + monotonic
+                     timestamps
+  bench-diff  CURRENT.json [--baseline PATH] [--threshold X] [--json OUT]
+              [--warn-only]
+              compare a BENCH_*.json report against the committed baseline
+              (rust/benches/baselines/<name> by default); exits non-zero
+              on regression unless --warn-only
 
 TASKS: corpus | mqar | mqar:<pairs> | mad:<task> | regbench | recall:<style>
   mad tasks: compress fuzzy_recall in_context_recall memorize noisy_recall
@@ -50,7 +58,12 @@ TASKS: corpus | mqar | mqar:<pairs> | mad:<task> | regbench | recall:<style>
   recall styles: swde squad fda
 
 Set DELTANET_TRACE=out.json to record a hierarchical span trace of any
-command; open the file at https://ui.perfetto.dev";
+command; open the file at https://ui.perfetto.dev.  The flight recorder
+is always on (DELTANET_FLIGHT=off disables): any panic dumps the last
+events + metrics to FLIGHT_<run>.json (DELTANET_RUN_ID, DELTANET_FLIGHT_DIR,
+DELTANET_FLIGHT_EVENTS configure it).  DELTANET_HEALTH=warn|skip|abort
+sets the training health policy (window/spike/plateau knobs:
+DELTANET_HEALTH_WINDOW, DELTANET_HEALTH_SPIKE, DELTANET_HEALTH_PLATEAU)";
 
 fn parse_task(task: &str, seed: u64) -> deltanet::Result<DataConfig> {
     Ok(match task {
@@ -68,12 +81,13 @@ fn parse_task(task: &str, seed: u64) -> deltanet::Result<DataConfig> {
 }
 
 fn main() -> deltanet::Result<()> {
-    let args = Args::from_env(&[])?;
+    let args = Args::from_env(&["warn-only"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
     };
     deltanet::obs::trace::init_from_env();
+    deltanet::obs::flight::init_from_env();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let runtime = Runtime::new(&artifacts).context("creating PJRT runtime")?;
     let seed: u64 = args.get_parse("seed", 0)?;
@@ -108,8 +122,13 @@ fn main() -> deltanet::Result<()> {
             let mut eval_task = split.eval;
             let report = trainer.train(&cfg, train_task.as_mut(),
                                        Some(eval_task.as_mut()))?;
-            println!("loss {:.4} -> {:.4} | {:.0} tok/s | {:.1}s",
-                     report.first_loss, report.final_loss,
+            let fmt_loss = |l: Option<f32>| match l {
+                Some(v) => format!("{v:.4}"),
+                None => "n/a".to_string(),
+            };
+            println!("loss {} -> {} | {:.0} tok/s | {:.1}s",
+                     fmt_loss(report.first_loss),
+                     fmt_loss(report.final_loss),
                      report.tokens_per_sec, report.elapsed_secs);
             for (step, e) in &report.evals {
                 println!("  eval@{step}: ppl {:.3} acc {:.1}%",
@@ -232,36 +251,70 @@ fn main() -> deltanet::Result<()> {
                 .with_context(|| format!("reading {path}"))?;
             let j = deltanet::util::json::Json::parse(&text)
                 .with_context(|| format!("{path} is not valid JSON"))?;
-            let events = j.get("traceEvents")
-                .context("missing traceEvents key")?
-                .as_arr()?;
-            let mut spans = 0usize;
-            for (i, e) in events.iter().enumerate() {
-                let ph = e.get("ph")
-                    .with_context(|| format!("event {i} missing ph"))?
-                    .as_str()?;
-                e.get("name")
-                    .with_context(|| format!("event {i} missing name"))?
-                    .as_str()?;
-                match ph {
-                    "X" => {
-                        e.get("ts")
-                            .with_context(|| format!("event {i} missing ts"))?
-                            .as_f64()?;
-                        e.get("dur")
-                            .with_context(|| format!("event {i} missing dur"))?
-                            .as_f64()?;
-                        spans += 1;
-                    }
-                    "M" => {}
-                    other => deltanet::bail!(
-                        "event {i} has unexpected phase {other:?}"),
-                }
+            // dispatch on the document shape: span trace, flight dump,
+            // or metrics snapshot
+            if j.get("traceEvents").is_some() {
+                check_trace(&j, path)?;
+            } else if j.get("schema").and_then(|s| s.as_str().ok())
+                == Some(deltanet::obs::flight::SCHEMA)
+            {
+                check_flight(&j, path)?;
+            } else if j.get("counters").is_some()
+                && j.get("histograms").is_some()
+            {
+                check_metrics_snapshot(&j, path)?;
+            } else {
+                deltanet::bail!(
+                    "{path}: unrecognized document — expected traceEvents \
+                     (span trace), schema {:?} (flight dump), or \
+                     counters/gauges/histograms (metrics snapshot)",
+                    deltanet::obs::flight::SCHEMA);
             }
-            deltanet::ensure!(spans > 0,
-                              "{path} contains no span events — the traced \
-                               run recorded nothing");
-            println!("{path}: OK ({spans} spans, {} events)", events.len());
+        }
+        "bench-diff" => {
+            use deltanet::obs::regress;
+            let current = args.positional.get(1).context(
+                "usage: deltanet bench-diff CURRENT.json [--baseline PATH] \
+                 [--threshold X] [--json OUT] [--warn-only]")?;
+            let cur_path = std::path::Path::new(current);
+            let cur = regress::load_report(cur_path)?;
+            let base_path = match args.get("baseline") {
+                Some(p) => PathBuf::from(p),
+                None => regress::default_baseline_path(cur_path)?,
+            };
+            if !base_path.exists() {
+                // bootstrap-friendly: a missing baseline is advice to
+                // commit one, not a failure
+                println!("bench-diff: no baseline at {} — commit the \
+                          current report there to start gating",
+                         base_path.display());
+                return Ok(());
+            }
+            let base = regress::load_report(&base_path)?;
+            let threshold = match args.get("threshold") {
+                Some(t) => Some(t.parse::<f64>()
+                    .context("bad --threshold value")?),
+                None => None,
+            };
+            let d = regress::diff(&cur, &base, threshold);
+            print!("{}", d.render_text());
+            if let Some(out) = args.get("json") {
+                std::fs::write(out, d.to_json().render() + "\n")?;
+                println!("machine report: {out}");
+            }
+            let n = d.regressions();
+            if n > 0 {
+                if args.has("warn-only") {
+                    println!("bench-diff: {n} regression(s) vs {} \
+                              (warn-only)", base_path.display());
+                } else {
+                    deltanet::bail!("bench-diff: {n} regression(s) vs {}",
+                                    base_path.display());
+                }
+            } else {
+                println!("bench-diff: no regressions vs {}",
+                         base_path.display());
+            }
         }
         "inspect" => match args.get("artifact") {
             Some(name) => {
@@ -292,5 +345,136 @@ fn main() -> deltanet::Result<()> {
         println!("trace written to {} (open at https://ui.perfetto.dev)",
                  path.display());
     }
+    Ok(())
+}
+
+// ---------------------------------------------------- trace-check validators
+
+use deltanet::util::json::Json;
+
+/// Chrome trace-event document (DELTANET_TRACE output).
+fn check_trace(j: &Json, path: &str) -> deltanet::Result<()> {
+    let events = j.get("traceEvents")
+        .context("missing traceEvents key")?
+        .as_arr()?;
+    let mut spans = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.get("ph")
+            .with_context(|| format!("event {i} missing ph"))?
+            .as_str()?;
+        e.get("name")
+            .with_context(|| format!("event {i} missing name"))?
+            .as_str()?;
+        match ph {
+            "X" => {
+                e.get("ts")
+                    .with_context(|| format!("event {i} missing ts"))?
+                    .as_f64()?;
+                e.get("dur")
+                    .with_context(|| format!("event {i} missing dur"))?
+                    .as_f64()?;
+                spans += 1;
+            }
+            "M" => {}
+            other => deltanet::bail!("event {i} has unexpected phase {other:?}"),
+        }
+    }
+    deltanet::ensure!(spans > 0,
+                      "{path} contains no span events — the traced \
+                       run recorded nothing");
+    println!("{path}: OK trace ({spans} spans, {} events)", events.len());
+    Ok(())
+}
+
+/// Flight-recorder dump (FLIGHT_*.json or the /flight.json payload):
+/// strictly increasing seq, non-decreasing timestamps, known kinds,
+/// numeric-or-null field values, metrics snapshot attached.
+fn check_flight(j: &Json, path: &str) -> deltanet::Result<()> {
+    const KINDS: [&str; 7] = ["span_open", "span_close", "step", "counter",
+                              "health", "panic", "mark"];
+    j.get("run").context("flight dump missing run id")?.as_str()?;
+    let events = j.get("events")
+        .context("flight dump missing events array")?
+        .as_arr()?;
+    let mut last_seq = 0u64;
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, e) in events.iter().enumerate() {
+        let seq = e.get("seq")
+            .with_context(|| format!("event {i} missing seq"))?
+            .as_u64()?;
+        deltanet::ensure!(seq > last_seq,
+                          "event {i}: seq {seq} not strictly increasing \
+                           (previous {last_seq})");
+        last_seq = seq;
+        let ts = e.get("ts_us")
+            .with_context(|| format!("event {i} missing ts_us"))?
+            .as_f64()?;
+        // ring slots are snapshotted, not fenced against each other, so
+        // allow a small clock skew between adjacent writers
+        deltanet::ensure!(ts >= last_ts - 1e4,
+                          "event {i}: ts_us {ts} ran backwards vs {last_ts}");
+        last_ts = last_ts.max(ts);
+        let kind = e.get("kind")
+            .with_context(|| format!("event {i} missing kind"))?
+            .as_str()?;
+        deltanet::ensure!(KINDS.contains(&kind),
+                          "event {i}: unknown kind {kind:?}");
+        e.get("name")
+            .with_context(|| format!("event {i} missing name"))?
+            .as_str()?;
+        match e.get("fields") {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    deltanet::ensure!(
+                        matches!(v, Json::Num(_) | Json::Null),
+                        "event {i}: field {k:?} is not numeric or null");
+                }
+            }
+            _ => deltanet::bail!("event {i} missing fields object"),
+        }
+    }
+    let metrics = j.get("metrics")
+        .context("flight dump missing metrics snapshot")?;
+    check_metrics_snapshot(metrics, "(embedded metrics)")?;
+    println!("{path}: OK flight dump ({} events, last seq {last_seq})",
+             events.len());
+    Ok(())
+}
+
+/// Metrics snapshot (/metrics.json or the flight dump's `metrics` key):
+/// numeric counters/gauges, histogram quantiles ordered p50 ≤ p95 ≤ p99.
+fn check_metrics_snapshot(j: &Json, path: &str) -> deltanet::Result<()> {
+    for section in ["counters", "gauges"] {
+        match j.get(section) {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    v.as_f64().with_context(
+                        || format!("{section}.{k} is not a number"))?;
+                }
+            }
+            _ => deltanet::bail!("metrics snapshot missing {section} object"),
+        }
+    }
+    let hists = match j.get("histograms") {
+        Some(Json::Obj(m)) => m,
+        _ => deltanet::bail!("metrics snapshot missing histograms object"),
+    };
+    for (name, h) in hists {
+        let f = |key: &str| -> deltanet::Result<f64> {
+            h.get(key)
+                .with_context(|| format!("histogram {name} missing {key}"))?
+                .as_f64()
+        };
+        f("count")?;
+        f("mean_ms")?;
+        let (p50, p95, p99) = (f("p50_ms")?, f("p95_ms")?, f("p99_ms")?);
+        let max = f("max_ms")?;
+        deltanet::ensure!(p50 <= p95 && p95 <= p99 && p99 <= max + 1e-9,
+                          "histogram {name}: quantiles out of order \
+                           (p50 {p50}, p95 {p95}, p99 {p99}, max {max})");
+    }
+    println!("{path}: OK metrics snapshot ({} counters, {} histograms)",
+             match j.get("counters") { Some(Json::Obj(m)) => m.len(), _ => 0 },
+             hists.len());
     Ok(())
 }

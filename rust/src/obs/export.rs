@@ -4,9 +4,14 @@
 //!
 //! * `GET /metrics` — one metric per line (text)
 //! * `GET /metrics.json` — the JSON snapshot
+//! * `GET /healthz` — `200 ok` while training health is not failing,
+//!   `503` once the [`super::health`] status gauge reports failure
+//! * `GET /flight.json` — the live flight-recorder ring + metrics
 //!
-//! The listener polls non-blocking accepts on a named thread so shutdown
-//! (drop or [`MetricsServer::shutdown`]) never hangs on a blocked accept.
+//! Unknown paths get `404`; non-GET methods get `405` with an `Allow`
+//! header.  The listener polls non-blocking accepts on a named thread so
+//! shutdown (drop or [`MetricsServer::shutdown`]) never hangs on a
+//! blocked accept.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -14,7 +19,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::metrics;
+use super::{flight, health, metrics};
 
 const POLL: Duration = Duration::from_millis(25);
 
@@ -83,31 +88,50 @@ fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
     let mut buf = [0u8; 1024];
     let n = stream.read(&mut buf)?;
     let req = String::from_utf8_lossy(&buf[..n]);
-    let path = req
-        .lines()
-        .next()
-        .and_then(|line| line.split_whitespace().nth(1))
-        .unwrap_or("/");
+    let mut first = req.lines().next().unwrap_or("").split_whitespace();
+    let method = first.next().unwrap_or("");
+    let path = first.next().unwrap_or("/");
 
-    let (status, ctype, body) = match path {
-        "/metrics" | "/" => (
-            "200 OK",
-            "text/plain; charset=utf-8",
-            metrics::snapshot().render_text(),
-        ),
-        "/metrics.json" => (
-            "200 OK",
-            "application/json",
-            metrics::snapshot().to_json().render() + "\n",
-        ),
-        _ => ("404 Not Found", "text/plain; charset=utf-8",
-              "not found\n".to_string()),
-    };
+    let (status, ctype, body, allow) = route(method, path);
     write!(
         stream,
         "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
+         Content-Length: {}\r\n{}Connection: close\r\n\r\n{body}",
+        body.len(),
+        if allow { "Allow: GET\r\n" } else { "" },
     )?;
     stream.flush()
+}
+
+const TEXT: &str = "text/plain; charset=utf-8";
+const JSON: &str = "application/json";
+
+fn route(method: &str, path: &str)
+         -> (&'static str, &'static str, String, bool) {
+    if method != "GET" {
+        return ("405 Method Not Allowed", TEXT,
+                "method not allowed\n".to_string(), true);
+    }
+    match path {
+        "/metrics" | "/" => {
+            ("200 OK", TEXT, metrics::snapshot().render_text(), false)
+        }
+        "/metrics.json" => {
+            ("200 OK", JSON,
+             metrics::snapshot().to_json().render() + "\n", false)
+        }
+        "/healthz" => {
+            if health::global_status() >= health::STATUS_FAILING {
+                ("503 Service Unavailable", TEXT,
+                 "failing\n".to_string(), false)
+            } else {
+                ("200 OK", TEXT, "ok\n".to_string(), false)
+            }
+        }
+        "/flight.json" => {
+            ("200 OK", JSON, flight::snapshot_json().render() + "\n",
+             false)
+        }
+        _ => ("404 Not Found", TEXT, "not found\n".to_string(), false),
+    }
 }

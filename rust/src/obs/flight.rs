@@ -1,0 +1,527 @@
+//! Always-on flight recorder: a lock-free ring buffer of the last N
+//! structured events (train steps, span open/close, counter snapshots,
+//! health verdicts, panics), dumped to `FLIGHT_<run>.json` together with a
+//! full metrics snapshot whenever the process panics — including a panic
+//! inside a pool worker that the pool itself catches and survives.
+//!
+//! Unlike [`super::trace`] (opt-in, unbounded buffers, written at clean
+//! exit), the recorder is meant to be **on for every run** and to survive
+//! crashes: recording an event is a handful of relaxed atomic stores into
+//! a fixed ring (no locks, no allocation after the name is interned), and
+//! the dump path is wired into a process-wide panic hook installed by
+//! [`install_panic_hook`] / [`init_from_env`].
+//!
+//! Each slot is a seqlock: the writer claims a sequence number with one
+//! `fetch_add`, takes exclusive ownership of the destination slot with a
+//! single CAS to a `BUSY` marker (writers only ever contend on the same
+//! slot when one lags a full ring behind, so the claim virtually never
+//! spins), writes the fields, then publishes the real sequence number
+//! with `Release`.  Readers ([`snapshot_events`]) read `seq` before and
+//! after the fields and discard the slot when the two reads disagree or
+//! the slot is mid-write, so a reader racing a wrapping writer sees
+//! either the old event or nothing — never a torn one.  Everything in a
+//! slot is an atomic integer (names and field keys are interned to `u32`
+//! ids), so there is no `unsafe` and no UB-prone shared mutable state.
+//!
+//! Env knobs (read once, at first use / [`init_from_env`]):
+//!
+//! * `DELTANET_FLIGHT=off`        — disable recording and the panic hook
+//! * `DELTANET_FLIGHT_EVENTS=N`   — ring capacity (default 1024)
+//! * `DELTANET_FLIGHT_DIR=DIR`    — where `FLIGHT_<run>.json` lands (".")
+//! * `DELTANET_RUN_ID=NAME`       — run id (defaults to the process id)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::metrics;
+
+/// Default ring capacity (events kept for the post-mortem).
+pub const DEFAULT_CAPACITY: usize = 1024;
+/// Numeric fields carried per event (excess fields are dropped).
+pub const MAX_FIELDS: usize = 4;
+
+const NO_NAME: u32 = u32::MAX;
+
+/// Slot `seq` marker for "a writer owns this slot right now" (0 = empty).
+const BUSY: u64 = u64::MAX;
+
+/// What kind of thing an event records (stable names in the JSON dump).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A trace span opened (recorded only while tracing is enabled).
+    SpanOpen,
+    /// A trace span closed (dur_ms field).
+    SpanClose,
+    /// One training step (step / loss / grad_norm / ms fields).
+    Step,
+    /// Point-in-time values of selected metrics counters.
+    Counter,
+    /// A training-health verdict (see [`super::health`]).
+    Health,
+    /// A panic observed by the process-wide hook or a pool worker.
+    Panic,
+    /// Free-form marker (run phase boundaries etc.).
+    Mark,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::SpanOpen => "span_open",
+            EventKind::SpanClose => "span_close",
+            EventKind::Step => "step",
+            EventKind::Counter => "counter",
+            EventKind::Health => "health",
+            EventKind::Panic => "panic",
+            EventKind::Mark => "mark",
+        }
+    }
+
+    fn from_u32(v: u32) -> EventKind {
+        match v {
+            0 => EventKind::SpanOpen,
+            1 => EventKind::SpanClose,
+            2 => EventKind::Step,
+            3 => EventKind::Counter,
+            4 => EventKind::Health,
+            5 => EventKind::Panic,
+            _ => EventKind::Mark,
+        }
+    }
+
+    fn to_u32(self) -> u32 {
+        match self {
+            EventKind::SpanOpen => 0,
+            EventKind::SpanClose => 1,
+            EventKind::Step => 2,
+            EventKind::Counter => 3,
+            EventKind::Health => 4,
+            EventKind::Panic => 5,
+            EventKind::Mark => 6,
+        }
+    }
+}
+
+/// One decoded event, as returned by [`snapshot_events`].
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    /// Global sequence number (1-based, strictly increasing).
+    pub seq: u64,
+    /// Microseconds since the recorder epoch.
+    pub ts_us: f64,
+    pub kind: EventKind,
+    pub name: String,
+    pub fields: Vec<(String, f64)>,
+}
+
+/// Seqlock slot: `seq == 0` means empty, [`BUSY`] means mid-write.
+struct Slot {
+    seq: AtomicU64,
+    ts_us: AtomicU64, // f64 bits
+    kind: AtomicU32,
+    name: AtomicU32,
+    n_fields: AtomicU32,
+    keys: [AtomicU32; MAX_FIELDS],
+    vals: [AtomicU64; MAX_FIELDS], // f64 bits
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts_us: AtomicU64::new(0),
+            kind: AtomicU32::new(0),
+            name: AtomicU32::new(NO_NAME),
+            n_fields: AtomicU32::new(0),
+            keys: std::array::from_fn(|_| AtomicU32::new(NO_NAME)),
+            vals: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+struct Ring {
+    slots: Vec<Slot>,
+    /// Next sequence number to hand out (seq ids start at 1).
+    head: AtomicU64,
+    epoch: Instant,
+}
+
+fn ring() -> &'static Ring {
+    static R: OnceLock<Ring> = OnceLock::new();
+    R.get_or_init(|| {
+        let cap = std::env::var("DELTANET_FLIGHT_EVENTS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_CAPACITY);
+        Ring {
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+            head: AtomicU64::new(1),
+            epoch: Instant::now(),
+        }
+    })
+}
+
+/// Interned event/field names: id ↔ string, append-only.
+#[derive(Default)]
+struct Names {
+    by_name: BTreeMap<String, u32>,
+    by_id: Vec<String>,
+}
+
+fn names() -> &'static RwLock<Names> {
+    static N: OnceLock<RwLock<Names>> = OnceLock::new();
+    N.get_or_init(|| RwLock::new(Names::default()))
+}
+
+fn intern(name: &str) -> u32 {
+    if let Some(&id) = names().read().unwrap().by_name.get(name) {
+        return id;
+    }
+    let mut w = names().write().unwrap();
+    if let Some(&id) = w.by_name.get(name) {
+        return id;
+    }
+    let id = w.by_id.len() as u32;
+    w.by_id.push(name.to_string());
+    w.by_name.insert(name.to_string(), id);
+    id
+}
+
+fn resolve(id: u32) -> String {
+    names()
+        .read()
+        .unwrap()
+        .by_id
+        .get(id as usize)
+        .cloned()
+        .unwrap_or_else(|| format!("name#{id}"))
+}
+
+static DISABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn recording off/on at runtime (also settable via
+/// `DELTANET_FLIGHT=off` through [`init_from_env`]).
+pub fn set_enabled(on: bool) {
+    DISABLED.store(!on, Ordering::SeqCst);
+}
+
+/// Is the recorder currently accepting events?
+pub fn enabled() -> bool {
+    !DISABLED.load(Ordering::Relaxed)
+}
+
+/// Record one event.  Lock-free: one `fetch_add` to claim a slot plus a
+/// fixed number of relaxed stores; at most [`MAX_FIELDS`] fields are kept.
+pub fn record(kind: EventKind, name: &str, fields: &[(&str, f64)]) {
+    if DISABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let r = ring();
+    let ts = r.epoch.elapsed().as_secs_f64() * 1e6;
+    let name_id = intern(name);
+    let seq = r.head.fetch_add(1, Ordering::Relaxed);
+    let slot = &r.slots[(seq % r.slots.len() as u64) as usize];
+    // Claim the slot exclusively (two writers only meet here when one
+    // lags a full ring behind the other, so this effectively never
+    // spins).  Without the claim, interleaved writers could each see a
+    // "stable" seq while the fields mix values from both events.
+    loop {
+        let cur = slot.seq.load(Ordering::Relaxed);
+        if cur == BUSY {
+            std::hint::spin_loop();
+            continue;
+        }
+        if slot
+            .seq
+            .compare_exchange_weak(cur, BUSY, Ordering::Acquire,
+                                   Ordering::Relaxed)
+            .is_ok()
+        {
+            break;
+        }
+    }
+    slot.ts_us.store(ts.to_bits(), Ordering::Relaxed);
+    slot.kind.store(kind.to_u32(), Ordering::Relaxed);
+    slot.name.store(name_id, Ordering::Relaxed);
+    let n = fields.len().min(MAX_FIELDS);
+    slot.n_fields.store(n as u32, Ordering::Relaxed);
+    for (i, (k, v)) in fields.iter().take(MAX_FIELDS).enumerate() {
+        slot.keys[i].store(intern(k), Ordering::Relaxed);
+        slot.vals[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+    slot.seq.store(seq, Ordering::Release);
+}
+
+/// Record a [`EventKind::Counter`] event holding the current values of up
+/// to [`MAX_FIELDS`] interned metrics counters.
+pub fn record_counters(counter_names: &[&'static str]) {
+    if DISABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let fields: Vec<(&str, f64)> = counter_names
+        .iter()
+        .take(MAX_FIELDS)
+        .map(|&n| (n, metrics::counter(n).get() as f64))
+        .collect();
+    record(EventKind::Counter, "metrics.counters", &fields);
+}
+
+/// Consistent copy of every live ring event, ordered by sequence number.
+/// Slots a concurrent writer is mid-way through are skipped, not torn.
+pub fn snapshot_events() -> Vec<FlightEvent> {
+    let r = ring();
+    let mut out: Vec<FlightEvent> = Vec::with_capacity(r.slots.len());
+    for slot in &r.slots {
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq == 0 || seq == BUSY {
+            continue;
+        }
+        let ts_us = f64::from_bits(slot.ts_us.load(Ordering::Relaxed));
+        let kind = EventKind::from_u32(slot.kind.load(Ordering::Relaxed));
+        let name_id = slot.name.load(Ordering::Relaxed);
+        let n = slot.n_fields.load(Ordering::Relaxed) as usize;
+        let mut fields = Vec::with_capacity(n.min(MAX_FIELDS));
+        for i in 0..n.min(MAX_FIELDS) {
+            fields.push((
+                resolve(slot.keys[i].load(Ordering::Relaxed)),
+                f64::from_bits(slot.vals[i].load(Ordering::Relaxed)),
+            ));
+        }
+        // seqlock read validation: discard the slot if a writer raced us
+        if slot.seq.load(Ordering::Acquire) != seq {
+            continue;
+        }
+        out.push(FlightEvent {
+            seq,
+            ts_us,
+            kind,
+            name: resolve(name_id),
+            fields,
+        });
+    }
+    out.sort_by_key(|e| e.seq);
+    out
+}
+
+// ------------------------------------------------------------ dump plumbing
+
+struct DumpConfig {
+    run_id: String,
+    dir: PathBuf,
+}
+
+fn dump_config() -> &'static Mutex<DumpConfig> {
+    static C: OnceLock<Mutex<DumpConfig>> = OnceLock::new();
+    C.get_or_init(|| {
+        Mutex::new(DumpConfig {
+            run_id: std::env::var("DELTANET_RUN_ID")
+                .unwrap_or_else(|_| std::process::id().to_string()),
+            dir: std::env::var_os("DELTANET_FLIGHT_DIR")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from(".")),
+        })
+    })
+}
+
+/// Override the run id used in the dump filename (`FLIGHT_<run>.json`).
+pub fn set_run_id(run: &str) {
+    dump_config().lock().unwrap().run_id = run.to_string();
+}
+
+/// Override the directory the panic dump is written into.
+pub fn set_dump_dir(dir: &Path) {
+    dump_config().lock().unwrap().dir = dir.to_path_buf();
+}
+
+/// Where [`dump`] (and the panic hook) will write.
+pub fn dump_path() -> PathBuf {
+    let c = dump_config().lock().unwrap();
+    c.dir.join(format!("FLIGHT_{}.json", c.run_id))
+}
+
+/// The full recorder state as JSON: schema tag, run id, the event ring,
+/// and a point-in-time metrics snapshot (the `/flight.json` payload).
+pub fn snapshot_json() -> Json {
+    // non-finite field values (a NaN loss in a health event) must not
+    // produce invalid JSON — they become null
+    let num = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+    let events = snapshot_events()
+        .into_iter()
+        .map(|e| {
+            let fields = e
+                .fields
+                .iter()
+                .map(|(k, v)| (k.as_str(), num(*v)))
+                .collect::<Vec<_>>();
+            Json::obj(vec![
+                ("seq", Json::num(e.seq as f64)),
+                ("ts_us", Json::num(e.ts_us)),
+                ("kind", Json::str(e.kind.name())),
+                ("name", Json::str(e.name)),
+                ("fields", Json::obj(fields)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    let run_id = dump_config().lock().unwrap().run_id.clone();
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("run", Json::str(run_id)),
+        ("events", Json::Arr(events)),
+        ("metrics", metrics::snapshot().to_json()),
+    ])
+}
+
+/// Schema tag written into every dump (checked by `deltanet trace-check`).
+pub const SCHEMA: &str = "deltanet.flight.v1";
+
+/// Write the recorder state to [`dump_path`] and return it.
+pub fn dump() -> crate::Result<PathBuf> {
+    let path = dump_path();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, snapshot_json().render() + "\n")?;
+    Ok(path)
+}
+
+static HOOK_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Install the process-wide panic hook (idempotent).  The hook records a
+/// [`EventKind::Panic`] event and dumps `FLIGHT_<run>.json`, then chains
+/// to the previously installed hook — so a panic a pool worker catches
+/// still leaves a post-mortem artifact on disk before the pool recovers.
+pub fn install_panic_hook() {
+    if HOOK_INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        if enabled() {
+            let name = info
+                .location()
+                .map(|l| format!("panic@{}:{}", l.file(), l.line()))
+                .unwrap_or_else(|| "panic".to_string());
+            record(EventKind::Panic, &name, &[]);
+            // best effort: a failing dump must not double-panic the hook
+            let _ = dump();
+        }
+        prev(info);
+    }));
+}
+
+/// Configure the recorder from the environment and arm the panic hook:
+/// the standard one-call setup used by `main` and the benches.  Returns
+/// the dump path the hook will use, or `None` when `DELTANET_FLIGHT=off`.
+pub fn init_from_env() -> Option<PathBuf> {
+    if std::env::var("DELTANET_FLIGHT").ok().as_deref() == Some("off") {
+        set_enabled(false);
+        return None;
+    }
+    let _ = dump_config(); // pick up env run id / dir
+    install_panic_hook();
+    Some(dump_path())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        let before = snapshot_events().len();
+        record(EventKind::Mark, "test.flight.mark",
+               &[("a", 1.0), ("b", 2.5)]);
+        record(EventKind::Step, "test.flight.step",
+               &[("step", 3.0), ("loss", 0.25)]);
+        let evs = snapshot_events();
+        assert!(evs.len() >= before + 2);
+        // strictly increasing sequence numbers
+        for w in evs.windows(2) {
+            assert!(w[1].seq > w[0].seq, "seq not increasing");
+        }
+        let step = evs.iter().rev()
+            .find(|e| e.name == "test.flight.step")
+            .expect("step event present");
+        assert_eq!(step.kind, EventKind::Step);
+        assert_eq!(step.fields[0], ("step".to_string(), 3.0));
+        assert_eq!(step.fields[1], ("loss".to_string(), 0.25));
+    }
+
+    #[test]
+    fn ring_keeps_only_the_newest_events() {
+        let cap = ring().slots.len();
+        for i in 0..(cap + 64) {
+            record(EventKind::Mark, "test.flight.flood", &[("i", i as f64)]);
+        }
+        let evs = snapshot_events();
+        assert!(evs.len() <= cap);
+        // the newest flood event must have survived
+        let max_i = evs.iter()
+            .filter(|e| e.name == "test.flight.flood")
+            .filter_map(|e| e.fields.first().map(|f| f.1))
+            .fold(f64::MIN, f64::max);
+        assert_eq!(max_i, (cap + 63) as f64);
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_events() {
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..2000 {
+                        let v = (t * 10_000 + i) as f64;
+                        record(EventKind::Mark, "test.flight.race",
+                               &[("x", v), ("y", v), ("z", v)]);
+                    }
+                })
+            })
+            .collect();
+        // read concurrently with the writers
+        for _ in 0..50 {
+            for e in snapshot_events() {
+                if e.name == "test.flight.race" {
+                    // all three fields written atomically per event: a torn
+                    // slot would mix values from different events
+                    assert_eq!(e.fields[0].1, e.fields[1].1);
+                    assert_eq!(e.fields[1].1, e.fields[2].1);
+                }
+            }
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn snapshot_json_has_schema_events_and_metrics() {
+        record(EventKind::Mark, "test.flight.json", &[]);
+        let j = snapshot_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert!(!j.get("events").unwrap().as_arr().unwrap().is_empty());
+        assert!(j.get("metrics").unwrap().get("counters").is_some());
+        // render → parse stability (the dump is machine-readable)
+        let re = Json::parse(&j.render()).unwrap();
+        assert_eq!(re.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+    }
+
+    #[test]
+    fn counter_snapshot_event_carries_metric_values() {
+        metrics::counter("test.flight.counter").add(7);
+        record_counters(&["test.flight.counter"]);
+        let evs = snapshot_events();
+        let ev = evs.iter().rev()
+            .find(|e| e.kind == EventKind::Counter)
+            .expect("counter event");
+        let (k, v) = &ev.fields[0];
+        assert_eq!(k, "test.flight.counter");
+        assert!(*v >= 7.0);
+    }
+}

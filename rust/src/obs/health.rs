@@ -1,0 +1,451 @@
+//! Training health monitor: rolling loss/grad-norm statistics feeding
+//! NaN/Inf, spike, and plateau detectors with a configurable policy.
+//!
+//! A [`HealthMonitor`] lives inside the training engines
+//! (`HostKernelBackend::train_step_detailed`, `Trainer::train_step`) and
+//! sees every `(loss, grad_norm)` pair *before* the optimizer applies the
+//! update, so the policy can actually intervene:
+//!
+//! * [`HealthPolicy::Warn`]     — log + count the issue, keep training,
+//! * [`HealthPolicy::SkipStep`] — drop this step's optimizer update,
+//! * [`HealthPolicy::Abort`]    — error out of the run (the default: this
+//!   preserves the old behaviour of bailing on a non-finite loss, but now
+//!   with rolling context and a flight-recorder trail).
+//!
+//! Detectors:
+//!
+//! * **non-finite** — loss or grad norm is NaN/Inf;
+//! * **spike** — loss exceeds the rolling window's `mean + k·std` (only
+//!   once the window holds enough samples to trust the statistics);
+//! * **plateau** — no new best loss for `plateau_window` steps.  A plateau
+//!   is always a warning regardless of policy: skipping or aborting a step
+//!   cannot un-plateau a run, so escalation is left to the operator.
+//!
+//! Every verdict feeds the `train.health.*` metrics and (non-OK) flight
+//! events, and the worst level seen so far is exported through the
+//! `train.health.status` gauge consumed by the `/healthz` endpoint.
+//!
+//! Env knobs (see [`HealthConfig::from_env`]):
+//! `DELTANET_HEALTH=warn|skip|abort`, `DELTANET_HEALTH_WINDOW=N`,
+//! `DELTANET_HEALTH_SPIKE=K`, `DELTANET_HEALTH_PLATEAU=N` (0 disables).
+
+use std::collections::VecDeque;
+
+use super::{flight, metrics};
+
+/// What to do when a detector fires on a training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthPolicy {
+    /// Count + log, keep the step.
+    Warn,
+    /// Drop the optimizer update for the offending step, keep training.
+    SkipStep,
+    /// Fail the run (matches the pre-monitor `bail!` on non-finite loss).
+    #[default]
+    Abort,
+}
+
+impl HealthPolicy {
+    pub fn parse(s: &str) -> Option<HealthPolicy> {
+        match s {
+            "warn" => Some(HealthPolicy::Warn),
+            "skip" | "skip_step" => Some(HealthPolicy::SkipStep),
+            "abort" => Some(HealthPolicy::Abort),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthPolicy::Warn => "warn",
+            HealthPolicy::SkipStep => "skip_step",
+            HealthPolicy::Abort => "abort",
+        }
+    }
+}
+
+/// Detector thresholds + policy.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    pub policy: HealthPolicy,
+    /// Rolling window length for the spike statistics.
+    pub window: usize,
+    /// Minimum window samples before the spike detector arms.
+    pub spike_min_samples: usize,
+    /// Spike when `loss > mean + spike_factor * std` over the window.
+    pub spike_factor: f64,
+    /// Warn when no new best loss for this many steps (0 disables).
+    pub plateau_window: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            policy: HealthPolicy::Abort,
+            window: 32,
+            spike_min_samples: 8,
+            spike_factor: 6.0,
+            plateau_window: 0,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Defaults overridden by `DELTANET_HEALTH*` environment variables.
+    pub fn from_env() -> Self {
+        let mut cfg = HealthConfig::default();
+        if let Ok(p) = std::env::var("DELTANET_HEALTH") {
+            if let Some(policy) = HealthPolicy::parse(&p) {
+                cfg.policy = policy;
+            }
+        }
+        let parse = |key: &str| {
+            std::env::var(key).ok().and_then(|v| v.parse::<f64>().ok())
+        };
+        if let Some(w) = parse("DELTANET_HEALTH_WINDOW") {
+            cfg.window = (w as usize).max(2);
+        }
+        if let Some(k) = parse("DELTANET_HEALTH_SPIKE") {
+            cfg.spike_factor = k.max(0.0);
+        }
+        if let Some(p) = parse("DELTANET_HEALTH_PLATEAU") {
+            cfg.plateau_window = p as usize;
+        }
+        cfg
+    }
+}
+
+/// Why a verdict was issued.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HealthIssue {
+    NonFiniteLoss,
+    NonFiniteGrad,
+    LossSpike { loss: f64, mean: f64, std: f64 },
+    Plateau { best: f64, stale_steps: usize },
+}
+
+impl std::fmt::Display for HealthIssue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HealthIssue::NonFiniteLoss => write!(f, "non-finite loss"),
+            HealthIssue::NonFiniteGrad => write!(f, "non-finite grad norm"),
+            HealthIssue::LossSpike { loss, mean, std } => write!(
+                f, "loss spike: {loss:.4} vs window mean {mean:.4} \
+                    (std {std:.4})"),
+            HealthIssue::Plateau { best, stale_steps } => write!(
+                f, "plateau: no improvement on best loss {best:.4} \
+                    for {stale_steps} steps"),
+        }
+    }
+}
+
+/// The monitor's decision for one step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    Ok,
+    Warn(HealthIssue),
+    /// Drop the optimizer update for this step.
+    Skip(HealthIssue),
+    /// Fail the run.
+    Abort(HealthIssue),
+}
+
+impl Verdict {
+    pub fn issue(&self) -> Option<&HealthIssue> {
+        match self {
+            Verdict::Ok => None,
+            Verdict::Warn(i) | Verdict::Skip(i) | Verdict::Abort(i) => {
+                Some(i)
+            }
+        }
+    }
+}
+
+/// `train.health.status` gauge levels (also the `/healthz` contract):
+/// 0 = healthy, 1 = warned/skipped at least once, 2 = aborted.
+pub const STATUS_OK: i64 = 0;
+pub const STATUS_WARN: i64 = 1;
+pub const STATUS_FAILING: i64 = 2;
+
+fn raise_status(level: i64) {
+    let g = metrics::gauge("train.health.status");
+    if g.get() < level {
+        g.set(level);
+    }
+}
+
+/// Current process-wide health level (worst seen by any monitor).
+pub fn global_status() -> i64 {
+    metrics::gauge("train.health.status").get()
+}
+
+/// Rolling-statistics monitor; one per training engine.
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    window: VecDeque<f64>,
+    steps_seen: usize,
+    best_loss: f64,
+    best_step: usize,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> Self {
+        HealthMonitor {
+            cfg,
+            window: VecDeque::new(),
+            steps_seen: 0,
+            best_loss: f64::INFINITY,
+            best_step: 0,
+        }
+    }
+
+    /// Monitor configured from `DELTANET_HEALTH*` env vars.
+    pub fn from_env() -> Self {
+        Self::new(HealthConfig::from_env())
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    pub fn steps_seen(&self) -> usize {
+        self.steps_seen
+    }
+
+    fn window_stats(&self) -> Option<(f64, f64)> {
+        if self.window.len() < self.cfg.spike_min_samples.max(2) {
+            return None;
+        }
+        let n = self.window.len() as f64;
+        let mean = self.window.iter().sum::<f64>() / n;
+        let var = self.window.iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>() / n;
+        Some((mean, var.sqrt()))
+    }
+
+    /// Classify one step, update the rolling state, emit metrics + flight
+    /// events, and return the policy's verdict.
+    pub fn observe(&mut self, loss: f32, grad_norm: Option<f32>)
+                   -> Verdict {
+        self.steps_seen += 1;
+        let step = self.steps_seen;
+
+        let issue = self.detect(loss as f64, grad_norm.map(|g| g as f64));
+        let verdict = match issue {
+            None => Verdict::Ok,
+            Some(HealthIssue::Plateau { .. }) => {
+                // never skip/abort on a plateau (see module docs)
+                Verdict::Warn(issue.unwrap())
+            }
+            Some(i) => match self.cfg.policy {
+                HealthPolicy::Warn => Verdict::Warn(i),
+                HealthPolicy::SkipStep => Verdict::Skip(i),
+                HealthPolicy::Abort => Verdict::Abort(i),
+            },
+        };
+        self.account(step, loss as f64, &verdict);
+        verdict
+    }
+
+    fn detect(&mut self, loss: f64, grad_norm: Option<f64>)
+              -> Option<HealthIssue> {
+        if !loss.is_finite() {
+            return Some(HealthIssue::NonFiniteLoss);
+        }
+        if let Some(g) = grad_norm {
+            if !g.is_finite() {
+                return Some(HealthIssue::NonFiniteGrad);
+            }
+        }
+        if self.cfg.spike_factor > 0.0 {
+            if let Some((mean, std)) = self.window_stats() {
+                // floor the deviation so a flat window (std≈0) does not
+                // flag ordinary batch-to-batch noise as a spike
+                let dev = std.max(mean.abs() * 0.01).max(1e-6);
+                if loss > mean + self.cfg.spike_factor * dev {
+                    return Some(HealthIssue::LossSpike { loss, mean, std });
+                }
+            }
+        }
+        if self.cfg.plateau_window > 0
+            && self.steps_seen - self.best_step >= self.cfg.plateau_window
+            && self.best_loss.is_finite()
+        {
+            return Some(HealthIssue::Plateau {
+                best: self.best_loss,
+                stale_steps: self.steps_seen - self.best_step,
+            });
+        }
+        None
+    }
+
+    fn account(&mut self, step: usize, loss: f64, verdict: &Verdict) {
+        // rolling state: finite losses only, spikes included (a genuine
+        // level shift must eventually stop counting as a spike)
+        if loss.is_finite() {
+            self.window.push_back(loss);
+            while self.window.len() > self.cfg.window {
+                self.window.pop_front();
+            }
+            if loss < self.best_loss {
+                self.best_loss = loss;
+                self.best_step = step;
+            }
+        }
+        let issue = match verdict.issue() {
+            None => return,
+            Some(i) => i,
+        };
+        let issue_name = match issue {
+            HealthIssue::NonFiniteLoss | HealthIssue::NonFiniteGrad => {
+                metrics::counter("train.health.nonfinite").inc();
+                "nonfinite"
+            }
+            HealthIssue::LossSpike { .. } => {
+                metrics::counter("train.health.spikes").inc();
+                "spike"
+            }
+            HealthIssue::Plateau { .. } => {
+                // re-arm: one warning per stale stretch, not per step
+                self.best_step = step;
+                metrics::counter("train.health.plateaus").inc();
+                "plateau"
+            }
+        };
+        let (level, action) = match verdict {
+            Verdict::Ok => unreachable!("issue implies non-Ok verdict"),
+            Verdict::Warn(_) => (STATUS_WARN, 0.0),
+            Verdict::Skip(_) => {
+                metrics::counter("train.health.skipped_steps").inc();
+                (STATUS_WARN, 1.0)
+            }
+            Verdict::Abort(_) => {
+                metrics::counter("train.health.aborts").inc();
+                (STATUS_FAILING, 2.0)
+            }
+        };
+        raise_status(level);
+        flight::record(
+            flight::EventKind::Health,
+            &format!("health.{issue_name}"),
+            &[("step", step as f64), ("loss", loss), ("action", action)],
+        );
+        eprintln!("[health] step {step}: {issue} -> {}",
+                  match verdict {
+                      Verdict::Warn(_) => "warn",
+                      Verdict::Skip(_) => "skip step",
+                      Verdict::Abort(_) => "abort",
+                      Verdict::Ok => unreachable!(),
+                  });
+    }
+}
+
+impl Default for HealthMonitor {
+    fn default() -> Self {
+        Self::new(HealthConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warn_cfg() -> HealthConfig {
+        HealthConfig { policy: HealthPolicy::Warn, ..Default::default() }
+    }
+
+    #[test]
+    fn finite_steady_losses_are_ok() {
+        let mut m = HealthMonitor::new(warn_cfg());
+        for i in 0..50 {
+            let loss = 2.0 - 0.01 * i as f32;
+            assert_eq!(m.observe(loss, Some(1.0)), Verdict::Ok, "step {i}");
+        }
+        assert_eq!(m.steps_seen(), 50);
+    }
+
+    #[test]
+    fn nonfinite_maps_through_policy() {
+        for (policy, want_skip, want_abort) in [
+            (HealthPolicy::Warn, false, false),
+            (HealthPolicy::SkipStep, true, false),
+            (HealthPolicy::Abort, false, true),
+        ] {
+            let mut m = HealthMonitor::new(HealthConfig {
+                policy, ..Default::default()
+            });
+            let v = m.observe(f32::NAN, Some(1.0));
+            assert_eq!(v.issue(), Some(&HealthIssue::NonFiniteLoss));
+            assert_eq!(matches!(v, Verdict::Skip(_)), want_skip);
+            assert_eq!(matches!(v, Verdict::Abort(_)), want_abort);
+        }
+        // non-finite grad with finite loss is its own issue
+        let mut m = HealthMonitor::new(warn_cfg());
+        let v = m.observe(1.0, Some(f32::INFINITY));
+        assert_eq!(v.issue(), Some(&HealthIssue::NonFiniteGrad));
+    }
+
+    #[test]
+    fn spike_detector_fires_after_window_fills() {
+        let mut m = HealthMonitor::new(warn_cfg());
+        // too few samples: a wild value passes while the detector is unarmed
+        assert_eq!(m.observe(100.0, None), Verdict::Ok);
+        let mut m = HealthMonitor::new(warn_cfg());
+        for i in 0..20 {
+            let loss = 1.0 + 0.01 * (i % 3) as f32; // tight band
+            assert_eq!(m.observe(loss, None), Verdict::Ok);
+        }
+        let v = m.observe(50.0, None);
+        assert!(matches!(v.issue(), Some(HealthIssue::LossSpike { .. })),
+                "expected spike, got {v:?}");
+        // the spike entered the window, so a repeat of the same level
+        // eventually stops flagging (genuine level shifts are absorbed)
+        let mut flagged = 0;
+        for _ in 0..40 {
+            if m.observe(50.0, None) != Verdict::Ok {
+                flagged += 1;
+            }
+        }
+        assert!(flagged < 40, "level shift never absorbed");
+    }
+
+    #[test]
+    fn plateau_warns_once_per_stale_stretch_even_under_abort() {
+        let mut m = HealthMonitor::new(HealthConfig {
+            policy: HealthPolicy::Abort,
+            plateau_window: 10,
+            spike_factor: 0.0,
+            ..Default::default()
+        });
+        assert_eq!(m.observe(1.0, None), Verdict::Ok);
+        let mut warns = 0;
+        for _ in 0..25 {
+            match m.observe(1.0, None) {
+                Verdict::Ok => {}
+                Verdict::Warn(HealthIssue::Plateau { .. }) => warns += 1,
+                other => panic!("plateau must only warn, got {other:?}"),
+            }
+        }
+        // 25 stale steps with a window of 10 → two warnings, not 15
+        assert_eq!(warns, 2);
+    }
+
+    #[test]
+    fn verdicts_feed_health_metrics() {
+        let before = metrics::counter("train.health.nonfinite").get();
+        let mut m = HealthMonitor::new(warn_cfg());
+        m.observe(f32::INFINITY, None);
+        assert!(metrics::counter("train.health.nonfinite").get() > before);
+        assert!(global_status() >= STATUS_WARN);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [HealthPolicy::Warn, HealthPolicy::SkipStep,
+                  HealthPolicy::Abort] {
+            assert_eq!(HealthPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(HealthPolicy::parse("bogus"), None);
+    }
+}

@@ -350,6 +350,52 @@ mod tests {
     }
 
     #[test]
+    fn bucket_edges_cover_every_power_of_two_boundary() {
+        // around each power of two the index must stay monotone, the
+        // bucket's upper edge must never under-report the value, and the
+        // over-estimate must stay within one sub-bucket (2^-SUB_BITS of
+        // the value, i.e. the documented ≤6.25% relative error)
+        for msb in SUB_BITS..64 {
+            let p = 1u64 << msb;
+            for v in [p - 1, p, p + 1, p + p / 2, p.saturating_add(p - 1)] {
+                let i = bucket_index(v);
+                assert!(i < N_BUCKETS, "index {i} out of range at {v}");
+                let upper = bucket_upper_us(i);
+                assert!(upper >= v,
+                        "upper edge {upper} < value {v} (msb {msb})");
+                // upper - v < one sub-bucket width = 2^(msb-SUB_BITS)
+                let width = 1u64 << (v.ilog2().max(SUB_BITS) - SUB_BITS);
+                assert!(upper - v < width,
+                        "over-estimate {} ≥ sub-bucket width {width} at {v}",
+                        upper - v);
+                // adjacent boundary values map to non-decreasing indices
+                assert!(bucket_index(v.saturating_add(1)) >= i);
+            }
+        }
+        // exact region: values below SUB are their own bucket
+        for v in 0..SUB as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_upper_us(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn quantile_over_estimate_is_within_six_point_25_percent() {
+        // p50 lands in the lower value's bucket and reports its upper
+        // edge; the much larger second value keeps max_us from masking
+        // the edge, so this pins the documented ≤6.25% over-estimate
+        for us in [17u64, 31, 100, 1000, 4097, 65_535, 1_000_000] {
+            let h = Histogram::new();
+            h.record_us(us);
+            h.record_us(us * 1000);
+            let got_us = h.quantile_ms(0.50) * 1e3;
+            let rel = (got_us - us as f64) / us as f64;
+            assert!(rel >= -1e-6, "quantile under-reports at {us}");
+            assert!(rel <= 0.0625, "over-estimate {rel} > 6.25% at {us}");
+        }
+    }
+
+    #[test]
     fn histogram_quantiles_bound_relative_error() {
         let h = Histogram::new();
         for ms in 1..=1000u64 {

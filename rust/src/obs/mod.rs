@@ -12,7 +12,18 @@
 //!   latency histograms (p50/p95/p99) addressable by static name, e.g.
 //!   `metrics::counter("kernels.forward.flops").add(n)`.
 //! * [`export`] — a `std::net`-only HTTP endpoint serving the metrics
-//!   snapshot as text (`/metrics`) or JSON (`/metrics.json`).
+//!   snapshot (`/metrics`, `/metrics.json`), liveness (`/healthz`), and
+//!   the flight-recorder ring (`/flight.json`).
+//! * [`flight`] — an always-on lock-free ring buffer of structured
+//!   events (spans, train steps, counter snapshots, health incidents)
+//!   with a panic hook that dumps the tail + a metrics snapshot to
+//!   `FLIGHT_<run>.json` for post-mortems.
+//! * [`health`] — rolling loss/grad statistics feeding NaN/Inf, spike,
+//!   and plateau detectors with a `warn | skip_step | abort` policy
+//!   (`DELTANET_HEALTH`), surfaced as `train.health.*` metrics.
+//! * [`regress`] — the bench regression gate behind
+//!   `deltanet bench-diff`: compares `BENCH_*.json` reports against
+//!   committed baselines with per-metric noise thresholds.
 //!
 //! Naming convention (dot-separated, coarse→fine):
 //! `kernel.*` / `kernels.*` for the chunkwise/backward/batch layer,
@@ -21,5 +32,8 @@
 //! `Backend`-trait boundary.
 
 pub mod export;
+pub mod flight;
+pub mod health;
 pub mod metrics;
+pub mod regress;
 pub mod trace;

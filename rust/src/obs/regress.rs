@@ -1,0 +1,389 @@
+//! Bench regression gate: compare a `BENCH_*.json` report against a
+//! committed baseline and flag metrics that moved the wrong way by more
+//! than a noise threshold.
+//!
+//! The benches (`bench_train`, `bench_kernels`, `bench_reference`, ...)
+//! all write reports built from the same vocabulary:
+//!
+//! * a `results` array of `util::bench::BenchResult` objects
+//!   (`name` / `median_s` / `p10_s` / `p90_s`) — *lower is better*;
+//! * suite-specific top-level scalars (`tokens_per_sec`, `gflops_mean`,
+//!   `loss_last`, `span_overhead_frac`, ...) with a known direction;
+//! * `bench_kernels`' `primitives` array (`gflops_simd`, `speedup`) —
+//!   *higher is better*.
+//!
+//! [`extract_metrics`] flattens any such report into named scalars with a
+//! direction, [`diff`] joins current against baseline by name and computes
+//! relative deltas, and [`DiffReport`] renders both a human table and a
+//! machine JSON.  A metric **regresses** when it moves in its bad
+//! direction by more than its threshold — timing medians and throughput
+//! share a default relative threshold (generous, because CI machines are
+//! noisy); loss metrics get a wider one (stochastic trajectories).
+//!
+//! The `deltanet bench-diff` CLI wraps this: it loads the current report,
+//! resolves the baseline (explicit `--baseline PATH` or the committed
+//! `rust/benches/baselines/<name>`), prints the report, optionally writes
+//! the JSON, and exits non-zero on regression unless `--warn-only`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Default relative noise threshold for timing/throughput metrics.
+pub const DEFAULT_THRESHOLD: f64 = 0.25;
+/// Wider threshold for loss metrics (stochastic across seeds/machines).
+pub const LOSS_THRESHOLD: f64 = 0.60;
+
+/// One comparable scalar pulled out of a bench report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub higher_is_better: bool,
+}
+
+/// Per-metric comparison outcome.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed relative change `(current - baseline) / |baseline|`.
+    pub rel_delta: f64,
+    pub higher_is_better: bool,
+    pub threshold: f64,
+    pub regressed: bool,
+    pub improved: bool,
+}
+
+/// Full comparison of one report against its baseline.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub suite: String,
+    pub metrics: Vec<MetricDelta>,
+    /// Metric names present in only one of the two reports.
+    pub only_in_current: Vec<String>,
+    pub only_in_baseline: Vec<String>,
+}
+
+/// Direction + threshold for a known top-level scalar field.
+fn scalar_spec(key: &str) -> Option<(bool, f64)> {
+    // (higher_is_better, threshold)
+    match key {
+        "tokens_per_sec" | "gflops_mean" => Some((true, DEFAULT_THRESHOLD)),
+        "span_overhead_frac" => Some((false, 1.0)), // tiny + very noisy
+        "loss_last" | "loss_first" => Some((false, LOSS_THRESHOLD)),
+        _ => None,
+    }
+}
+
+fn num(v: &Json, key: &str) -> Option<f64> {
+    v.get(key).and_then(|x| x.as_f64().ok())
+}
+
+/// Flatten a `BENCH_*.json` report into comparable metrics.
+pub fn extract_metrics(report: &Json) -> Vec<Metric> {
+    let mut out = Vec::new();
+    // top-level scalars with a known direction
+    if let Json::Obj(map) = report {
+        for key in map.keys() {
+            if scalar_spec(key).is_some() {
+                if let Some(v) = num(report, key) {
+                    let (hib, _) = scalar_spec(key).unwrap();
+                    out.push(Metric {
+                        name: key.clone(),
+                        value: v,
+                        higher_is_better: hib,
+                    });
+                }
+            }
+        }
+    }
+    // results[]: BenchResult medians (lower is better)
+    if let Some(results) = report.get("results").and_then(|r| r.as_arr().ok())
+    {
+        for r in results {
+            let (Some(name), Some(median)) = (
+                r.get("name").and_then(|n| n.as_str().ok()),
+                num(r, "median_s"),
+            ) else {
+                continue;
+            };
+            out.push(Metric {
+                name: format!("results.{name}.median_s"),
+                value: median,
+                higher_is_better: false,
+            });
+        }
+    }
+    // primitives[]: scalar-vs-SIMD comparison (higher is better)
+    if let Some(prims) =
+        report.get("primitives").and_then(|p| p.as_arr().ok())
+    {
+        for p in prims {
+            let Some(name) = p.get("name").and_then(|n| n.as_str().ok())
+            else {
+                continue;
+            };
+            for field in ["gflops_simd", "speedup"] {
+                if let Some(v) = num(p, field) {
+                    out.push(Metric {
+                        name: format!("primitives.{name}.{field}"),
+                        value: v,
+                        higher_is_better: true,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn threshold_for(name: &str, override_thresh: Option<f64>) -> f64 {
+    if let Some(t) = override_thresh {
+        return t;
+    }
+    if let Some((_, t)) = scalar_spec(name) {
+        return t;
+    }
+    DEFAULT_THRESHOLD
+}
+
+/// Compare current vs baseline reports.  `threshold` overrides every
+/// per-metric default when given.
+pub fn diff(current: &Json, baseline: &Json, threshold: Option<f64>)
+            -> DiffReport {
+    let suite = current
+        .get("suite")
+        .and_then(|s| s.as_str().ok())
+        .unwrap_or("unknown")
+        .to_string();
+    let cur = extract_metrics(current);
+    let base = extract_metrics(baseline);
+
+    let mut metrics = Vec::new();
+    let mut only_in_current = Vec::new();
+    let mut only_in_baseline: Vec<String> =
+        base.iter().map(|m| m.name.clone()).collect();
+
+    for c in &cur {
+        let Some(b) = base.iter().find(|b| b.name == c.name) else {
+            only_in_current.push(c.name.clone());
+            continue;
+        };
+        only_in_baseline.retain(|n| n != &c.name);
+        let denom = b.value.abs().max(1e-12);
+        let rel = (c.value - b.value) / denom;
+        let t = threshold_for(&c.name, threshold);
+        // "worse" is lower for higher-is-better metrics and vice versa
+        let worse_by = if c.higher_is_better { -rel } else { rel };
+        metrics.push(MetricDelta {
+            name: c.name.clone(),
+            baseline: b.value,
+            current: c.value,
+            rel_delta: rel,
+            higher_is_better: c.higher_is_better,
+            threshold: t,
+            regressed: worse_by > t,
+            improved: worse_by < -t,
+        });
+    }
+    DiffReport { suite, metrics, only_in_current, only_in_baseline }
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.metrics.iter().filter(|m| m.regressed).count()
+    }
+
+    /// Human-readable table, one metric per line.
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "bench-diff suite={} ({} metrics, {} regressed)\n",
+            self.suite, self.metrics.len(), self.regressions());
+        for m in &self.metrics {
+            let dir = if m.higher_is_better { "↑" } else { "↓" };
+            let flag = if m.regressed {
+                "REGRESSED"
+            } else if m.improved {
+                "improved"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "  {flag:<9} {:<44} {dir} base {:>12.4} -> {:>12.4} \
+                 ({:+.1}%, threshold {:.0}%)\n",
+                m.name, m.baseline, m.current, m.rel_delta * 100.0,
+                m.threshold * 100.0));
+        }
+        for n in &self.only_in_current {
+            out.push_str(&format!("  new       {n} (not in baseline)\n"));
+        }
+        for n in &self.only_in_baseline {
+            out.push_str(&format!("  missing   {n} (baseline only)\n"));
+        }
+        out
+    }
+
+    /// Machine JSON (`--json PATH` payload).
+    pub fn to_json(&self) -> Json {
+        let metrics = self.metrics.iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::str(m.name.clone())),
+                    ("baseline", Json::num(m.baseline)),
+                    ("current", Json::num(m.current)),
+                    ("rel_delta", Json::num(m.rel_delta)),
+                    ("higher_is_better", Json::Bool(m.higher_is_better)),
+                    ("threshold", Json::num(m.threshold)),
+                    ("regressed", Json::Bool(m.regressed)),
+                    ("improved", Json::Bool(m.improved)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("schema", Json::str("deltanet.bench_diff.v1")),
+            ("suite", Json::str(self.suite.clone())),
+            ("regressions", Json::num(self.regressions() as f64)),
+            ("metrics", Json::Arr(metrics)),
+            ("only_in_current",
+             Json::Arr(self.only_in_current.iter()
+                 .map(|s| Json::str(s.clone())).collect())),
+            ("only_in_baseline",
+             Json::Arr(self.only_in_baseline.iter()
+                 .map(|s| Json::str(s.clone())).collect())),
+        ])
+    }
+}
+
+/// Load a JSON report from disk.
+pub fn load_report(path: &Path) -> crate::Result<Json> {
+    use crate::util::error::Context;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench report {}",
+                                 path.display()))?;
+    Json::parse(&text)
+        .with_context(|| format!("{} is not valid JSON", path.display()))
+}
+
+/// The committed baseline for a report file name
+/// (`rust/benches/baselines/<file_name>` under the repo root).
+pub fn default_baseline_path(current: &Path) -> crate::Result<
+    std::path::PathBuf,
+> {
+    use crate::util::error::Context;
+    let file = current.file_name()
+        .context("bench report path has no file name")?;
+    Ok(crate::util::bench::repo_root()
+        .join("rust/benches/baselines")
+        .join(file))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_report(tokens_per_sec: f64, median_s: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"suite":"train","steps":20,"loss_first":3.0,
+                 "loss_last":1.5,"tokens_per_sec":{tokens_per_sec},
+                 "gflops_mean":2.0,"simd_level":"avx2",
+                 "losses":[3.0,1.5],
+                 "results":[{{"name":"host_train_step_tiny_mqar",
+                              "reps":20,"median_s":{median_s},
+                              "p10_s":{median_s},"p90_s":{median_s}}}]}}"#
+        )).unwrap()
+    }
+
+    #[test]
+    fn extracts_scalars_results_and_directions() {
+        let m = extract_metrics(&train_report(1000.0, 0.05));
+        let find = |n: &str| m.iter().find(|x| x.name == n).unwrap();
+        assert!(find("tokens_per_sec").higher_is_better);
+        assert!(!find("loss_last").higher_is_better);
+        let med = find("results.host_train_step_tiny_mqar.median_s");
+        assert!(!med.higher_is_better);
+        assert_eq!(med.value, 0.05);
+        // loss trajectory array is not a metric
+        assert!(m.iter().all(|x| x.name != "losses"));
+    }
+
+    #[test]
+    fn identical_reports_have_no_regressions() {
+        let r = train_report(1000.0, 0.05);
+        let d = diff(&r, &r, None);
+        assert_eq!(d.regressions(), 0);
+        assert!(d.only_in_current.is_empty());
+        assert!(d.only_in_baseline.is_empty());
+        assert!(d.metrics.iter().all(|m| m.rel_delta.abs() < 1e-12));
+    }
+
+    #[test]
+    fn two_x_throughput_drop_regresses_and_improvement_does_not() {
+        // baseline claims 2x the current throughput → regression
+        let current = train_report(1000.0, 0.10);
+        let baseline = train_report(2000.0, 0.05);
+        let d = diff(&current, &baseline, None);
+        assert!(d.regressions() >= 2, "{}", d.render_text());
+        let tps = d.metrics.iter()
+            .find(|m| m.name == "tokens_per_sec").unwrap();
+        assert!(tps.regressed && !tps.improved);
+        assert!((tps.rel_delta + 0.5).abs() < 1e-9); // −50%
+
+        // the mirror image is an improvement, not a regression
+        let d2 = diff(&baseline, &current, None);
+        assert_eq!(d2.regressions(), 0, "{}", d2.render_text());
+        assert!(d2.metrics.iter()
+            .find(|m| m.name == "tokens_per_sec").unwrap().improved);
+    }
+
+    #[test]
+    fn noise_within_threshold_passes() {
+        // 10% slower is inside the default 25% noise band
+        let d = diff(&train_report(900.0, 0.055),
+                     &train_report(1000.0, 0.05), None);
+        assert_eq!(d.regressions(), 0, "{}", d.render_text());
+        // but a tightened explicit threshold flags it
+        let d = diff(&train_report(900.0, 0.055),
+                     &train_report(1000.0, 0.05), Some(0.05));
+        assert!(d.regressions() >= 2);
+    }
+
+    #[test]
+    fn kernels_primitives_compare_higher_is_better() {
+        let mk = |gflops: f64| Json::parse(&format!(
+            r#"{{"suite":"kernels","primitives":[
+                 {{"name":"matmul_into_64","flops_per_call":1e6,
+                   "gflops_scalar":1.0,"gflops_simd":{gflops},
+                   "speedup":{gflops}}}],"results":[]}}"#)).unwrap();
+        let d = diff(&mk(2.0), &mk(8.0), None);
+        assert_eq!(d.regressions(), 2, "{}", d.render_text());
+        let d = diff(&mk(8.0), &mk(2.0), None);
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn schema_drift_reported_not_regressed() {
+        let current = train_report(1000.0, 0.05);
+        let mut baseline = train_report(1000.0, 0.05);
+        if let Json::Obj(m) = &mut baseline {
+            m.remove("gflops_mean");
+            m.insert("old_metric_gone".into(), Json::num(1.0));
+        }
+        let d = diff(&current, &baseline, None);
+        assert_eq!(d.regressions(), 0);
+        assert_eq!(d.only_in_current, vec!["gflops_mean".to_string()]);
+    }
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let d = diff(&train_report(1000.0, 0.10),
+                     &train_report(2000.0, 0.05), None);
+        let text = d.render_text();
+        assert!(text.contains("REGRESSED"));
+        assert!(text.contains("tokens_per_sec"));
+        let j = Json::parse(&d.to_json().render()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "train");
+        assert!(j.get("regressions").unwrap().as_f64().unwrap() >= 2.0);
+    }
+}

@@ -117,6 +117,11 @@ pub struct Span {
     active: bool,
 }
 
+/// Spans at this depth or shallower also land in the flight-recorder ring
+/// (the coarse run structure, without flooding the ring with per-chunk
+/// kernel spans).
+const FLIGHT_MAX_DEPTH: usize = 1;
+
 impl Drop for Span {
     fn drop(&mut self) {
         if !self.active {
@@ -126,6 +131,7 @@ impl Drop for Span {
         let args = std::mem::take(&mut self.args);
         let name = self.name;
         let start_us = self.start_us;
+        let mut flight_depth = None;
         // try_with: spans dropped during thread teardown are discarded
         // rather than panicking on destroyed TLS
         let _ = LOCAL.try_with(|cell| {
@@ -133,6 +139,9 @@ impl Drop for Span {
             if let Some(st) = borrow.as_mut() {
                 st.stack.pop();
                 let depth = st.stack.len();
+                if depth <= FLIGHT_MAX_DEPTH {
+                    flight_depth = Some(depth);
+                }
                 st.sink.push(Event {
                     name,
                     ts_us: start_us,
@@ -143,18 +152,35 @@ impl Drop for Span {
                 });
             }
         });
+        if let Some(depth) = flight_depth {
+            super::flight::record(
+                super::flight::EventKind::SpanClose,
+                name,
+                &[("depth", depth as f64),
+                  ("dur_ms", (end_us - start_us).max(0.0) / 1e3)],
+            );
+        }
     }
 }
 
 fn begin(name: &'static str, args: Vec<(&'static str, f64)>) -> Span {
     let start_us = now_us();
+    let mut depth = usize::MAX;
     let registered = LOCAL
         .try_with(|cell| {
             let mut borrow = cell.borrow_mut();
             let st = borrow.get_or_insert_with(new_local_state);
             st.stack.push(name);
+            depth = st.stack.len() - 1;
         })
         .is_ok();
+    if registered && depth <= FLIGHT_MAX_DEPTH {
+        super::flight::record(
+            super::flight::EventKind::SpanOpen,
+            name,
+            &[("depth", depth as f64)],
+        );
+    }
     Span { name, start_us, args, active: registered }
 }
 

@@ -10,6 +10,7 @@
 use crate::config::DataConfig;
 use crate::eval::{f2, pct, Table};
 use crate::runtime::Runtime;
+use crate::util::error::Context;
 
 use super::{tiny_artifact, train_cell, ReproOpts};
 
@@ -117,7 +118,9 @@ fn ablation_row(runtime: &Runtime, artifact: &str, label: &str,
             checkpoint_path: None,
         };
         let report = trainer.train(&cfg, task.as_mut(), None)?;
-        sums.push(report.final_loss as f64);
+        let final_loss = report.final_loss
+            .context("training run recorded no final loss")?;
+        sums.push(final_loss as f64);
     }
     cells.push(f2(sums[0].exp()));
     for s in &sums[1..] {

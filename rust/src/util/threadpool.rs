@@ -21,7 +21,17 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::obs::flight;
 use crate::obs::metrics::{counter, gauge, Counter, Gauge};
+
+/// A job panic is both a counter bump and a flight-recorder event, so a
+/// post-mortem dump shows *when* the pool lost a job relative to the
+/// surrounding train steps (the process-wide panic hook separately
+/// records the panic site itself).
+fn note_job_panic() {
+    pool_metrics().job_panics.inc();
+    flight::record(flight::EventKind::Panic, "pool.job_panic", &[]);
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -80,7 +90,7 @@ impl ThreadPool {
                                     .add(t.elapsed().as_micros() as u64);
                                 m.jobs_completed.inc();
                                 if !ok {
-                                    m.job_panics.inc();
+                                    note_job_panic();
                                 }
                             }
                             Err(_) => break,
@@ -124,7 +134,7 @@ impl ThreadPool {
             if !ok {
                 // the worker-level catch sees Ok (this wrapper caught it),
                 // so count the panic here
-                pool_metrics().job_panics.inc();
+                note_job_panic();
             }
             *s2.done.lock().unwrap() = Some(ok);
             s2.cv.notify_all();
@@ -251,7 +261,7 @@ impl<'pool, 'env> Scope<'pool, 'env> {
         self.pool.send(Box::new(move || {
             if catch_unwind(AssertUnwindSafe(job)).is_err() {
                 state.panics.fetch_add(1, Ordering::SeqCst);
-                pool_metrics().job_panics.inc();
+                note_job_panic();
             }
             let mut pending = state.pending.lock().unwrap();
             *pending -= 1;

@@ -1,0 +1,89 @@
+//! Crash-drill integration test for the flight recorder (ISSUE 9
+//! acceptance): a pool-worker panic in the middle of a host training run
+//! must leave a valid `FLIGHT_<run>.json` post-mortem on disk containing
+//! the last pre-panic train step.
+//!
+//! Everything lives in ONE test: the dump path and panic hook are process
+//! globals, and this integration binary owns its process.
+
+use deltanet::config::DataConfig;
+use deltanet::coordinator::host_training_backend;
+use deltanet::data::build_task;
+use deltanet::kernels::default_threads;
+use deltanet::model::{HostModel, HostModelCfg};
+use deltanet::obs::flight;
+use deltanet::util::json::Json;
+use deltanet::util::threadpool::ThreadPool;
+
+#[test]
+fn pool_panic_mid_training_dumps_a_valid_flight_recording() {
+    let dir = std::env::temp_dir().join("deltanet_it_flight");
+    std::fs::create_dir_all(&dir).unwrap();
+    flight::set_dump_dir(&dir);
+    flight::set_run_id("it_flight");
+    flight::install_panic_hook();
+    let dump = flight::dump_path();
+    std::fs::remove_file(&dump).ok();
+
+    // a short traced training run: each step records a flight Step event
+    let steps = 5usize;
+    let model =
+        HostModel::new(HostModelCfg::tiny(), 11, default_threads()).unwrap();
+    let mut backend = host_training_backend(model);
+    let mut task = build_task(&DataConfig::Mqar { num_pairs: 4, seed: 11 });
+    let mut last_loss = 0f32;
+    for _ in 0..steps {
+        let batch = task.sample(2, 32);
+        let (loss, _) = backend.train_step_detailed(&batch, 1e-2).unwrap();
+        last_loss = loss;
+    }
+
+    // crash drill: a pool worker panics; the pool survives, the hook dumps
+    let pool = ThreadPool::new(1);
+    let r = pool.submit(|| panic!("injected flight-test panic")).join();
+    assert!(r.is_err(), "injected job should report a panic");
+
+    // the post-mortem exists, parses, and matches the dump schema
+    let text = std::fs::read_to_string(&dump)
+        .unwrap_or_else(|e| panic!("no dump at {}: {e}", dump.display()));
+    let j = Json::parse(&text).expect("dump is valid JSON");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), flight::SCHEMA);
+    assert_eq!(j.get("run").unwrap().as_str().unwrap(), "it_flight");
+    assert!(j.get("metrics").unwrap().get("counters").is_some());
+
+    let events = j.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // sequence numbers strictly increase (snapshot is ordered + untorn)
+    let seqs: Vec<u64> = events.iter()
+        .map(|e| e.get("seq").unwrap().as_u64().unwrap())
+        .collect();
+    assert!(seqs.windows(2).all(|w| w[1] > w[0]), "seq not increasing");
+
+    // the LAST pre-panic train step made it into the recording, with the
+    // loss the backend actually reported
+    let step_evs: Vec<&Json> = events.iter()
+        .filter(|e| e.get("name").unwrap().as_str().unwrap() == "train.step")
+        .collect();
+    assert!(step_evs.len() >= steps, "expected {} step events, got {}",
+            steps, step_evs.len());
+    let last = step_evs.last().unwrap();
+    assert_eq!(last.get("kind").unwrap().as_str().unwrap(), "step");
+    let fields = last.get("fields").unwrap();
+    assert_eq!(fields.get("step").unwrap().as_f64().unwrap(),
+               steps as f64);
+    let recorded = fields.get("loss").unwrap().as_f64().unwrap();
+    assert!((recorded - last_loss as f64).abs() < 1e-6,
+            "dump loss {recorded} != live loss {last_loss}");
+
+    // ... and the panic itself was recorded after it
+    let last_step_seq = last.get("seq").unwrap().as_u64().unwrap();
+    let panic_ev = events.iter()
+        .find(|e| e.get("kind").unwrap().as_str().unwrap() == "panic")
+        .expect("panic event recorded");
+    assert!(panic_ev.get("seq").unwrap().as_u64().unwrap() > last_step_seq,
+            "panic event should follow the last train step");
+    assert!(panic_ev.get("name").unwrap().as_str().unwrap()
+        .starts_with("panic@"), "panic event names its location");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -69,7 +69,7 @@ fn full_train_loop_with_eval_and_checkpoint() {
     let report = trainer.train(&cfg, train_task.as_mut(),
                                Some(eval_task.as_mut())).unwrap();
     assert_eq!(report.steps, 20);
-    assert!(report.final_loss.is_finite());
+    assert!(report.final_loss.expect("steps ran").is_finite());
     assert_eq!(report.evals.len(), 3); // @10, @20, final
     assert!(ckpt.exists());
     // log has one record per step

@@ -145,3 +145,103 @@ fn metrics_endpoint_serves_decode_histograms() {
         .starts_with("HTTP/1.1 404"));
     server.shutdown();
 }
+
+/// Raw request with an arbitrary method (fetch() is GET-only).
+fn request(addr: std::net::SocketAddr, method: &str, path: &str) -> String {
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    write!(conn, "{method} {path} HTTP/1.1\r\nHost: t\r\n\
+                  Connection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    conn.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn export_routes_health_flight_and_errors() {
+    let server = match obs::export::serve_metrics("127.0.0.1:0") {
+        Ok(s) => s,
+        Err(_) => return, // no loopback in this sandbox
+    };
+    let addr = server.addr();
+
+    // healthz: OK while the health gauge is not failing
+    let hz = fetch(addr, "/healthz");
+    assert!(hz.starts_with("HTTP/1.1 200"), "bad /healthz: {hz}");
+    assert!(hz.ends_with("ok\n"));
+
+    // flight.json serves the live ring with the dump schema
+    obs::flight::record(obs::flight::EventKind::Mark,
+                        "test.obs.export_mark", &[("v", 1.0)]);
+    let raw = fetch(addr, "/flight.json");
+    assert!(raw.starts_with("HTTP/1.1 200"), "bad /flight.json: {raw}");
+    let body = &raw[raw.find("\r\n\r\n").unwrap() + 4..];
+    let j = Json::parse(body).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(),
+               obs::flight::SCHEMA);
+    assert!(j.get("events").unwrap().as_arr().unwrap().iter().any(
+        |e| e.get("name").unwrap().as_str().unwrap()
+            == "test.obs.export_mark"));
+
+    // wrong method → 405 with an Allow header; unknown path → 404
+    let post = request(addr, "POST", "/metrics");
+    assert!(post.starts_with("HTTP/1.1 405"), "bad POST response: {post}");
+    assert!(post.contains("Allow: GET"));
+    assert!(request(addr, "DELETE", "/healthz")
+        .starts_with("HTTP/1.1 405"));
+    assert!(fetch(addr, "/flight").starts_with("HTTP/1.1 404"));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_scrapes_see_consistent_snapshots() {
+    let server = match obs::export::serve_metrics("127.0.0.1:0") {
+        Ok(s) => s,
+        Err(_) => return, // no loopback in this sandbox
+    };
+    let addr = server.addr();
+    let c = obs::metrics::counter("test.obs.scrape_races");
+    let before = c.get();
+
+    // 4 scraper threads hammer /metrics while a writer bumps the counter:
+    // every response must be complete and carry a value in [before, after]
+    let stop = std::sync::Arc::new(
+        std::sync::atomic::AtomicBool::new(false));
+    let writer = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let c = obs::metrics::counter("test.obs.scrape_races");
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                c.inc();
+            }
+        })
+    };
+    let scrapers: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut seen = 0u64;
+                for _ in 0..25 {
+                    let text = fetch(addr, "/metrics");
+                    assert!(text.starts_with("HTTP/1.1 200"),
+                            "scrape failed: {text}");
+                    let line = text.lines()
+                        .find(|l| l.contains("test.obs.scrape_races"))
+                        .expect("counter line present");
+                    let v: u64 = line.rsplit(' ').next().unwrap()
+                        .parse().expect("counter value parses");
+                    assert!(v >= seen, "counter went backwards: {v} < {seen}");
+                    seen = v;
+                }
+                seen
+            })
+        })
+        .collect();
+    let max_seen = scrapers.into_iter()
+        .map(|t| t.join().unwrap())
+        .max().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    writer.join().unwrap();
+    assert!(max_seen >= before,
+            "scrapes never observed the live counter");
+    assert!(c.get() >= max_seen, "snapshot overshot the writer");
+    server.shutdown();
+}
