@@ -10,56 +10,31 @@
 //!
 //!     cargo run --release --example serve_decode
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use deltanet::coordinator::generate::Sampling;
 use deltanet::coordinator::server::{GenRequest, ServeEngine};
-use deltanet::coordinator::DecodeEngine;
-use deltanet::kernels::default_threads;
-use deltanet::model::{HostModel, HostModelCfg};
-use deltanet::runtime::{Manifest, Runtime};
 
 fn main() -> deltanet::Result<()> {
     // DELTANET_TRACE=TRACE_serve.json captures serve.batch/decode.* spans
     deltanet::obs::trace::init_from_env();
     deltanet::obs::flight::init_from_env();
     let artifact = "deltanet_tiny";
-    let man_path = std::path::PathBuf::from(
-        format!("artifacts/{artifact}.decode.manifest.json"));
-    let use_artifact = Runtime::backend_available() && man_path.exists();
 
     println!("== serving demo: {artifact} ==");
-    let (vocab, batch) = if use_artifact {
-        let man = Manifest::load(&man_path)?;
-        let cfg = man.config.as_ref().expect("model config");
-        println!("backend pjrt | arch {} | d_model {} | state per \
-                  layer-head: {}x{} f32 (constant in sequence length)",
-                 cfg.arch, cfg.d_model,
-                 cfg.d_model / cfg.n_heads, cfg.d_model / cfg.n_heads);
-        (cfg.vocab_size as i32, man.batch)
-    } else {
-        let cfg = HostModelCfg::tiny();
-        println!("backend host (no decode artifact) | d_model {} | state \
-                  per layer-head: {}x{} f32 (constant in sequence length)",
-                 cfg.d_model,
-                 cfg.d_model / cfg.n_heads, cfg.d_model / cfg.n_heads);
-        (cfg.vocab as i32, 8)
-    };
-
-    let serve = ServeEngine::spawn(
-        move || {
-            if use_artifact {
-                let rt = Runtime::new("artifacts")?;
-                DecodeEngine::new(&rt, "deltanet_tiny", 0)
-            } else {
-                let model = HostModel::new(HostModelCfg::tiny(), 0,
-                                           default_threads())?;
-                Ok(DecodeEngine::host(model, 8, 64))
-            }
-        },
+    // DecodeRoute picks pjrt vs host; the engine itself is built inside
+    // the serving thread (PJRT handles are not Send)
+    let (serve, route) = ServeEngine::spawn_auto(
+        Path::new("artifacts"), artifact, 0,
         Sampling::TopK { temperature: 0.8, k: 8 },
         Duration::from_millis(10),
-    );
+    )?;
+    println!("backend {} | d_model {} | state per layer-head: {}x{} f32 \
+              (constant in sequence length)",
+             route.backend, route.d_model,
+             route.d_model / route.n_heads, route.d_model / route.n_heads);
+    let (vocab, batch) = (route.vocab as i32, route.batch);
 
     // a burst of requests with heterogeneous prompt lengths
     let n_requests = 24;

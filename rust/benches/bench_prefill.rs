@@ -1,0 +1,110 @@
+//! Prefill thread-scaling bench: B=1 sequence-parallel chunkwise forward.
+//!
+//!     cargo bench --bench bench_prefill
+//!     DELTANET_BENCH_SMOKE=1 cargo bench --bench bench_prefill  # CI
+//!
+//! The three-phase DAG decomposition schedules one task per
+//! (batch, head, chunk) triple, so a SINGLE sequence (B=1) fans out
+//! across the whole pool — the per-problem loop it replaced could use at
+//! most B×H threads and left a lone long prompt single-threaded per
+//! head.  This bench pins that down: H ∈ {1, 4}, L ∈ {512, 2048},
+//! threads ∈ {1, 2, 4, 8} at the d=64, C=64 operating point, reporting
+//! tokens/s and the parallel speedup of every config relative to its own
+//! single-thread leg.
+//!
+//! Writes `BENCH_prefill.json` at the repo root (archived by CI's
+//! bench-smoke job and compared against the committed baseline by
+//! `deltanet bench-diff`).  On hosts with >= 8 cores the full run
+//! asserts the headline config (H=4, L=2048) reaches >= 2x throughput at
+//! 8 threads over 1 — the PR's acceptance bar.
+
+use deltanet::kernels::{default_threads, forward_batched_on, HeadProblem};
+use deltanet::reference::random_problem;
+use deltanet::util::bench::{bench, repo_root, smoke_mode, BenchResult};
+use deltanet::util::json::Json;
+use deltanet::util::threadpool::ThreadPool;
+
+const DIM: usize = 64;
+const CHUNK: usize = 64;
+
+fn problems(heads: usize, l: usize) -> Vec<HeadProblem> {
+    (0..heads)
+        .map(|h| {
+            let (q, k, v, beta) = random_problem(l, DIM, DIM, 40 + h as u64);
+            HeadProblem::new(q, k, v, beta)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let (warmup, reps) = if smoke { (1, 3) } else { (2, 7) };
+    let avail = default_threads();
+    println!("# B=1 prefill scaling: d={DIM} C={CHUNK} \
+              ({avail} hardware threads){}",
+             if smoke { " [smoke]" } else { "" });
+
+    let mut results: Vec<BenchResult> = vec![];
+    let mut speedups: Vec<(String, Json)> = vec![];
+    let mut tokens_per_sec = 0f64;
+
+    for heads in [1usize, 4] {
+        for l in [512usize, 2048] {
+            let ps = problems(heads, l);
+            let mut t1_median = 0f64;
+            for threads in [1usize, 2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let name = format!("prefill_h{heads}_l{l}_t{threads}");
+                let r = bench(&name, warmup, reps, || {
+                    std::hint::black_box(
+                        forward_batched_on(&pool, &ps, CHUNK));
+                });
+                if threads == 1 {
+                    t1_median = r.median_s;
+                }
+                let speedup = t1_median / r.median_s;
+                speedups.push((name.clone(), Json::num(speedup)));
+                // headline throughput: the big multi-head config's best leg
+                if heads == 4 && l == 2048 {
+                    tokens_per_sec =
+                        tokens_per_sec.max(l as f64 / r.median_s);
+                }
+                results.push(r);
+            }
+        }
+    }
+
+    println!("\n{:<24} {:>9}", "config", "speedup");
+    for (name, s) in &speedups {
+        println!("{:<24} {:>8.2}x", name,
+                 s.as_f64().expect("speedup is numeric"));
+    }
+    println!("headline tokens/s (h4, l2048): {tokens_per_sec:.0}");
+
+    let json = Json::obj(vec![
+        ("suite", Json::str("prefill")),
+        ("threads_available", Json::num(avail as f64)),
+        ("tokens_per_sec", Json::num(tokens_per_sec)),
+        ("speedups",
+         Json::obj(speedups.iter()
+             .map(|(n, s)| (n.as_str(), s.clone())).collect())),
+        ("results",
+         Json::Arr(results.iter().map(BenchResult::to_json).collect())),
+    ]);
+    let path = repo_root().join("BENCH_prefill.json");
+    std::fs::write(&path, json.render() + "\n").expect("write report");
+    println!("wrote {}", path.display());
+
+    // Acceptance bar: >= 2x at 8 threads over 1 on the headline config.
+    // Only meaningful on hosts that actually have 8 cores, and smoke reps
+    // are too few to trust — CI's smoke leg records, the full run gates.
+    if !smoke && avail >= 8 {
+        let s = speedups.iter()
+            .find(|(n, _)| n == "prefill_h4_l2048_t8")
+            .and_then(|(_, v)| v.as_f64().ok())
+            .expect("headline speedup present");
+        assert!(s >= 2.0,
+                "prefill_h4_l2048_t8 speedup {s:.2}x below the 2x bar");
+        println!("8-thread prefill speedup {s:.2}x clears the 2x bar");
+    }
+}

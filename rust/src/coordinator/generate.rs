@@ -16,6 +16,7 @@
 //! from pos 0, each row feeds prompt tokens until its prompt is exhausted,
 //! then feeds its own previous sample (standard static-batch decoding).
 
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock};
 
 use xla::Literal;
@@ -24,9 +25,9 @@ use crate::bail;
 use crate::util::error::Context;
 
 use crate::kernels::default_threads;
-use crate::model::HostModel;
+use crate::model::{HostModel, HostModelCfg};
 use crate::obs::{self, metrics::{counter, Counter}};
-use crate::runtime::{Executable, Role, Runtime};
+use crate::runtime::{Executable, Manifest, Role, Runtime};
 use crate::tensor::rng::Rng;
 use crate::tensor::Mat;
 
@@ -44,6 +45,84 @@ pub enum Sampling {
     Greedy,
     /// temperature > 0; top_k = 0 disables the filter
     TopK { temperature: f32, k: usize },
+}
+
+/// A resolved serving route: which decode engine serves (`"pjrt"` when the
+/// backend is linked in AND the `.decode` artifact exists on disk, `"host"`
+/// otherwise) plus the shape callers need BEFORE the engine exists — the
+/// engine itself is typically built inside a serving thread because PJRT
+/// handles are not `Send` (see [`super::ServeEngine::spawn_auto`]).
+///
+/// This is the ROADMAP "serving demo works with no artifacts" routing in
+/// one place: resolve once, size prompts to `vocab`, then `build` on
+/// whichever thread will own the engine.
+#[derive(Debug, Clone)]
+pub struct DecodeRoute {
+    /// `"pjrt"` (artifact) or `"host"` — matches
+    /// [`DecodeEngine::backend_name`] of the engine `build` produces.
+    pub backend: &'static str,
+    pub vocab: usize,
+    pub batch: usize,
+    pub max_seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    artifacts_dir: PathBuf,
+    artifact: String,
+}
+
+impl DecodeRoute {
+    /// Probe `artifacts_dir` for `{artifact}.decode.manifest.json` and pick
+    /// the engine: the compiled artifact when it exists and a real PJRT
+    /// backend is linked in, the pure-Rust host model otherwise.  Errors
+    /// only on a present-but-broken manifest — absence routes to host.
+    pub fn resolve(artifacts_dir: &Path, artifact: &str) -> crate::Result<Self> {
+        let man_path = artifacts_dir
+            .join(format!("{artifact}.decode.manifest.json"));
+        if Runtime::backend_available() && man_path.exists() {
+            let man = Manifest::load(&man_path)?;
+            let cfg = man.config.as_ref()
+                .context("decode manifest missing model config")?;
+            Ok(DecodeRoute {
+                backend: "pjrt",
+                vocab: cfg.vocab_size,
+                batch: man.batch,
+                max_seq_len: cfg.max_seq_len,
+                d_model: cfg.d_model,
+                n_heads: cfg.n_heads,
+                artifacts_dir: artifacts_dir.to_path_buf(),
+                artifact: artifact.to_string(),
+            })
+        } else {
+            let cfg = HostModelCfg::tiny();
+            Ok(DecodeRoute {
+                backend: "host",
+                vocab: cfg.vocab,
+                batch: 8,
+                max_seq_len: 64,
+                d_model: cfg.d_model,
+                n_heads: cfg.n_heads,
+                artifacts_dir: artifacts_dir.to_path_buf(),
+                artifact: artifact.to_string(),
+            })
+        }
+    }
+
+    /// Build the engine this route resolved to.  Call on the thread that
+    /// will own the engine (PJRT handles are not `Send`); the route itself
+    /// is `Clone + Send`, so it can cross into a worker first.
+    pub fn build(&self, seed: u64) -> crate::Result<DecodeEngine> {
+        match self.backend {
+            "pjrt" => {
+                let rt = Runtime::new(&self.artifacts_dir)?;
+                DecodeEngine::new(&rt, &self.artifact, seed)
+            }
+            _ => {
+                let model = HostModel::new(
+                    HostModelCfg::tiny(), seed, default_threads())?;
+                Ok(DecodeEngine::host(model, self.batch, self.max_seq_len))
+            }
+        }
+    }
 }
 
 pub struct DecodeEngine {
@@ -346,6 +425,36 @@ mod tests {
         assert_eq!(a, b);
         // rejects the artifact-only param override
         assert!(eng.set_params(&[]).is_err());
+    }
+
+    #[test]
+    fn route_falls_back_to_host_without_artifacts() {
+        // an empty dir has no decode manifest — must route to host with
+        // the tiny-model shape, and build a working engine from it
+        let dir = std::env::temp_dir().join("deltanet_route_test_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let route = DecodeRoute::resolve(&dir, "deltanet_tiny").unwrap();
+        assert_eq!(route.backend, "host");
+        let tiny = HostModelCfg::tiny();
+        assert_eq!(route.vocab, tiny.vocab);
+        assert_eq!(route.d_model, tiny.d_model);
+        assert_eq!(route.n_heads, tiny.n_heads);
+        assert_eq!(route.batch, 8);
+        assert_eq!(route.max_seq_len, 64);
+        let mut eng = route.build(0).unwrap();
+        assert_eq!(eng.backend_name(), "host");
+        assert_eq!(eng.vocab, route.vocab);
+        assert_eq!(eng.batch, route.batch);
+        let gens = eng.generate(&[vec![1, 2, 3]], 4,
+                                Sampling::Greedy, 0).unwrap();
+        assert_eq!(gens[0].len(), 4);
+    }
+
+    #[test]
+    fn route_is_send_for_worker_handoff() {
+        // spawn_auto ships the route into the serving thread
+        fn assert_send<T: Send + 'static>() {}
+        assert_send::<DecodeRoute>();
     }
 
     #[test]

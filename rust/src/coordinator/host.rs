@@ -16,7 +16,8 @@ use std::time::Instant;
 
 use crate::data::Batch;
 use crate::kernels::{
-    chunkwise::recurrent_step, map_batched_on, HeadProblem,
+    chunkwise::recurrent_step, forward_batched_on, map_batched_on,
+    HeadProblem,
 };
 use crate::model::{AdamW, HostModel, Optimizer};
 use crate::obs;
@@ -237,9 +238,10 @@ impl HostKernelBackend {
             .collect::<crate::Result<_>>()?;
 
         let outs = match form {
+            // DAG-scheduled over every (batch, head, chunk) task, so a
+            // single long sequence still uses the whole pool
             KernelForm::Chunkwise => {
-                map_batched_on(&self.pool, &problems,
-                               |p| p.forward(chunk))
+                forward_batched_on(&self.pool, &problems, chunk)
             }
             // scalar recurrence per sequence, still fanned out over the
             // pool — the Fig-1 baseline with the same parallel budget

@@ -22,7 +22,7 @@ pub mod trainer;
 pub use backend::{
     host_training_backend, select_kernel_backend, Backend, PjrtBackend,
 };
-pub use generate::DecodeEngine;
+pub use generate::{DecodeEngine, DecodeRoute};
 pub use host::{HostKernelBackend, KernelForm, StepBreakdown};
 pub use instrument::InstrumentedBackend;
 pub use server::{ServeEngine, ServeStats};

@@ -8,6 +8,7 @@
 //! generated tokens plus a latency breakdown.  New requests join at group
 //! boundaries — the admission policy the bench harness sweeps.
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -18,7 +19,7 @@ use crate::obs::metrics::{
     counter, gauge, histogram, Counter, Gauge, Histogram,
 };
 
-use super::generate::{DecodeEngine, Sampling};
+use super::generate::{DecodeEngine, DecodeRoute, Sampling};
 
 /// Cached handles for the serving path's metrics (`serve.*`).
 struct ServeMetrics {
@@ -228,6 +229,23 @@ impl ServeEngine {
         ServeEngine { tx: Some(tx), stats, worker: Some(worker) }
     }
 
+    /// Resolve the decode route for `artifact` under `artifacts_dir` and
+    /// spawn the engine loop on it: PJRT decode artifact when present and
+    /// the backend is linked in, the pure-Rust host model otherwise — so
+    /// serving works end to end with no artifacts on disk.  Returns the
+    /// resolved [`DecodeRoute`] alongside the handle so callers can size
+    /// prompts to `route.vocab` / report `route.backend` without probing
+    /// the artifact directory themselves.
+    pub fn spawn_auto(artifacts_dir: &Path, artifact: &str, seed: u64,
+                      sampling: Sampling, group_timeout: Duration)
+                      -> crate::Result<(Self, DecodeRoute)> {
+        let route = DecodeRoute::resolve(artifacts_dir, artifact)?;
+        let worker_route = route.clone();
+        let engine = Self::spawn(
+            move || worker_route.build(seed), sampling, group_timeout);
+        Ok((engine, route))
+    }
+
     /// Submit a request; returns a ticket to wait on.
     pub fn submit(&self, req: GenRequest) -> crate::Result<Ticket> {
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -297,6 +315,30 @@ impl Drop for ServeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spawn_auto_serves_host_route_without_artifacts() {
+        let dir = std::env::temp_dir().join("deltanet_spawn_auto_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (serve, route) = ServeEngine::spawn_auto(
+            &dir, "deltanet_tiny", 0, Sampling::Greedy,
+            Duration::from_millis(1)).unwrap();
+        assert_eq!(route.backend, "host");
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|i| serve.submit(GenRequest {
+                prompt: vec![1 + i, 2, 3],
+                max_new: 4,
+            }).unwrap())
+            .collect();
+        for t in tickets {
+            let resp = t.wait().unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+            assert!(resp.tokens.iter()
+                .all(|&t| (t as usize) < route.vocab));
+        }
+        let st = serve.shutdown();
+        assert_eq!(st.requests, 3);
+    }
 
     #[test]
     fn stats_math() {

@@ -1,47 +1,66 @@
 //! Chunkwise-parallel DeltaNet backward over one sequence (paper App. B):
 //! gradients for q/k/v/β through the intra-chunk UT transform and the
-//! inter-chunk state recurrence, as a reverse scan over chunks.
+//! inter-chunk state recurrence, in the same three-phase sequence-parallel
+//! form as the forward (see [`super::chunkwise`]).
 //!
-//! The forward (see [`super::chunkwise`]) keeps only the carried state
-//! between chunks, so the backward recomputes the per-chunk intermediates
-//! (W, U, T, attention triangle) from a cheap forward pre-pass that
-//! checkpoints the chunk-entry states S_in — O(L/C) extra state memory
-//! instead of O(L) activation memory.
+//! The forward keeps only chunk boundary states, so the backward
+//! recomputes per-chunk intermediates from the inputs.  Writing the state
+//! gradient recurrence with the forward's scan transition P = I − KᵀW:
 //!
-//! Per chunk, with dS the gradient carried from the chunks to the right
-//! (initialized from d(final state)):
+//! ```text
+//!   dS_i = Pᵢᵀ dS_{i+1} + H_i,    H_i = Qᵢᵀ dOᵢ − Wᵢᵀ (Attnᵢᵀ dOᵢ)
+//! ```
+//!
+//! (substituting dU̅ = Attnᵀ dO + K dS into dS ← dS + QᵀdO − WᵀdU̅ and
+//! noting Pᵀ = I − WᵀK), which is again an affine scan whose coefficients
+//! depend only on the chunk's own tokens.  The decomposition mirrors the
+//! forward's:
+//!
+//!   * **Phase A** ([`bwd_phase_a_chunk`]): per-chunk recompute of
+//!     W/U/P/G plus the reverse-scan source H — independent across all
+//!     (batch, head, chunk) tasks,
+//!   * **Phase B**: the forward state scan ([`scan_states`], for the
+//!     chunk-entry states S_in) and the *reverse* gradient scan
+//!     ([`scan_dstates`], for the incoming dS of every chunk) — two
+//!     independent per-sequence scans of state-size matmuls,
+//!   * **Phase C** ([`bwd_phase_c_chunk`]): per-chunk dq/dk/dv/dβ from
+//!     the propagated (S_in, dS) pair — independent across chunks, with
+//!     dS the *incoming* carry (= dsb[i+1]):
 //!
 //! ```text
 //!   dU̅  = Attnᵀ dO + K dS
 //!   dAttn = tril(dO U̅ᵀ, 0)
 //!   dQ   = dO S_inᵀ + dAttn K
-//!   dK   = dAttnᵀ Q + U̅ dSᵀ          (incoming dS, before the carry update)
+//!   dK   = dAttnᵀ Q + U̅ dSᵀ
 //!   dW   = −dU̅ S_inᵀ,  dU = dU̅
 //!   dT   = dW Kᵦᵀ + dU Vᵦᵀ
 //!   dA   = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1)    via two triangular solves
 //!   dKᵦ  = Tᵀ dW + dA K,   dVᵦ = Tᵀ dU
 //!   dK  += dAᵀ Kᵦ + diag(β) dKᵦ,   dV = diag(β) dVᵦ
 //!   dβᵢ  = dKᵦᵢ·Kᵢ + dVᵦᵢ·Vᵢ
-//!   dS  ← dS + Qᵀ dO − Wᵀ dU̅                (the reverse state recurrence)
 //! ```
 //!
-//! The reverse scan is sequential per sequence (mirroring the forward), and
-//! the [B,H] fan-out in [`backward_batched_on`] parallelizes across head
-//! problems exactly like the forward batch layer.
+//! [`chunkwise_backward`] runs the phases in order on the calling thread;
+//! [`backward_batched_on`] schedules the identical phase functions as a
+//! DAG over every (batch, head, chunk) task, so the two are bit-identical
+//! per sequence and parallelism is B×H×⌈L/C⌉, not B×H.
 
 use std::sync::OnceLock;
 
 use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
-    matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows_into,
+    copy_into, matmul_into, matmul_nt_into, matmul_tn_acc, scale_rows_into,
     solve_unit_lower_in_place, solve_unit_lower_t_into, sub_in_place,
     transpose_into, tril_matmul_nt_into, tri_inv_unit_lower_into,
 };
 use crate::tensor::{simd, Mat, MatRef};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{TaskDag, ThreadPool};
 
-use super::batch::HeadProblem;
-use super::chunkwise::{chunk_flops, forward_bytes};
+use super::batch::{task_count, HeadProblem, RawRange};
+use super::chunkwise::{
+    chunk_flops, forward_bytes, phase_a_core, scan_states, SeqBuffers,
+    validate_forward_inputs,
+};
 use super::workspace::with_thread_workspace;
 use super::KernelConfig;
 
@@ -62,6 +81,27 @@ fn bwd_counters() -> &'static BwdCounters {
     })
 }
 
+/// Bump the backward work counters for one sequence — shared by the
+/// sequential entry point and the DAG-scheduled batch path.
+pub(crate) fn note_backward(l: usize, chunk: usize, dk: usize, dv: usize) {
+    let m = bwd_counters();
+    m.calls.inc();
+    let mut flops = 0u64;
+    let mut nchunks = 0u64;
+    let mut t0 = 0;
+    while t0 < l {
+        let c = chunk.min(l - t0);
+        // recompute (≈ forward) + gradient products: ~3× the forward chunk
+        flops += 3 * chunk_flops(c, dk, dv);
+        nchunks += 1;
+        t0 += c;
+    }
+    m.chunks.add(nchunks);
+    m.flops.add(flops);
+    // recompute re-reads the inputs, gradients are written: ~3×
+    m.bytes.add(3 * forward_bytes(l, dk, dv));
+}
+
 /// Gradients of one sequence problem: same shapes as the inputs, plus the
 /// gradient flowing into the initial state (zero-state problems can ignore
 /// it; stacked segments chain it backwards).
@@ -79,10 +119,231 @@ pub struct Gradients {
     pub dstate: Mat,
 }
 
+/// Backward phase A for one chunk: the forward recompute
+/// ([`phase_a_core`]: W, U, P, G) plus the reverse-scan source
+/// H = QᵀdO − Wᵀ(AttnᵀdO).  Independent of every other chunk.
+pub(crate) fn bwd_phase_a_chunk(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    d_o: &Mat,
+    t0: usize,
+    c: usize,
+    w_out: &mut [f32],
+    u_out: &mut [f32],
+    p_out: &mut [f32],
+    g_out: &mut [f32],
+    h_out: &mut [f32],
+) {
+    let (dk, dv) = (k.cols, v.cols);
+    debug_assert_eq!(h_out.len(), dk * dv);
+    with_thread_workspace(|scr| {
+        phase_a_core(scr, k, v, beta, t0, c, w_out, u_out, p_out, g_out);
+        let qc = q.rows_window(t0, c);
+        let kc = k.rows_window(t0, c);
+        let d_oc = d_o.rows_window(t0, c);
+        tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+        // H = QᵀdO − Wᵀ(AttnᵀdO)
+        scr.hc.reset(dk, dv);
+        matmul_tn_acc(&mut scr.hc, qc, d_oc);
+        scr.du_bar.reset(c, dv);
+        matmul_tn_acc(&mut scr.du_bar, &scr.attn, d_oc);
+        scr.wtd.reset(dk, dv);
+        matmul_tn_acc(&mut scr.wtd, &scr.w, &scr.du_bar);
+        sub_in_place(&mut scr.hc, &scr.wtd);
+        h_out.copy_from_slice(&scr.hc.data);
+    });
+}
+
+/// Backward phase B (reverse leg): propagate the state gradients
+/// `dsb[i] = Pᵢᵀ dsb[i+1] + H_i` right to left; `dsb[n]` is seeded from
+/// `d_state` and `dsb[0]` is the gradient w.r.t. the initial state.
+pub(crate) fn scan_dstates(
+    p: &[f32],
+    h: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    d_state: Option<&Mat>,
+    dsb: &mut [f32],
+) {
+    let sdv = dk * dv;
+    debug_assert_eq!(p.len(), n * dk * dk);
+    debug_assert_eq!(h.len(), n * sdv);
+    debug_assert_eq!(dsb.len(), (n + 1) * sdv);
+    match d_state {
+        Some(dsn) => {
+            debug_assert_eq!((dsn.rows, dsn.cols), (dk, dv));
+            dsb[n * sdv..].copy_from_slice(&dsn.data);
+        }
+        None => dsb[n * sdv..].fill(0.0),
+    }
+    with_thread_workspace(|scr| {
+        for ci in (0..n).rev() {
+            let (left, right) = dsb.split_at_mut((ci + 1) * sdv);
+            let ds_next =
+                MatRef { rows: dk, cols: dv, data: &right[..sdv] };
+            let p_i = MatRef {
+                rows: dk,
+                cols: dk,
+                data: &p[ci * dk * dk..(ci + 1) * dk * dk],
+            };
+            // dsb[ci] = Pᵀ dsb[ci+1] + H
+            scr.sc.reset(dk, dv);
+            matmul_tn_acc(&mut scr.sc, p_i, ds_next);
+            let out = &mut left[ci * sdv..];
+            out.copy_from_slice(&h[ci * sdv..(ci + 1) * sdv]);
+            for (x, &y) in out.iter_mut().zip(&scr.sc.data) {
+                *x += y;
+            }
+        }
+    });
+}
+
+/// Backward phase C for one chunk: dq/dk/dv/dβ from the propagated
+/// `(S_in, dS)` pair, where `s_in = states[ci]` and `ds_next = dsb[ci+1]`
+/// (the incoming carry).  Uses the stored W/U from phase A and recomputes
+/// the chunk-local triangle factors.  Independent across chunks.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bwd_phase_c_chunk(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    d_o: &Mat,
+    t0: usize,
+    c: usize,
+    w_c: &[f32],
+    u_c: &[f32],
+    s_in: &[f32],
+    ds_next: &[f32],
+    dq_out: &mut [f32],
+    dk_out: &mut [f32],
+    dv_out: &mut [f32],
+    dbeta_out: &mut [f32],
+) {
+    let (dk, dv) = (q.cols, v.cols);
+    let s_in = MatRef { rows: dk, cols: dv, data: s_in };
+    let ds = MatRef { rows: dk, cols: dv, data: ds_next };
+    let w = MatRef { rows: c, cols: dk, data: w_c };
+    let u = MatRef { rows: c, cols: dv, data: u_c };
+    with_thread_workspace(|scr| {
+        let qc = q.rows_window(t0, c);
+        let kc = k.rows_window(t0, c);
+        let vc = v.rows_window(t0, c);
+        let bc = &beta[t0..t0 + c];
+        let d_oc = d_o.rows_window(t0, c);
+
+        // recompute the chunk-local triangle factors (W/U come in stored)
+        scale_rows_into(&mut scr.kb, kc, bc);
+        scale_rows_into(&mut scr.vb, vc, bc);
+        tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
+        tri_inv_unit_lower_into(&mut scr.t, &scr.a);
+        // U̅ = U − W S_in
+        copy_into(&mut scr.u_bar, u);
+        matmul_into(&mut scr.ws, w, s_in, false);
+        sub_in_place(&mut scr.u_bar, &scr.ws);
+        tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+
+        // dU̅ = Attnᵀ dO + K dS
+        scr.du_bar.reset(c, dv);
+        matmul_tn_acc(&mut scr.du_bar, &scr.attn, d_oc);
+        matmul_into(&mut scr.du_bar, kc, ds, true);
+
+        // dAttn = tril(dO U̅ᵀ, 0)
+        tril_matmul_nt_into(&mut scr.d_attn, d_oc, &scr.u_bar, 0);
+
+        // dQ = dO S_inᵀ + dAttn K
+        matmul_nt_into(&mut scr.dqc, d_oc, s_in, false);
+        matmul_into(&mut scr.dqc, &scr.d_attn, kc, true);
+
+        // dK = dAttnᵀ Q + U̅ dSᵀ — dS is the incoming carry (dsb[ci+1])
+        scr.dkc.reset(c, dk);
+        matmul_tn_acc(&mut scr.dkc, &scr.d_attn, qc);
+        matmul_nt_into(&mut scr.dkc, &scr.u_bar, ds, true);
+
+        // dW = −dU̅ S_inᵀ; dU aliases dU̅
+        matmul_nt_into(&mut scr.dw, &scr.du_bar, s_in, false);
+        for x in scr.dw.data.iter_mut() {
+            *x = -*x;
+        }
+
+        // dT = dW Kᵦᵀ + dU Vᵦᵀ
+        matmul_nt_into(&mut scr.dt, &scr.dw, &scr.kb, false);
+        matmul_nt_into(&mut scr.dt, &scr.du_bar, &scr.vb, true);
+
+        // dA = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1): two triangular solves
+        // instead of three dense products with the explicit inverse
+        solve_unit_lower_t_into(&mut scr.sol, &scr.a, &scr.dt);
+        transpose_into(&mut scr.solt, &scr.sol);
+        solve_unit_lower_in_place(&scr.a, &mut scr.solt);
+        scr.da.reset(c, c);
+        for i in 0..c {
+            for j in 0..i {
+                scr.da[(i, j)] = -scr.solt[(j, i)];
+            }
+        }
+
+        // dKᵦ = Tᵀ dW + dA K,  dVᵦ = Tᵀ dU
+        scr.dkb.reset(c, dk);
+        matmul_tn_acc(&mut scr.dkb, &scr.t, &scr.dw);
+        matmul_into(&mut scr.dkb, &scr.da, kc, true);
+        scr.dvb.reset(c, dv);
+        matmul_tn_acc(&mut scr.dvb, &scr.t, &scr.du_bar);
+
+        // dK += dAᵀ Kᵦ + diag(β) dKᵦ,  dV = diag(β) dVᵦ,  dβ from Kᵦ/Vᵦ
+        matmul_tn_acc(&mut scr.dkc, &scr.da, &scr.kb);
+        scr.dvc.reset(c, dv);
+        for i in 0..c {
+            let b = bc[i];
+            for (x, &g) in
+                scr.dkc.row_mut(i).iter_mut().zip(scr.dkb.row(i))
+            {
+                *x += b * g;
+            }
+            for (x, &g) in
+                scr.dvc.row_mut(i).iter_mut().zip(scr.dvb.row(i))
+            {
+                *x = b * g;
+            }
+            dbeta_out[i] = simd::dot(scr.dkb.row(i), kc.row(i))
+                + simd::dot(scr.dvb.row(i), vc.row(i));
+        }
+
+        dq_out.copy_from_slice(&scr.dqc.data);
+        dk_out.copy_from_slice(&scr.dkc.data);
+        dv_out.copy_from_slice(&scr.dvc.data);
+    });
+}
+
+fn validate_backward_inputs(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    chunk: usize,
+    initial_state: Option<&Mat>,
+    d_o: &Mat,
+    d_state: Option<&Mat>,
+) {
+    validate_forward_inputs(q, k, v, beta, chunk, initial_state);
+    assert_eq!((d_o.rows, d_o.cols), (q.rows, v.cols), "d_o shape");
+    if let Some(dsn) = d_state {
+        assert_eq!((dsn.rows, dsn.cols), (q.cols, v.cols),
+                   "d_state shape");
+    }
+}
+
 /// Chunkwise backward for one sequence.  `q,k: [L,dk]`, `v: [L,dv]`,
 /// `beta: [L]`, `d_o: [L,dv]` the output gradient, `d_state: [dk,dv]` the
 /// gradient w.r.t. the final state (None = zeros).  `chunk` may not divide
 /// L (the tail chunk is shorter), matching the forward.
+///
+/// Runs the three phases sequentially on the calling thread; the batched
+/// DAG path ([`backward_batched_on`]) runs the exact same phase functions,
+/// so the two are bit-identical per sequence.
+#[allow(clippy::too_many_arguments)]
 pub fn chunkwise_backward(
     q: &Mat,
     k: &Mat,
@@ -93,183 +354,63 @@ pub fn chunkwise_backward(
     d_o: &Mat,
     d_state: Option<&Mat>,
 ) -> Gradients {
+    validate_backward_inputs(q, k, v, beta, chunk, initial_state, d_o,
+                             d_state);
     let (l, dk) = (q.rows, q.cols);
     let dv = v.cols;
-    assert!(chunk > 0, "chunk must be positive");
-    assert_eq!(k.rows, l, "k rows");
-    assert_eq!(k.cols, dk, "k cols");
-    assert_eq!(v.rows, l, "v rows");
-    assert_eq!(beta.len(), l, "beta len");
-    assert_eq!((d_o.rows, d_o.cols), (l, dv), "d_o shape");
-    if let Some(s0) = initial_state {
-        assert_eq!((s0.rows, s0.cols), (dk, dv), "initial state shape");
-    }
-    if let Some(dsn) = d_state {
-        assert_eq!((dsn.rows, dsn.cols), (dk, dv), "d_state shape");
-    }
 
     let _sp = obs::trace::span_with("kernel.chunkwise.backward", || {
         vec![("L", l as f64), ("chunk", chunk as f64),
              ("dk", dk as f64), ("dv", dv as f64)]
     });
 
-    // ---- gradient outputs (the only per-call allocations)
+    let n = l.div_ceil(chunk);
+    let mut seq = SeqBuffers::backward(l, dk, dv, n);
+    // ---- gradient outputs (the only other per-call allocations)
     let mut dq = Mat::zeros(l, dk);
     let mut dk_out = Mat::zeros(l, dk);
     let mut dv_out = Mat::zeros(l, dv);
     let mut dbeta = vec![0.0f32; l];
-    let mut s = initial_state
-        .cloned()
-        .unwrap_or_else(|| Mat::zeros(dk, dv));
-    let mut ds = d_state.cloned().unwrap_or_else(|| Mat::zeros(dk, dv));
 
-    let n_chunks = l.div_ceil(chunk);
-    let mut flops = 0u64;
-    // both scans run inside this thread's workspace: intermediates are
-    // reused buffers, chunk inputs are borrowed row windows, and the
-    // chunk-entry checkpoints land in one flat reused Vec
-    with_thread_workspace(|scr| {
-        // ---- forward pre-pass: checkpoint the state entering each chunk
-        {
-            let _ckpt_sp = obs::trace::span("kernel.backward.checkpoint");
-            scr.checkpoints.clear();
-            scr.checkpoints.reserve(n_chunks * dk * dv);
-            let mut t0 = 0;
-            while t0 < l {
-                let c = chunk.min(l - t0);
-                scr.checkpoints.extend_from_slice(&s.data);
-                let kc = k.rows_window(t0, c);
-                let vc = v.rows_window(t0, c);
-                let bc = &beta[t0..t0 + c];
-                scale_rows_into(&mut scr.kb, kc, bc);
-                scale_rows_into(&mut scr.vb, vc, bc);
-                tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
-                tri_inv_unit_lower_into(&mut scr.t, &scr.a);
-                matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
-                matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
-                matmul_into(&mut scr.ws, &scr.w, &s, false);
-                sub_in_place(&mut scr.u_bar, &scr.ws);
-                matmul_tn_acc(&mut s, kc, &scr.u_bar);
-                t0 += c;
-            }
-        }
+    // Phase A: per-chunk recompute of W/U/P/G + the reverse-scan source H
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.backward.chunk");
+        bwd_phase_a_chunk(q, k, v, beta, d_o, t0, c,
+                          &mut seq.w[t0 * dk..(t0 + c) * dk],
+                          &mut seq.u[t0 * dv..(t0 + c) * dv],
+                          &mut seq.p[ci * dk * dk..(ci + 1) * dk * dk],
+                          &mut seq.g[ci * dk * dv..(ci + 1) * dk * dv],
+                          &mut seq.h[ci * dk * dv..(ci + 1) * dk * dv]);
+    }
 
-        // ---- reverse scan over chunks
-        for ci in (0..n_chunks).rev() {
-            let t0 = ci * chunk;
-            let c = chunk.min(l - t0);
-            let _chunk_sp = obs::trace::span("kernel.backward.chunk");
-            // recompute (≈ forward) + gradient products: ~3× the forward chunk
-            flops += 3 * chunk_flops(c, dk, dv);
-            let s_in = MatRef {
-                rows: dk,
-                cols: dv,
-                data: &scr.checkpoints[ci * dk * dv..(ci + 1) * dk * dv],
-            };
-            let qc = q.rows_window(t0, c);
-            let kc = k.rows_window(t0, c);
-            let vc = v.rows_window(t0, c);
-            let bc = &beta[t0..t0 + c];
-            let d_oc = d_o.rows_window(t0, c);
+    // Phase B: the forward state scan and the reverse gradient scan
+    {
+        let _scan_sp = obs::trace::span("kernel.backward.scan");
+        scan_states(&seq.p, &seq.g, n, dk, dv, initial_state,
+                    &mut seq.states);
+        scan_dstates(&seq.p, &seq.h, n, dk, dv, d_state, &mut seq.dsb);
+    }
 
-            // recompute the chunk intermediates
-            scale_rows_into(&mut scr.kb, kc, bc);
-            scale_rows_into(&mut scr.vb, vc, bc);
-            tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
-            tri_inv_unit_lower_into(&mut scr.t, &scr.a);
-            matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
-            matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
-            matmul_into(&mut scr.ws, &scr.w, s_in, false);
-            sub_in_place(&mut scr.u_bar, &scr.ws);
-            tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+    // Phase C: per-chunk input gradients from the propagated (S_in, dS)
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.backward.grad");
+        bwd_phase_c_chunk(q, k, v, beta, d_o, t0, c,
+                          &seq.w[t0 * dk..(t0 + c) * dk],
+                          &seq.u[t0 * dv..(t0 + c) * dv],
+                          &seq.states[ci * dk * dv..(ci + 1) * dk * dv],
+                          &seq.dsb[(ci + 1) * dk * dv..(ci + 2) * dk * dv],
+                          &mut dq.data[t0 * dk..(t0 + c) * dk],
+                          &mut dk_out.data[t0 * dk..(t0 + c) * dk],
+                          &mut dv_out.data[t0 * dv..(t0 + c) * dv],
+                          &mut dbeta[t0..t0 + c]);
+    }
 
-            // dU̅ = Attnᵀ dO + K dS
-            scr.du_bar.reset(c, dv);
-            matmul_tn_acc(&mut scr.du_bar, &scr.attn, d_oc);
-            matmul_into(&mut scr.du_bar, kc, &ds, true);
-
-            // dAttn = tril(dO U̅ᵀ, 0)
-            tril_matmul_nt_into(&mut scr.d_attn, d_oc, &scr.u_bar, 0);
-
-            // dQ = dO S_inᵀ + dAttn K
-            matmul_nt_into(&mut scr.dqc, d_oc, s_in, false);
-            matmul_into(&mut scr.dqc, &scr.d_attn, kc, true);
-
-            // dK = dAttnᵀ Q + U̅ dSᵀ — must see dS *before* the carry update
-            scr.dkc.reset(c, dk);
-            matmul_tn_acc(&mut scr.dkc, &scr.d_attn, qc);
-            matmul_nt_into(&mut scr.dkc, &scr.u_bar, &ds, true);
-
-            // dW = −dU̅ S_inᵀ; dU aliases dU̅
-            matmul_nt_into(&mut scr.dw, &scr.du_bar, s_in, false);
-            for x in scr.dw.data.iter_mut() {
-                *x = -*x;
-            }
-
-            // dT = dW Kᵦᵀ + dU Vᵦᵀ
-            matmul_nt_into(&mut scr.dt, &scr.dw, &scr.kb, false);
-            matmul_nt_into(&mut scr.dt, &scr.du_bar, &scr.vb, true);
-
-            // dA = −tril((I+A)⁻ᵀ dT (I+A)⁻ᵀ, −1): two triangular solves
-            // instead of three dense products with the explicit inverse
-            solve_unit_lower_t_into(&mut scr.sol, &scr.a, &scr.dt);
-            transpose_into(&mut scr.solt, &scr.sol);
-            solve_unit_lower_in_place(&scr.a, &mut scr.solt);
-            scr.da.reset(c, c);
-            for i in 0..c {
-                for j in 0..i {
-                    scr.da[(i, j)] = -scr.solt[(j, i)];
-                }
-            }
-
-            // dKᵦ = Tᵀ dW + dA K,  dVᵦ = Tᵀ dU
-            scr.dkb.reset(c, dk);
-            matmul_tn_acc(&mut scr.dkb, &scr.t, &scr.dw);
-            matmul_into(&mut scr.dkb, &scr.da, kc, true);
-            scr.dvb.reset(c, dv);
-            matmul_tn_acc(&mut scr.dvb, &scr.t, &scr.du_bar);
-
-            // dK += dAᵀ Kᵦ + diag(β) dKᵦ,  dV = diag(β) dVᵦ,  dβ from Kᵦ/Vᵦ
-            matmul_tn_acc(&mut scr.dkc, &scr.da, &scr.kb);
-            scr.dvc.reset(c, dv);
-            for i in 0..c {
-                let b = bc[i];
-                for (x, &g) in
-                    scr.dkc.row_mut(i).iter_mut().zip(scr.dkb.row(i))
-                {
-                    *x += b * g;
-                }
-                for (x, &g) in
-                    scr.dvc.row_mut(i).iter_mut().zip(scr.dvb.row(i))
-                {
-                    *x = b * g;
-                }
-                dbeta[t0 + i] = simd::dot(scr.dkb.row(i), kc.row(i))
-                    + simd::dot(scr.dvb.row(i), vc.row(i));
-            }
-
-            dq.data[t0 * dk..(t0 + c) * dk].copy_from_slice(&scr.dqc.data);
-            dk_out.data[t0 * dk..(t0 + c) * dk]
-                .copy_from_slice(&scr.dkc.data);
-            dv_out.data[t0 * dv..(t0 + c) * dv]
-                .copy_from_slice(&scr.dvc.data);
-
-            // carry: dS ← dS + Qᵀ dO − Wᵀ dU̅ (last — earlier terms need old dS)
-            matmul_tn_acc(&mut ds, qc, d_oc);
-            scr.wtd.reset(dk, dv);
-            matmul_tn_acc(&mut scr.wtd, &scr.w, &scr.du_bar);
-            sub_in_place(&mut ds, &scr.wtd);
-        }
-    });
-
-    let bm = bwd_counters();
-    bm.calls.inc();
-    bm.chunks.add(n_chunks as u64);
-    bm.flops.add(flops);
-    // checkpoint pre-pass re-reads the inputs, gradients are written: ~3×
-    bm.bytes.add(3 * forward_bytes(l, dk, dv));
-
-    Gradients { dq, dk: dk_out, dv: dv_out, dbeta, dstate: ds }
+    note_backward(l, chunk, dk, dv);
+    Gradients { dq, dk: dk_out, dv: dv_out, dbeta, dstate: seq.dstate() }
 }
 
 impl HeadProblem {
@@ -281,46 +422,172 @@ impl HeadProblem {
     }
 }
 
-/// Backward for every problem on an existing pool, one scoped job per
-/// (batch, head) problem; results come back in problem order.  `d_o` must
-/// parallel `problems`; `d_state` is optional per-problem final-state
-/// gradients (None = zeros for all).
+/// Add one sequence's backward tasks to the DAG: FA per chunk → {forward
+/// state scan, reverse gradient scan} → C per chunk.  The two phase-B
+/// scans are independent of each other and run concurrently.
+fn build_backward_tasks<'env>(
+    dag: &mut TaskDag<'env>,
+    p: &'env HeadProblem,
+    d_o: &'env Mat,
+    d_state: Option<&'env Mat>,
+    chunk: usize,
+    buf: &mut SeqBuffers,
+    out: &mut Gradients,
+) {
+    validate_backward_inputs(&p.q, &p.k, &p.v, &p.beta, chunk,
+                             p.initial_state.as_ref(), d_o, d_state);
+    let (l, dk, dv) = (p.q.rows, p.q.cols, p.v.cols);
+    let n = buf.n_chunks;
+    debug_assert_eq!(n, l.div_ceil(chunk));
+    // Disjoint raw views of the shared per-sequence buffers, all derived
+    // from one base pointer per array; the DAG edges serialize every
+    // cross-task access (see build_forward_tasks in batch.rs).
+    let w_all = RawRange::of(&mut buf.w);
+    let u_all = RawRange::of(&mut buf.u);
+    let p_all = RawRange::of(&mut buf.p);
+    let g_all = RawRange::of(&mut buf.g);
+    let h_all = RawRange::of(&mut buf.h);
+    let states_all = RawRange::of(&mut buf.states);
+    let dsb_all = RawRange::of(&mut buf.dsb);
+    let dq_all = RawRange::of(&mut out.dq.data);
+    let dk_all = RawRange::of(&mut out.dk.data);
+    let dv_all = RawRange::of(&mut out.dv.data);
+    let dbeta_all = RawRange::of(&mut out.dbeta);
+
+    // Phase A: one independent recompute task per chunk
+    let a_ids: Vec<usize> = (0..n)
+        .map(|ci| {
+            let t0 = ci * chunk;
+            let c = chunk.min(l - t0);
+            let w = w_all.sub(t0 * dk, c * dk);
+            let u = u_all.sub(t0 * dv, c * dv);
+            let pp = p_all.sub(ci * dk * dk, dk * dk);
+            let g = g_all.sub(ci * dk * dv, dk * dv);
+            let h = h_all.sub(ci * dk * dv, dk * dv);
+            dag.add(&[], move || {
+                let _sp = obs::trace::span("kernel.backward.chunk");
+                // SAFETY: sole writer of these chunk-local ranges; the
+                // phase-B/C readers depend on this task
+                unsafe {
+                    bwd_phase_a_chunk(&p.q, &p.k, &p.v, &p.beta, d_o, t0,
+                                      c, w.slice_mut(), u.slice_mut(),
+                                      pp.slice_mut(), g.slice_mut(),
+                                      h.slice_mut());
+                }
+            })
+        })
+        .collect();
+
+    // Phase B: the two per-sequence scans, concurrent with each other
+    let init = p.initial_state.as_ref();
+    let fb = dag.add(&a_ids, move || {
+        let _sp = obs::trace::span("kernel.backward.scan");
+        // SAFETY: every phase-A writer of p/g is a dependency; sole
+        // writer of states (the reverse scan writes dsb, not states)
+        unsafe {
+            scan_states(p_all.slice(), g_all.slice(), n, dk, dv, init,
+                        states_all.slice_mut());
+        }
+    });
+    let rb = dag.add(&a_ids, move || {
+        let _sp = obs::trace::span("kernel.backward.scan");
+        // SAFETY: every phase-A writer of p/h is a dependency; sole
+        // writer of dsb (shared read of p with the forward scan is fine)
+        unsafe {
+            scan_dstates(p_all.slice(), h_all.slice(), n, dk, dv, d_state,
+                         dsb_all.slice_mut());
+        }
+    });
+
+    // Phase C: per-chunk input gradients once both scans are in
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let w = w_all.sub(t0 * dk, c * dk);
+        let u = u_all.sub(t0 * dv, c * dv);
+        let s_in = states_all.sub(ci * dk * dv, dk * dv);
+        let ds = dsb_all.sub((ci + 1) * dk * dv, dk * dv);
+        let dq = dq_all.sub(t0 * dk, c * dk);
+        let dkr = dk_all.sub(t0 * dk, c * dk);
+        let dvr = dv_all.sub(t0 * dv, c * dv);
+        let db = dbeta_all.sub(t0, c);
+        dag.add(&[fb, rb], move || {
+            let _sp = obs::trace::span("kernel.backward.grad");
+            // SAFETY: w/u/states/dsb are read-only now (their writers are
+            // upstream dependencies); sole writer of these gradient ranges
+            unsafe {
+                bwd_phase_c_chunk(&p.q, &p.k, &p.v, &p.beta, d_o, t0, c,
+                                  w.slice(), u.slice(), s_in.slice(),
+                                  ds.slice(), dq.slice_mut(),
+                                  dkr.slice_mut(), dvr.slice_mut(),
+                                  db.slice_mut());
+            }
+        });
+    }
+}
+
+/// Backward for every problem on an existing pool, DAG-scheduled over
+/// every (batch, head, chunk) task; results come back in problem order.
+/// `d_o` must parallel `problems`; `d_state` is optional per-problem
+/// final-state gradients (None = zeros for all).
 pub fn backward_batched_on(pool: &ThreadPool, problems: &[HeadProblem],
                            d_o: &[Mat], d_state: Option<&[Mat]>,
                            chunk: usize) -> Vec<Gradients> {
+    assert!(chunk > 0, "chunk must be positive");
     assert_eq!(problems.len(), d_o.len(), "one d_o per problem");
     if let Some(dsn) = d_state {
         assert_eq!(problems.len(), dsn.len(), "one d_state per problem");
     }
     let _sp = obs::trace::span_with("kernel.batch", || {
         vec![("problems", problems.len() as f64),
-             ("threads", pool.size() as f64)]
+             ("threads", pool.size() as f64),
+             ("tasks", task_count(problems, chunk) as f64)]
     });
-    let mut slots: Vec<Option<Gradients>> = Vec::new();
-    slots.resize_with(problems.len(), || None);
-    pool.scope(|s| {
-        for (i, (slot, p)) in slots.iter_mut().zip(problems).enumerate() {
-            let go = &d_o[i];
-            let gs = d_state.map(|dsn| &dsn[i]);
-            s.spawn(move || {
-                let _head_sp = obs::trace::span("kernel.head");
-                *slot = Some(p.backward(chunk, go, gs));
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|r| r.expect("scope joined every job"))
-        .collect()
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let mut outs: Vec<Gradients> = problems
+        .iter()
+        .map(|p| Gradients {
+            dq: Mat::zeros(p.q.rows, p.q.cols),
+            dk: Mat::zeros(p.q.rows, p.q.cols),
+            dv: Mat::zeros(p.q.rows, p.v.cols),
+            dbeta: vec![0.0; p.q.rows],
+            dstate: Mat::zeros(0, 0),
+        })
+        .collect();
+    let mut bufs: Vec<SeqBuffers> = problems
+        .iter()
+        .map(|p| {
+            SeqBuffers::backward(p.q.rows, p.q.cols, p.v.cols,
+                                 p.q.rows.div_ceil(chunk))
+        })
+        .collect();
+    let mut dag = TaskDag::new();
+    for (i, (p, (buf, out))) in problems
+        .iter()
+        .zip(bufs.iter_mut().zip(outs.iter_mut()))
+        .enumerate()
+    {
+        build_backward_tasks(&mut dag, p, &d_o[i],
+                             d_state.map(|dsn| &dsn[i]), chunk, buf, out);
+        note_backward(p.q.rows, chunk, p.q.cols, p.v.cols);
+    }
+    pool.run_dag(dag);
+    for (g, buf) in outs.iter_mut().zip(&bufs) {
+        g.dstate = buf.dstate();
+    }
+    outs
 }
 
 /// Backward for every problem, spinning up a pool sized to `cfg.threads`
-/// (capped at the number of problems) — the companion of
+/// capped at the total (batch, head, chunk) task count — the companion of
 /// [`super::batch::forward_batched`].
 pub fn backward_batched(problems: &[HeadProblem], d_o: &[Mat],
                         d_state: Option<&[Mat]>, cfg: &KernelConfig)
                         -> Vec<Gradients> {
-    let threads = cfg.threads.max(1).min(problems.len().max(1));
+    let threads =
+        cfg.threads.max(1).min(task_count(problems, cfg.chunk).max(1));
     if threads <= 1 {
         assert_eq!(problems.len(), d_o.len(), "one d_o per problem");
         return problems

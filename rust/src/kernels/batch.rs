@@ -1,23 +1,42 @@
-//! Batched multi-head fan-out: one chunkwise forward per (batch, head)
-//! problem, scheduled on the scoped thread pool.
+//! Batched fan-out of the sequence-parallel chunkwise kernels: one DAG
+//! task per (batch, head, chunk) within each phase, scheduled on
+//! [`ThreadPool::run_dag`].
 //!
 //! Every (b, h) slice of a multi-head DeltaNet forward is an independent
-//! sequence problem (heads never mix inside the sequence-mixing layer), so
-//! the batch dimension is embarrassingly parallel — exactly how the Pallas
-//! kernel grids over (batch, head) on the accelerator.
+//! sequence problem (heads never mix inside the sequence-mixing layer),
+//! and within each problem the three-phase decomposition (see
+//! [`super::chunkwise`]) makes every *chunk* of phase A and phase C an
+//! independent task too.  The schedulable width is therefore
+//! B×H×⌈L/C⌉, not B×H — a single long sequence (B=1) saturates the pool
+//! just as well as a wide batch.  Per problem the DAG is
+//!
+//! ```text
+//!   A_0 … A_{n-1}  ──►  B (state scan)  ──►  C_0 … C_{n-1}
+//! ```
+//!
+//! with no edges between problems, so chunk tasks of different
+//! (batch, head) problems interleave freely; a finished scan releases its
+//! own C wave while other problems are still in phase A.
 //!
 //! Each pool worker owns a thread-local [`super::ChunkWorkspace`]
-//! (`workspace::with_thread_workspace`), so concurrent head problems reuse
-//! per-thread scratch buffers with no sharing or locking — the chunk loops
-//! stay allocation-free no matter how many heads land on one worker.
+//! (`workspace::with_thread_workspace`), so concurrent tasks reuse
+//! per-thread scratch buffers with no sharing or locking — the phase
+//! kernels stay allocation-free no matter how many tasks land on one
+//! worker.  Cross-task data flows through one [`super::chunkwise::SeqBuffers`]
+//! per problem (the shared chunk-state checkpoint buffer), handed between
+//! tasks as raw disjoint ranges ([`RawRange`]) whose accesses the DAG
+//! edges serialize.
 
 use std::sync::OnceLock;
 
 use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::Mat;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{TaskDag, ThreadPool};
 
-use super::chunkwise::chunkwise_forward;
+use super::chunkwise::{
+    chunkwise_forward, note_forward, phase_a_chunk, phase_c_chunk,
+    scan_states, validate_forward_inputs, SeqBuffers,
+};
 use super::{Forward, KernelConfig};
 
 fn head_problems_counter() -> &'static Counter {
@@ -47,12 +66,142 @@ impl HeadProblem {
     }
 }
 
+/// Total schedulable tasks of one phase of the decomposition: one task
+/// per (batch, head, chunk) triple.  This is the width that bounds useful
+/// parallelism — NOT `problems.len()`.
+pub(crate) fn task_count(problems: &[HeadProblem], chunk: usize) -> usize {
+    problems.iter().map(|p| p.q.rows.div_ceil(chunk.max(1))).sum()
+}
+
+/// An unchecked `*mut f32` range into a buffer that outlives the DAG run.
+/// Built from one base pointer per buffer (so every subrange shares its
+/// provenance) and materialized back into slices inside tasks; the DAG
+/// edges must serialize every writer-before-reader pair, and concurrent
+/// tasks must hold disjoint ranges.
+#[derive(Clone, Copy)]
+pub(crate) struct RawRange {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: a RawRange is just an address+length; the scheduling discipline
+// above (disjoint ranges within a phase, DAG edges across phases, and the
+// run_dag join before the owning buffer is touched again) makes the
+// cross-thread accesses race-free.
+unsafe impl Send for RawRange {}
+unsafe impl Sync for RawRange {}
+
+impl RawRange {
+    pub(crate) fn of(s: &mut [f32]) -> Self {
+        RawRange { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// The subrange `[at, at + len)` of this range.
+    pub(crate) fn sub(self, at: usize, len: usize) -> Self {
+        assert!(at + len <= self.len, "RawRange::sub out of bounds");
+        // in-bounds of the same contiguous buffer, so the add is valid
+        RawRange { ptr: unsafe { self.ptr.add(at) }, len }
+    }
+
+    /// # Safety
+    /// No concurrent task may write this range, and its writer (if any)
+    /// must be an upstream DAG dependency.
+    pub(crate) unsafe fn slice<'a>(self) -> &'a [f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// # Safety
+    /// This task must be the sole accessor of the range until a
+    /// downstream dependent reads it.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_mut<'a>(self) -> &'a mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+/// Add one sequence's forward tasks to the DAG: A per chunk → state scan
+/// → C per chunk.
+fn build_forward_tasks<'env>(
+    dag: &mut TaskDag<'env>,
+    p: &'env HeadProblem,
+    chunk: usize,
+    buf: &mut SeqBuffers,
+    o: &mut Mat,
+) {
+    validate_forward_inputs(&p.q, &p.k, &p.v, &p.beta, chunk,
+                            p.initial_state.as_ref());
+    let (l, dk, dv) = (p.q.rows, p.q.cols, p.v.cols);
+    let n = buf.n_chunks;
+    debug_assert_eq!(n, l.div_ceil(chunk));
+    let w_all = RawRange::of(&mut buf.w);
+    let u_all = RawRange::of(&mut buf.u);
+    let p_all = RawRange::of(&mut buf.p);
+    let g_all = RawRange::of(&mut buf.g);
+    let states_all = RawRange::of(&mut buf.states);
+    let o_all = RawRange::of(&mut o.data);
+
+    // Phase A: one independent task per chunk
+    let a_ids: Vec<usize> = (0..n)
+        .map(|ci| {
+            let t0 = ci * chunk;
+            let c = chunk.min(l - t0);
+            let w = w_all.sub(t0 * dk, c * dk);
+            let u = u_all.sub(t0 * dv, c * dv);
+            let pp = p_all.sub(ci * dk * dk, dk * dk);
+            let g = g_all.sub(ci * dk * dv, dk * dv);
+            dag.add(&[], move || {
+                let _sp = obs::trace::span("kernel.chunkwise.chunk");
+                // SAFETY: sole writer of these chunk-local ranges; the
+                // phase-B/C readers depend on this task
+                unsafe {
+                    phase_a_chunk(&p.k, &p.v, &p.beta, t0, c,
+                                  w.slice_mut(), u.slice_mut(),
+                                  pp.slice_mut(), g.slice_mut());
+                }
+            })
+        })
+        .collect();
+
+    // Phase B: the per-sequence inter-chunk state scan
+    let init = p.initial_state.as_ref();
+    let b_id = dag.add(&a_ids, move || {
+        let _sp = obs::trace::span("kernel.chunkwise.scan");
+        // SAFETY: every phase-A writer of p/g is a dependency; sole
+        // writer of states
+        unsafe {
+            scan_states(p_all.slice(), g_all.slice(), n, dk, dv, init,
+                        states_all.slice_mut());
+        }
+    });
+
+    // Phase C: per-chunk outputs from the propagated entry states
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let w = w_all.sub(t0 * dk, c * dk);
+        let u = u_all.sub(t0 * dv, c * dv);
+        let s_in = states_all.sub(ci * dk * dv, dk * dv);
+        let o_r = o_all.sub(t0 * dv, c * dv);
+        dag.add(&[b_id], move || {
+            let _sp = obs::trace::span("kernel.chunkwise.output");
+            // SAFETY: w/u/states are read-only now (their writers are
+            // upstream dependencies); sole writer of this output range
+            unsafe {
+                phase_c_chunk(&p.q, &p.k, t0, c, w.slice(), u.slice(),
+                              s_in.slice(), o_r.slice_mut());
+            }
+        });
+    }
+}
+
 /// Forward every problem, spinning up a pool sized to `cfg.threads`
-/// (capped at the number of problems).  Use [`forward_batched_on`] to
-/// amortize the pool across calls.
+/// capped at the total (batch, head, chunk) task count — a single
+/// sequence still fans out across all its chunks.  Use
+/// [`forward_batched_on`] to amortize the pool across calls.
 pub fn forward_batched(problems: &[HeadProblem], cfg: &KernelConfig)
                        -> Vec<Forward> {
-    let threads = cfg.threads.max(1).min(problems.len().max(1));
+    let threads =
+        cfg.threads.max(1).min(task_count(problems, cfg.chunk).max(1));
     if threads <= 1 {
         return problems.iter().map(|p| p.forward(cfg.chunk)).collect();
     }
@@ -60,11 +209,44 @@ pub fn forward_batched(problems: &[HeadProblem], cfg: &KernelConfig)
     forward_batched_on(&pool, problems, cfg.chunk)
 }
 
-/// Forward every problem on an existing pool; returns results in problem
-/// order.  The scope inside joins all per-head jobs before returning.
+/// Forward every problem on an existing pool, DAG-scheduled over every
+/// (batch, head, chunk) task; returns results in problem order.  The DAG
+/// run joins all tasks before returning.
 pub fn forward_batched_on(pool: &ThreadPool, problems: &[HeadProblem],
                           chunk: usize) -> Vec<Forward> {
-    map_batched_on(pool, problems, |p| p.forward(chunk))
+    assert!(chunk > 0, "chunk must be positive");
+    let _sp = obs::trace::span_with("kernel.batch", || {
+        vec![("problems", problems.len() as f64),
+             ("threads", pool.size() as f64),
+             ("tasks", task_count(problems, chunk) as f64)]
+    });
+    head_problems_counter().add(problems.len() as u64);
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let mut outs: Vec<Mat> = problems
+        .iter()
+        .map(|p| Mat::zeros(p.q.rows, p.v.cols))
+        .collect();
+    let mut bufs: Vec<SeqBuffers> = problems
+        .iter()
+        .map(|p| {
+            SeqBuffers::forward(p.q.rows, p.q.cols, p.v.cols,
+                                p.q.rows.div_ceil(chunk))
+        })
+        .collect();
+    let mut dag = TaskDag::new();
+    for (p, (buf, o)) in
+        problems.iter().zip(bufs.iter_mut().zip(outs.iter_mut()))
+    {
+        build_forward_tasks(&mut dag, p, chunk, buf, o);
+        note_forward(p.q.rows, chunk, p.q.cols, p.v.cols);
+    }
+    pool.run_dag(dag);
+    bufs.into_iter()
+        .zip(outs)
+        .map(|(buf, o)| Forward { o, state: buf.final_state() })
+        .collect()
 }
 
 /// One job per problem on the pool, any per-problem computation (the
@@ -156,5 +338,19 @@ mod tests {
             assert_eq!(x.o.data, y.o.data);
             assert_eq!(x.state.data, y.state.data);
         }
+    }
+
+    #[test]
+    fn single_problem_fans_out_over_chunks() {
+        // B=1, H=1: the old per-head fan-out would cap threads at 1; the
+        // task count is now the chunk count, and an oversubscribed pool
+        // must still produce the sequential result bit-for-bit
+        let ps = problems(1, 96, 8);
+        let single = ps[0].forward(8);
+        let cfg = KernelConfig { chunk: 8, threads: 8 };
+        assert_eq!(task_count(&ps, cfg.chunk), 12);
+        let outs = forward_batched(&ps, &cfg);
+        assert_eq!(outs[0].o.data, single.o.data);
+        assert_eq!(outs[0].state.data, single.state.data);
     }
 }

@@ -12,21 +12,49 @@
 //!   S += Kᵀ U̅                               inter-chunk recurrence
 //! ```
 //!
+//! The kernel is factored into the paper's *sequence-parallel* three-phase
+//! form rather than one fused chunk loop.  Substituting U̅ = U − W S_in
+//! into the state update gives an affine inter-chunk recurrence
+//!
+//! ```text
+//!   S_out = (I − Kᵀ W) S_in + Kᵀ U  =  P S_in + G
+//! ```
+//!
+//! whose coefficients P ([dk,dk]) and G ([dk,dv]) depend only on the
+//! chunk's own tokens.  That splits the work into
+//!
+//!   * **Phase A** ([`phase_a_chunk`]): per-chunk UT transform producing
+//!     W, U, P, G — independent across every chunk of every sequence,
+//!   * **Phase B** ([`scan_states`]): the per-sequence state scan
+//!     `S_{i+1} = P_i S_i + G_i` — only state-size matmuls, sequential in
+//!     the chunk index but concurrent across sequences,
+//!   * **Phase C** ([`phase_c_chunk`]): per-chunk outputs from the
+//!     propagated entry state — independent across all chunks again.
+//!
+//! [`chunkwise_forward`] runs the same three phases in order on the
+//! calling thread (so single-sequence results are bit-identical to the
+//! DAG-scheduled path in `kernels::batch`, which fans A and C out over
+//! every (batch, head, chunk) task).  All per-chunk intermediates live in
+//! the per-thread [`ChunkWorkspace`]; the per-sequence W/U/P/G/state
+//! buffers are one exact-sized [`SeqBuffers`] allocation per call, so
+//! steady-state chunk work stays allocation-free
+//! (`tests/alloc_steady.rs`).
+//!
 //! Differences from the scalar oracle (`reference::delta_chunkwise_scalar`):
 //! the causal products materialize only their triangle, every matmul is
-//! blocked/accumulating, the chunk loop reuses one set of intermediates,
-//! and a trailing partial chunk (L % C ≠ 0) is supported.
+//! blocked/accumulating, and a trailing partial chunk (L % C ≠ 0) is
+//! supported.
 
 use std::sync::OnceLock;
 
 use crate::obs::{self, metrics::{counter, Counter}};
 use crate::tensor::blocked::{
-    matmul_into, matmul_tn_acc, scale_rows_into, sub_in_place,
+    copy_into, matmul_into, matmul_tn_acc, scale_rows_into, sub_in_place,
     tril_matmul_nt_into, tri_inv_unit_lower_into,
 };
-use crate::tensor::{simd, Mat};
+use crate::tensor::{simd, Mat, MatRef};
 
-use super::workspace::with_thread_workspace;
+use super::workspace::{with_thread_workspace, ChunkWorkspace};
 use super::Forward;
 
 /// Work counters for the forward kernel, interned once.
@@ -60,12 +88,15 @@ fn rec_counters() -> &'static RecCounters {
     })
 }
 
-/// Estimated FLOPs of one forward chunk (2mnk per dense matmul, triangle
-/// products at half, c³/3 for the unit-lower inverse) — an estimate for
-/// roofline-style ratios, not an exact op count.
+/// Estimated FLOPs of one forward chunk in the three-phase form (2mnk per
+/// dense matmul, triangle products at half, c³/3 for the unit-lower
+/// inverse, plus the P/G scan coefficients and the chunk's share of the
+/// phase-B scan) — an estimate for roofline-style ratios, not an exact op
+/// count.
 pub(crate) fn chunk_flops(c: usize, dk: usize, dv: usize) -> u64 {
     let (c, dk, dv) = (c as u64, dk as u64, dv as u64);
     4 * c * c * (dk + dv) + c * c * c / 3 + 6 * c * dk * dv
+        + 2 * c * dk * dk + 2 * dk * dk * dv
 }
 
 /// Estimated f32 bytes moved by one forward call (inputs + outputs +
@@ -74,8 +105,271 @@ pub(crate) fn forward_bytes(l: usize, dk: usize, dv: usize) -> u64 {
     (4 * (2 * l * dk + 2 * l * dv + l + 2 * dk * dv)) as u64
 }
 
+/// Bump the forward work counters for one sequence — shared by the
+/// sequential entry point and the DAG-scheduled batch path.
+pub(crate) fn note_forward(l: usize, chunk: usize, dk: usize, dv: usize) {
+    let m = fwd_counters();
+    m.calls.inc();
+    let mut flops = 0u64;
+    let mut nchunks = 0u64;
+    let mut t0 = 0;
+    while t0 < l {
+        let c = chunk.min(l - t0);
+        flops += chunk_flops(c, dk, dv);
+        nchunks += 1;
+        t0 += c;
+    }
+    m.chunks.add(nchunks);
+    m.flops.add(flops);
+    m.bytes.add(forward_bytes(l, dk, dv));
+}
+
+/// Per-sequence buffers of the three-phase decomposition: the phase-A
+/// outputs (W, U, the scan coefficients P, G) and the propagated chunk
+/// boundary states — the shared checkpoint buffer the DAG tasks hand each
+/// other.  One exact-sized allocation set per kernel call; the count is
+/// independent of the number of chunks (pinned by `tests/alloc_steady.rs`).
+pub(crate) struct SeqBuffers {
+    /// W rows for every token: `[L, dk]`.
+    pub(crate) w: Vec<f32>,
+    /// U rows for every token (pre state-fold, i.e. T·diag(β)V): `[L, dv]`.
+    pub(crate) u: Vec<f32>,
+    /// Scan transition P = I − KᵀW per chunk: `[n, dk, dk]`.
+    pub(crate) p: Vec<f32>,
+    /// Scan offset G = KᵀU per chunk: `[n, dk, dv]`.
+    pub(crate) g: Vec<f32>,
+    /// Chunk boundary states: `states[i]` enters chunk i; `[n+1, dk, dv]`.
+    pub(crate) states: Vec<f32>,
+    /// Reverse-scan source H = QᵀdO − Wᵀ(AttnᵀdO) per chunk (backward
+    /// only): `[n, dk, dv]`.
+    pub(crate) h: Vec<f32>,
+    /// State gradients: `dsb[i]` = dL/dS entering chunk i, `dsb[n]` =
+    /// d_state (backward only): `[n+1, dk, dv]`.
+    pub(crate) dsb: Vec<f32>,
+    pub(crate) n_chunks: usize,
+    dk: usize,
+    dv: usize,
+}
+
+impl SeqBuffers {
+    pub(crate) fn forward(l: usize, dk: usize, dv: usize, n: usize) -> Self {
+        SeqBuffers {
+            w: vec![0.0; l * dk],
+            u: vec![0.0; l * dv],
+            p: vec![0.0; n * dk * dk],
+            g: vec![0.0; n * dk * dv],
+            states: vec![0.0; (n + 1) * dk * dv],
+            h: Vec::new(),
+            dsb: Vec::new(),
+            n_chunks: n,
+            dk,
+            dv,
+        }
+    }
+
+    pub(crate) fn backward(l: usize, dk: usize, dv: usize, n: usize) -> Self {
+        let mut b = Self::forward(l, dk, dv, n);
+        b.h = vec![0.0; n * dk * dv];
+        b.dsb = vec![0.0; (n + 1) * dk * dv];
+        b
+    }
+
+    /// The state after the last chunk.
+    pub(crate) fn final_state(&self) -> Mat {
+        let sdv = self.dk * self.dv;
+        Mat {
+            rows: self.dk,
+            cols: self.dv,
+            data: self.states[self.n_chunks * sdv..].to_vec(),
+        }
+    }
+
+    /// The gradient w.r.t. the initial state (backward only).
+    pub(crate) fn dstate(&self) -> Mat {
+        Mat {
+            rows: self.dk,
+            cols: self.dv,
+            data: self.dsb[..self.dk * self.dv].to_vec(),
+        }
+    }
+}
+
+/// Phase A, workspace-explicit core: the UT transform of chunk
+/// `[t0, t0+c)` plus the scan coefficients.  On return the workspace
+/// additionally holds `kb/vb/a/t` for callers (the backward recompute)
+/// that extend the chunk computation without re-acquiring the thread
+/// workspace.
+pub(crate) fn phase_a_core(
+    scr: &mut ChunkWorkspace,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    t0: usize,
+    c: usize,
+    w_out: &mut [f32],
+    u_out: &mut [f32],
+    p_out: &mut [f32],
+    g_out: &mut [f32],
+) {
+    let (dk, dv) = (k.cols, v.cols);
+    debug_assert_eq!(w_out.len(), c * dk);
+    debug_assert_eq!(u_out.len(), c * dv);
+    debug_assert_eq!(p_out.len(), dk * dk);
+    debug_assert_eq!(g_out.len(), dk * dv);
+    let kc = k.rows_window(t0, c);
+    let vc = v.rows_window(t0, c);
+    let bc = &beta[t0..t0 + c];
+
+    // UT transform: T = (I + tril(diag(β)KKᵀ, −1))⁻¹, W/U = T·diag(β)·{K,V}
+    scale_rows_into(&mut scr.kb, kc, bc);
+    scale_rows_into(&mut scr.vb, vc, bc);
+    tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
+    tri_inv_unit_lower_into(&mut scr.t, &scr.a);
+    matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
+    matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
+
+    // scan coefficients: P = I − KᵀW, G = KᵀU
+    scr.pc.reset(dk, dk);
+    matmul_tn_acc(&mut scr.pc, kc, &scr.w);
+    for x in scr.pc.data.iter_mut() {
+        *x = -*x;
+    }
+    for i in 0..dk {
+        scr.pc[(i, i)] += 1.0;
+    }
+    scr.gc.reset(dk, dv);
+    matmul_tn_acc(&mut scr.gc, kc, &scr.u_bar);
+
+    w_out.copy_from_slice(&scr.w.data);
+    u_out.copy_from_slice(&scr.u_bar.data);
+    p_out.copy_from_slice(&scr.pc.data);
+    g_out.copy_from_slice(&scr.gc.data);
+}
+
+/// Phase A for one chunk, on this thread's workspace.  Independent of
+/// every other chunk — the DAG schedules one such task per
+/// (batch, head, chunk).
+pub(crate) fn phase_a_chunk(
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    t0: usize,
+    c: usize,
+    w_out: &mut [f32],
+    u_out: &mut [f32],
+    p_out: &mut [f32],
+    g_out: &mut [f32],
+) {
+    with_thread_workspace(|scr| {
+        phase_a_core(scr, k, v, beta, t0, c, w_out, u_out, p_out, g_out);
+    });
+}
+
+/// Phase B: propagate the inter-chunk states `S_{i+1} = P_i S_i + G_i`.
+/// `states` gets all n+1 chunk boundary states (`states[0]` = initial).
+/// Per sequence this is n state-size matmuls — the only sequential part
+/// of the decomposition.
+pub(crate) fn scan_states(
+    p: &[f32],
+    g: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    initial_state: Option<&Mat>,
+    states: &mut [f32],
+) {
+    let sdv = dk * dv;
+    debug_assert_eq!(p.len(), n * dk * dk);
+    debug_assert_eq!(g.len(), n * sdv);
+    debug_assert_eq!(states.len(), (n + 1) * sdv);
+    match initial_state {
+        Some(s0) => {
+            debug_assert_eq!((s0.rows, s0.cols), (dk, dv));
+            states[..sdv].copy_from_slice(&s0.data);
+        }
+        None => states[..sdv].fill(0.0),
+    }
+    with_thread_workspace(|scr| {
+        for ci in 0..n {
+            let (done, rest) = states.split_at_mut((ci + 1) * sdv);
+            let s_in =
+                MatRef { rows: dk, cols: dv, data: &done[ci * sdv..] };
+            let p_i = MatRef {
+                rows: dk,
+                cols: dk,
+                data: &p[ci * dk * dk..(ci + 1) * dk * dk],
+            };
+            matmul_into(&mut scr.sc, p_i, s_in, false);
+            let out = &mut rest[..sdv];
+            out.copy_from_slice(&g[ci * sdv..(ci + 1) * sdv]);
+            for (x, &y) in out.iter_mut().zip(&scr.sc.data) {
+                *x += y;
+            }
+        }
+    });
+}
+
+/// Phase C: outputs of chunk `[t0, t0+c)` from its propagated entry state
+/// — `U̅ = U − W S_in`, `O = Q S_in + tril(QKᵀ) U̅`.  Independent across
+/// chunks once phase B has filled `states`.
+pub(crate) fn phase_c_chunk(
+    q: &Mat,
+    k: &Mat,
+    t0: usize,
+    c: usize,
+    w_c: &[f32],
+    u_c: &[f32],
+    s_in: &[f32],
+    o_out: &mut [f32],
+) {
+    let dk = q.cols;
+    debug_assert_eq!(w_c.len(), c * dk);
+    let dv = u_c.len() / c.max(1);
+    debug_assert_eq!(s_in.len(), dk * dv);
+    debug_assert_eq!(o_out.len(), c * dv);
+    let qc = q.rows_window(t0, c);
+    let kc = k.rows_window(t0, c);
+    let w = MatRef { rows: c, cols: dk, data: w_c };
+    let u = MatRef { rows: c, cols: dv, data: u_c };
+    let s = MatRef { rows: dk, cols: dv, data: s_in };
+    with_thread_workspace(|scr| {
+        // U̅ = U − W S_in
+        copy_into(&mut scr.u_bar, u);
+        matmul_into(&mut scr.ws, w, s, false);
+        sub_in_place(&mut scr.u_bar, &scr.ws);
+        // O_c = Q_c S_in + tril(Q_c K_cᵀ) U̅
+        tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
+        matmul_into(&mut scr.oc, qc, s, false);
+        matmul_into(&mut scr.oc, &scr.attn, &scr.u_bar, true);
+        o_out.copy_from_slice(&scr.oc.data);
+    });
+}
+
+pub(crate) fn validate_forward_inputs(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    beta: &[f32],
+    chunk: usize,
+    initial_state: Option<&Mat>,
+) {
+    let (l, dk) = (q.rows, q.cols);
+    assert!(chunk > 0, "chunk must be positive");
+    assert_eq!(k.rows, l, "k rows");
+    assert_eq!(k.cols, dk, "k cols");
+    assert_eq!(v.rows, l, "v rows");
+    assert_eq!(beta.len(), l, "beta len");
+    if let Some(s0) = initial_state {
+        assert_eq!((s0.rows, s0.cols), (dk, v.cols), "initial state shape");
+    }
+}
+
 /// Chunkwise forward for one sequence.  `q,k: [L,dk]`, `v: [L,dv]`,
 /// `beta: [L]`; `chunk` may not divide L (the tail chunk is shorter).
+///
+/// Runs the three phases sequentially on the calling thread; the batched
+/// DAG path (`kernels::batch::forward_batched_on`) runs the exact same
+/// phase functions, so the two are bit-identical per sequence.
 pub fn chunkwise_forward(
     q: &Mat,
     k: &Mat,
@@ -84,74 +378,52 @@ pub fn chunkwise_forward(
     chunk: usize,
     initial_state: Option<&Mat>,
 ) -> Forward {
+    validate_forward_inputs(q, k, v, beta, chunk, initial_state);
     let (l, dk) = (q.rows, q.cols);
     let dv = v.cols;
-    assert!(chunk > 0, "chunk must be positive");
-    assert_eq!(k.rows, l, "k rows");
-    assert_eq!(k.cols, dk, "k cols");
-    assert_eq!(v.rows, l, "v rows");
-    assert_eq!(beta.len(), l, "beta len");
-    if let Some(s0) = initial_state {
-        assert_eq!((s0.rows, s0.cols), (dk, dv), "initial state shape");
-    }
 
     let _sp = obs::trace::span_with("kernel.chunkwise.forward", || {
         vec![("L", l as f64), ("chunk", chunk as f64),
              ("dk", dk as f64), ("dv", dv as f64)]
     });
 
-    let mut s = initial_state
-        .cloned()
-        .unwrap_or_else(|| Mat::zeros(dk, dv));
+    let n = l.div_ceil(chunk);
+    let mut seq = SeqBuffers::forward(l, dk, dv, n);
     let mut o = Mat::zeros(l, dv);
 
-    let mut flops = 0u64;
-    let mut nchunks = 0u64;
-    // the chunk loop runs entirely inside this thread's workspace: every
-    // intermediate is a reused buffer, every chunk input a borrowed row
-    // window — zero heap allocations at steady state
-    with_thread_workspace(|scr| {
-        let mut t0 = 0;
-        while t0 < l {
-            let c = chunk.min(l - t0);
-            let _chunk_sp = obs::trace::span("kernel.chunkwise.chunk");
-            let qc = q.rows_window(t0, c);
-            let kc = k.rows_window(t0, c);
-            let vc = v.rows_window(t0, c);
-            let bc = &beta[t0..t0 + c];
+    // Phase A: per-chunk UT transform + scan coefficients
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.chunkwise.chunk");
+        phase_a_chunk(k, v, beta, t0, c,
+                      &mut seq.w[t0 * dk..(t0 + c) * dk],
+                      &mut seq.u[t0 * dv..(t0 + c) * dv],
+                      &mut seq.p[ci * dk * dk..(ci + 1) * dk * dk],
+                      &mut seq.g[ci * dk * dv..(ci + 1) * dk * dv]);
+    }
 
-            // UT transform: T = (I + tril(diag(β)KKᵀ, −1))⁻¹, W/U = T·diag(β)·{K,V}
-            scale_rows_into(&mut scr.kb, kc, bc);
-            scale_rows_into(&mut scr.vb, vc, bc);
-            tril_matmul_nt_into(&mut scr.a, &scr.kb, kc, -1);
-            tri_inv_unit_lower_into(&mut scr.t, &scr.a);
-            matmul_into(&mut scr.w, &scr.t, &scr.kb, false);
-            matmul_into(&mut scr.u_bar, &scr.t, &scr.vb, false);
+    // Phase B: inter-chunk state scan
+    {
+        let _scan_sp = obs::trace::span("kernel.chunkwise.scan");
+        scan_states(&seq.p, &seq.g, n, dk, dv, initial_state,
+                    &mut seq.states);
+    }
 
-            // U̅ = U − W S
-            matmul_into(&mut scr.ws, &scr.w, &s, false);
-            sub_in_place(&mut scr.u_bar, &scr.ws);
+    // Phase C: per-chunk outputs from the propagated entry states
+    for ci in 0..n {
+        let t0 = ci * chunk;
+        let c = chunk.min(l - t0);
+        let _chunk_sp = obs::trace::span("kernel.chunkwise.output");
+        phase_c_chunk(q, k, t0, c,
+                      &seq.w[t0 * dk..(t0 + c) * dk],
+                      &seq.u[t0 * dv..(t0 + c) * dv],
+                      &seq.states[ci * dk * dv..(ci + 1) * dk * dv],
+                      &mut o.data[t0 * dv..(t0 + c) * dv]);
+    }
 
-            // O_c = Q_c S + tril(Q_c K_cᵀ) U̅
-            tril_matmul_nt_into(&mut scr.attn, qc, kc, 0);
-            matmul_into(&mut scr.oc, qc, &s, false);
-            matmul_into(&mut scr.oc, &scr.attn, &scr.u_bar, true);
-            o.data[t0 * dv..(t0 + c) * dv].copy_from_slice(&scr.oc.data);
-
-            // S += K_cᵀ U̅
-            matmul_tn_acc(&mut s, kc, &scr.u_bar);
-
-            flops += chunk_flops(c, dk, dv);
-            nchunks += 1;
-            t0 += c;
-        }
-    });
-    let m = fwd_counters();
-    m.calls.inc();
-    m.chunks.add(nchunks);
-    m.flops.add(flops);
-    m.bytes.add(forward_bytes(l, dk, dv));
-    Forward { o, state: s }
+    note_forward(l, chunk, dk, dv);
+    Forward { o, state: seq.final_state() }
 }
 
 /// One recurrent delta-rule step (the decode path): reads `q,k,v` rows for
@@ -278,5 +550,34 @@ mod tests {
                 assert!((a - b).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn scan_coefficients_reproduce_the_state_recurrence() {
+        // P/G from phase A must give the same boundary states the fused
+        // recurrence S += KᵀU̅ produces (here: oracle final state)
+        let (q, k, v, beta) = random_problem(48, 8, 8, 27);
+        let want = delta_recurrent(&q, &k, &v, &beta, None);
+        let got = chunkwise_forward(&q, &k, &v, &beta, 16, None);
+        assert!(got.state.allclose(&want.state, 1e-4, 1e-4));
+        // and a mid-sequence boundary state equals the oracle prefix state
+        let prefix = delta_recurrent(&slice_rows(&q, 0, 32),
+                                     &slice_rows(&k, 0, 32),
+                                     &slice_rows(&v, 0, 32), &beta[..32],
+                                     None);
+        let n = 3;
+        let mut seq = SeqBuffers::forward(48, 8, 8, n);
+        for ci in 0..n {
+            let t0 = ci * 16;
+            phase_a_chunk(&k, &v, &beta, t0, 16,
+                          &mut seq.w[t0 * 8..(t0 + 16) * 8],
+                          &mut seq.u[t0 * 8..(t0 + 16) * 8],
+                          &mut seq.p[ci * 64..(ci + 1) * 64],
+                          &mut seq.g[ci * 64..(ci + 1) * 64]);
+        }
+        scan_states(&seq.p, &seq.g, n, 8, 8, None, &mut seq.states);
+        let s2 = Mat { rows: 8, cols: 8,
+                       data: seq.states[2 * 64..3 * 64].to_vec() };
+        assert!(s2.allclose(&prefix.state, 1e-4, 1e-4));
     }
 }

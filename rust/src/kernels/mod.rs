@@ -7,11 +7,13 @@
 //! a cross-check oracle; this module is the throughput engine:
 //!
 //! ```text
-//!   kernels::batch      [B,H] head problems fanned out over a scoped
-//!        │               worker pool (util::threadpool::ThreadPool::scope)
+//!   kernels::batch      [B,H,⌈L/C⌉] phase tasks scheduled as a DAG on
+//!        │               the worker pool (util::threadpool::run_dag):
+//!        │               per-chunk UT transforms ─► per-sequence state
+//!        │               scan ─► per-chunk outputs
 //!        ▼
-//!   kernels::chunkwise  per-sequence chunkwise forward: intra-chunk UT
-//!        │               transform + inter-chunk state recurrence
+//!   kernels::chunkwise  the three phase kernels + the sequential
+//!        │               per-sequence entry point (same code path)
 //!        ▼
 //!   tensor::blocked     cache-blocked matmul / tril-matmul primitives
 //! ```
@@ -52,7 +54,7 @@ pub struct KernelConfig {
     /// Chunk length C of the chunkwise form (the paper sweeps 16–128;
     /// C=64 is the default operating point).
     pub chunk: usize,
-    /// Worker threads for the [B,H] fan-out.
+    /// Worker threads for the (batch, head, chunk) task fan-out.
     pub threads: usize,
 }
 
@@ -86,7 +88,7 @@ impl KernelConfigBuilder {
         self
     }
 
-    /// Worker threads for the [B,H] fan-out.
+    /// Worker threads for the (batch, head, chunk) task fan-out.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
         self

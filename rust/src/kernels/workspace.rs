@@ -10,10 +10,11 @@
 //! ZERO heap allocations — `tests/alloc_steady.rs` counts them.
 //!
 //! Ownership model: one workspace per thread, fetched by
-//! [`with_thread_workspace`].  The batch layer (`super::batch`) fans head
-//! problems out over pool workers; each worker thread lazily materializes
-//! its own workspace on first use and keeps it for the life of the
-//! thread, so parallel heads never contend and no locking is involved.
+//! [`with_thread_workspace`].  The batch layer (`super::batch`) fans
+//! per-(head, chunk) phase tasks out over pool workers; each worker
+//! thread lazily materializes its own workspace on first use and keeps it
+//! for the life of the thread, so parallel tasks never contend and no
+//! locking is involved.
 
 use std::cell::RefCell;
 
@@ -35,6 +36,14 @@ pub struct ChunkWorkspace {
     pub(crate) ws: Mat,
     pub(crate) attn: Mat,
     pub(crate) oc: Mat,
+    /// Scan transition P = I − KᵀW of the current chunk (phase A).
+    pub(crate) pc: Mat,
+    /// Scan offset G = KᵀU of the current chunk (phase A).
+    pub(crate) gc: Mat,
+    /// State-size product temp of the phase-B scans (P·S / Pᵀ·dS).
+    pub(crate) sc: Mat,
+    /// Reverse-scan source H = QᵀdO − Wᵀ(AttnᵀdO) (backward phase A).
+    pub(crate) hc: Mat,
     // ---- backward
     pub(crate) du_bar: Mat,
     pub(crate) d_attn: Mat,
@@ -49,10 +58,6 @@ pub struct ChunkWorkspace {
     pub(crate) dkb: Mat,
     pub(crate) dvb: Mat,
     pub(crate) wtd: Mat,
-    /// Chunk-entry state checkpoints of the backward pre-pass, flattened
-    /// `[n_chunks × (d_k·d_v)]` — one reused buffer instead of one
-    /// `Mat::clone` per chunk.
-    pub(crate) checkpoints: Vec<f32>,
 }
 
 impl ChunkWorkspace {
@@ -68,6 +73,10 @@ impl ChunkWorkspace {
             ws: empty(),
             attn: empty(),
             oc: empty(),
+            pc: empty(),
+            gc: empty(),
+            sc: empty(),
+            hc: empty(),
             du_bar: empty(),
             d_attn: empty(),
             dqc: empty(),
@@ -81,7 +90,6 @@ impl ChunkWorkspace {
             dkb: empty(),
             dvb: empty(),
             wtd: empty(),
-            checkpoints: Vec::new(),
         }
     }
 }
@@ -118,11 +126,11 @@ mod tests {
         // that persistence is the whole point
         with_thread_workspace(|ws| {
             ws.kb.reset(8, 8);
-            ws.checkpoints.resize(64, 0.0);
+            ws.pc.reset(8, 8);
         });
         with_thread_workspace(|ws| {
             assert!(ws.kb.data.capacity() >= 64);
-            assert!(ws.checkpoints.capacity() >= 64);
+            assert!(ws.pc.data.capacity() >= 64);
         });
     }
 

@@ -20,7 +20,6 @@ use deltanet::coordinator::generate::Sampling;
 use deltanet::coordinator::server::GenRequest;
 use deltanet::coordinator::{DecodeEngine, ServeEngine, Trainer};
 use deltanet::data::batcher::Split;
-use deltanet::model::{HostModel, HostModelCfg};
 use deltanet::repro::{self, ReproOpts};
 use deltanet::runtime::Runtime;
 use deltanet::util::args::Args;
@@ -176,38 +175,16 @@ fn main() -> deltanet::Result<()> {
             let artifact = args.get_or("artifact", "deltanet_tiny");
             let requests: usize = args.get_parse("requests", 32)?;
             let max_new: usize = args.get_parse("max-new", 16)?;
-            // vocab from the manifest when serving an artifact (the engine
-            // itself is built inside the serving thread — PJRT handles are
-            // not Send); from the host model preset otherwise
-            let man_path =
-                artifacts.join(format!("{artifact}.decode.manifest.json"));
-            let use_artifact =
-                Runtime::backend_available() && man_path.exists();
-            let vocab = if use_artifact {
-                deltanet::runtime::Manifest::load(&man_path)?
-                    .config.as_ref()
-                    .map(|c| c.vocab_size as i32)
-                    .context("decode manifest missing config")?
-            } else {
+            // DecodeRoute picks the engine (the engine itself is built
+            // inside the serving thread — PJRT handles are not Send) and
+            // reports the vocab to size prompts against
+            let (serve, route) = ServeEngine::spawn_auto(
+                &artifacts, &artifact, 0, Sampling::Greedy,
+                std::time::Duration::from_millis(5))?;
+            if route.backend == "host" {
                 println!("no decode artifact — serving the host engine");
-                HostModelCfg::tiny().vocab as i32
-            };
-            let dir = artifacts.clone();
-            let art2 = artifact.clone();
-            let serve = ServeEngine::spawn(
-                move || {
-                    if use_artifact {
-                        let rt = Runtime::new(&dir)?;
-                        DecodeEngine::new(&rt, &art2, 0)
-                    } else {
-                        let model = HostModel::new(
-                            HostModelCfg::tiny(), 0,
-                            deltanet::kernels::default_threads())?;
-                        Ok(DecodeEngine::host(model, 8, 64))
-                    }
-                },
-                Sampling::Greedy,
-                std::time::Duration::from_millis(5));
+            }
+            let vocab = route.vocab as i32;
             let tickets: Vec<_> = (0..requests)
                 .map(|i| {
                     let prompt: Vec<i32> = (0..4 + (i % 5))

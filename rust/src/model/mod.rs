@@ -313,6 +313,8 @@ impl HostModel {
                     problems.push(HeadProblem::new(qh, kh, vh, betah));
                 }
             }
+            // DAG-scheduled over (batch, head, chunk) tasks: even B=1
+            // training batches fan out across the whole pool
             let outs =
                 forward_batched_on(&self.pool, &problems, self.cfg.chunk);
 

@@ -10,7 +10,9 @@
 //! * suite-specific top-level scalars (`tokens_per_sec`, `gflops_mean`,
 //!   `loss_last`, `span_overhead_frac`, ...) with a known direction;
 //! * `bench_kernels`' `primitives` array (`gflops_simd`, `speedup`) —
-//!   *higher is better*.
+//!   *higher is better*;
+//! * `bench_prefill`'s `speedups` object (parallel speedup per
+//!   thread-count config) — *higher is better*.
 //!
 //! [`extract_metrics`] flattens any such report into named scalars with a
 //! direction, [`diff`] joins current against baseline by name and computes
@@ -114,6 +116,19 @@ pub fn extract_metrics(report: &Json) -> Vec<Metric> {
                 value: median,
                 higher_is_better: false,
             });
+        }
+    }
+    // speedups{}: parallel speedups keyed by config (higher is better) —
+    // bench_prefill's thread-scaling block
+    if let Some(Json::Obj(sp)) = report.get("speedups") {
+        for (k, v) in sp {
+            if let Ok(x) = v.as_f64() {
+                out.push(Metric {
+                    name: format!("speedups.{k}"),
+                    value: x,
+                    higher_is_better: true,
+                });
+            }
         }
     }
     // primitives[]: scalar-vs-SIMD comparison (higher is better)
@@ -360,6 +375,26 @@ mod tests {
         assert_eq!(d.regressions(), 2, "{}", d.render_text());
         let d = diff(&mk(8.0), &mk(2.0), None);
         assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn prefill_speedups_compare_higher_is_better() {
+        let mk = |s: f64| Json::parse(&format!(
+            r#"{{"suite":"prefill","tokens_per_sec":1000.0,
+                 "speedups":{{"prefill_h4_l2048_t8":{s},
+                              "prefill_h4_l2048_t1":1.0}},
+                 "results":[]}}"#)).unwrap();
+        let m = extract_metrics(&mk(3.0));
+        let sp = m.iter()
+            .find(|x| x.name == "speedups.prefill_h4_l2048_t8").unwrap();
+        assert!(sp.higher_is_better);
+        assert_eq!(sp.value, 3.0);
+        // losing the parallel speedup is a regression...
+        let d = diff(&mk(1.0), &mk(3.0), None);
+        assert_eq!(d.regressions(), 1, "{}", d.render_text());
+        // ...gaining it is not
+        let d = diff(&mk(3.0), &mk(1.0), None);
+        assert_eq!(d.regressions(), 0, "{}", d.render_text());
     }
 
     #[test]

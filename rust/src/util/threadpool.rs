@@ -2,13 +2,18 @@
 //! the batched host kernels, the serving engine and parallel data
 //! generation.
 //!
-//! Three submission APIs:
+//! Four submission APIs:
 //!   * [`ThreadPool::execute`] — fire-and-forget (legacy surface),
 //!   * [`ThreadPool::submit`]  — returns a [`JobHandle`] that can be
 //!     `join()`ed and reports whether the job panicked,
 //!   * [`ThreadPool::scope`]   — crossbeam-style scope: jobs may borrow
 //!     from the caller's stack; the scope joins every spawned job before
-//!     returning (this is the fan-out primitive the kernel layer uses).
+//!     returning (the embarrassingly-parallel fan-out primitive),
+//!   * [`ThreadPool::run_dag`] — executes a [`TaskDag`] of dependent
+//!     tasks with per-task granularity: a task is enqueued the moment its
+//!     last dependency finishes (wave scheduling without a global phase
+//!     barrier).  This is what the sequence-parallel chunkwise kernels
+//!     schedule their phase-A/B/C tasks on.
 //!
 //! Workers catch panics from jobs, so a panicking job can no longer kill a
 //! worker thread and wedge the pool (the old behaviour: after any worker
@@ -279,6 +284,180 @@ impl<'pool, 'env> Scope<'pool, 'env> {
     }
 }
 
+/// A dependency-ordered batch of jobs for [`ThreadPool::run_dag`].
+///
+/// Tasks are identified by the index [`TaskDag::add`] returns, and every
+/// dependency must refer to an already-added task — the graph is
+/// topologically ordered by construction and therefore acyclic.  Like
+/// [`Scope::spawn`], tasks may borrow from the caller's stack (`'env`);
+/// `run_dag` joins every task before returning.
+pub struct TaskDag<'env> {
+    jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
+    deps: Vec<Vec<usize>>,
+}
+
+impl<'env> TaskDag<'env> {
+    pub fn new() -> Self {
+        TaskDag { jobs: Vec::new(), deps: Vec::new() }
+    }
+
+    /// Add a task that may run only after every task in `deps` has
+    /// finished; returns the new task's id for use in later `deps` lists.
+    pub fn add<F: FnOnce() + Send + 'env>(
+        &mut self,
+        deps: &[usize],
+        f: F,
+    ) -> usize {
+        let id = self.jobs.len();
+        for &d in deps {
+            assert!(d < id, "DAG dependency {d} does not precede task {id}");
+        }
+        self.jobs.push(Box::new(f));
+        self.deps.push(deps.to_vec());
+        id
+    }
+
+    /// Number of tasks added so far.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+impl Default for TaskDag<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared state of one in-flight `run_dag` call.
+struct DagRun {
+    /// Task payloads, taken exactly once when the task is dispatched.
+    jobs: Vec<Mutex<Option<Job>>>,
+    /// Unmet-dependency counts; a task is enqueued when its count drops
+    /// to zero.
+    waiting: Vec<AtomicUsize>,
+    /// Forward edges: tasks to release when task `i` finishes.
+    dependents: Vec<Vec<usize>>,
+    /// Tasks not yet finished; `run_dag` blocks until this reaches zero.
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panics: AtomicUsize,
+    /// Cloned pool sender so a finishing task (running on a worker) can
+    /// enqueue the tasks it just released.  Behind a Mutex because
+    /// `mpsc::Sender` is not `Sync` on older toolchains.
+    tx: Mutex<mpsc::Sender<Job>>,
+}
+
+/// Enqueue ready task `i` of `run` onto the pool.
+fn dag_enqueue(run: &Arc<DagRun>, i: usize) {
+    let r = run.clone();
+    let wrapper: Job = Box::new(move || {
+        let job = r.jobs[i].lock().unwrap().take();
+        // once any task has panicked the rest of the graph is poisoned:
+        // downstream payloads would read garbage, and run_dag re-raises
+        // at the join anyway — skip them but still cascade completion so
+        // the barrier cannot deadlock
+        if r.panics.load(Ordering::SeqCst) == 0 {
+            if let Some(job) = job {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    r.panics.fetch_add(1, Ordering::SeqCst);
+                    note_job_panic();
+                }
+            }
+        }
+        // AcqRel on the final decrement gives the releasing task's writes
+        // a happens-before edge to the dependent it enqueues (the channel
+        // send/recv pair then carries it to whichever worker runs it)
+        for &d in &r.dependents[i] {
+            if r.waiting[d].fetch_sub(1, Ordering::AcqRel) == 1 {
+                dag_enqueue(&r, d);
+            }
+        }
+        let mut rem = r.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            r.done.notify_all();
+        }
+    });
+    pool_metrics().queue_depth.add(1);
+    run.tx
+        .lock()
+        .unwrap()
+        .send(wrapper)
+        .expect("pool workers exited");
+}
+
+impl ThreadPool {
+    /// Execute a dependency graph of tasks on the pool and block until
+    /// every task has finished.  Tasks whose dependencies are all met run
+    /// concurrently (up to the pool size); each completing task releases
+    /// its dependents immediately, so independent subgraphs never wait on
+    /// each other.  Panics after the join if any task panicked.
+    ///
+    /// Like [`ThreadPool::scope`], do not call from inside a pool job:
+    /// with all workers blocked on inner graphs the pool can deadlock.
+    pub fn run_dag<'env>(&self, dag: TaskDag<'env>) {
+        let n = dag.jobs.len();
+        if n == 0 {
+            return;
+        }
+        let TaskDag { jobs, deps } = dag;
+        // SAFETY: run_dag joins every task (remaining == 0 under the
+        // condvar) before returning, so the 'env borrows captured by the
+        // jobs strictly outlive their execution — the same argument as
+        // Scope::spawn.  The panic path also reaches the join: a
+        // panicking task is caught by its wrapper, which still cascades
+        // completion.
+        let jobs: Vec<Mutex<Option<Job>>> = jobs
+            .into_iter()
+            .map(|job| {
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'env>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                Mutex::new(Some(job))
+            })
+            .collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut waiting = Vec::with_capacity(n);
+        for (i, ds) in deps.iter().enumerate() {
+            waiting.push(AtomicUsize::new(ds.len()));
+            for &d in ds {
+                dependents[d].push(i);
+            }
+        }
+        let run = Arc::new(DagRun {
+            jobs,
+            waiting,
+            dependents,
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panics: AtomicUsize::new(0),
+            tx: Mutex::new(
+                self.tx.as_ref().expect("pool shut down").clone(),
+            ),
+        });
+        for (i, ds) in deps.iter().enumerate() {
+            if ds.is_empty() {
+                dag_enqueue(&run, i);
+            }
+        }
+        let mut rem = run.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = run.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        let panics = run.panics.load(Ordering::SeqCst);
+        assert!(panics == 0, "{panics} DAG task(s) panicked");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,5 +570,107 @@ mod tests {
             s.spawn(|| {});
             s.spawn(|| panic!("inner boom"));
         });
+    }
+
+    #[test]
+    fn dag_orders_phases_and_joins() {
+        // A-wave writes, one B task reduces, C-wave reads the reduction —
+        // the exact shape the sequence-parallel kernels schedule
+        let pool = ThreadPool::new(4);
+        let xs: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        let total = AtomicUsize::new(0);
+        let out: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        let mut dag = TaskDag::new();
+        let a_ids: Vec<usize> = (0..16)
+            .map(|i| {
+                let xs = &xs;
+                dag.add(&[], move || {
+                    xs[i].store(i + 1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        let b = {
+            let (xs, total) = (&xs, &total);
+            dag.add(&a_ids, move || {
+                let sum =
+                    xs.iter().map(|x| x.load(Ordering::SeqCst)).sum();
+                total.store(sum, Ordering::SeqCst);
+            })
+        };
+        for i in 0..16 {
+            let (total, out) = (&total, &out);
+            dag.add(&[b], move || {
+                out[i].store(
+                    total.load(Ordering::SeqCst) + i,
+                    Ordering::SeqCst,
+                );
+            });
+        }
+        pool.run_dag(dag);
+        assert_eq!(total.load(Ordering::SeqCst), 16 * 17 / 2);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::SeqCst), 136 + i);
+        }
+    }
+
+    #[test]
+    fn dag_chain_runs_on_single_worker() {
+        // a pure chain on a 1-worker pool: dependents are enqueued from
+        // the only worker thread — must not deadlock
+        let pool = ThreadPool::new(1);
+        let hits = AtomicUsize::new(0);
+        let mut dag = TaskDag::new();
+        let mut prev: Option<usize> = None;
+        for i in 0..100 {
+            let hits = &hits;
+            let deps: Vec<usize> = prev.into_iter().collect();
+            prev = Some(dag.add(&deps, move || {
+                // each link asserts every earlier link already ran
+                assert_eq!(hits.fetch_add(1, Ordering::SeqCst), i);
+            }));
+        }
+        pool.run_dag(dag);
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn dag_pool_is_reusable_and_empty_dag_is_fine() {
+        let pool = ThreadPool::new(2);
+        pool.run_dag(TaskDag::new());
+        for _ in 0..3 {
+            let n = AtomicUsize::new(0);
+            let mut dag = TaskDag::new();
+            let nref = &n;
+            let a = dag.add(&[], move || {
+                nref.fetch_add(1, Ordering::SeqCst);
+            });
+            dag.add(&[a], move || {
+                nref.fetch_add(1, Ordering::SeqCst);
+            });
+            pool.run_dag(dag);
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "DAG task")]
+    fn dag_propagates_task_panics() {
+        let pool = ThreadPool::new(2);
+        let mut dag = TaskDag::new();
+        let bad = dag.add(&[], || panic!("task boom"));
+        // downstream of the panic: skipped, but the join must still
+        // complete (no deadlock) before run_dag re-raises
+        dag.add(&[bad], || {});
+        dag.add(&[], || {});
+        pool.run_dag(dag);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not precede")]
+    fn dag_rejects_forward_dependencies() {
+        let mut dag = TaskDag::new();
+        dag.add(&[1], || {});
     }
 }

@@ -5,12 +5,14 @@
 //! fan-out.
 
 use deltanet::kernels::{
-    backward_batched, chunkwise_backward, HeadProblem, KernelConfig,
+    backward_batched, backward_batched_on, chunkwise_backward, HeadProblem,
+    KernelConfig,
 };
 use deltanet::reference::fd::{fd_grads, slice_to_f64, to_f64};
 use deltanet::reference::random_problem;
 use deltanet::tensor::rng::Rng;
 use deltanet::tensor::Mat;
+use deltanet::util::threadpool::ThreadPool;
 
 fn assert_close(analytic: f32, fd: f64, what: &str) {
     let a = analytic as f64;
@@ -82,6 +84,52 @@ fn gradcheck_partial_tail_chunk() {
 fn gradcheck_long_sequence() {
     check_problem(64, &[1, 4, 16], false, 74);
     check_problem(64, &[1, 4, 16], true, 75);
+}
+
+#[test]
+fn gradcheck_through_dag_scheduler() {
+    // the sequence-parallel backward (per-chunk recompute, reverse state
+    // scan, parallel phase C) on an oversubscribed 8-thread pool must
+    // still match finite differences — B=1, so every task the pool runs
+    // comes from the chunk fan-out of this single problem
+    let (l, dk, dv) = (13usize, 4usize, 4usize);
+    let (q, k, v, beta) = random_problem(l, dk, dv, 76);
+    let mut rng = Rng::new(77);
+    let s0 = Mat::random(dk, dv, &mut rng, 0.5);
+    let w_o = Mat::random(l, dv, &mut rng, 1.0);
+    let w_s = Mat::random(dk, dv, &mut rng, 1.0);
+    let fd = fd_grads(&to_f64(&q), &to_f64(&k), &to_f64(&v),
+                      &slice_to_f64(&beta), l, dk, dv,
+                      Some(&to_f64(&s0)), &to_f64(&w_o), &to_f64(&w_s),
+                      1e-3);
+
+    let mut p = HeadProblem::new(q, k, v, beta);
+    p.initial_state = Some(s0);
+    let pool = ThreadPool::new(8);
+    for chunk in [1usize, 4, 16] {
+        let gs = backward_batched_on(
+            &pool, std::slice::from_ref(&p), std::slice::from_ref(&w_o),
+            Some(std::slice::from_ref(&w_s)), chunk);
+        let g = &gs[0];
+        let label = format!("dag L={l} C={chunk} T=8");
+        for (i, (&a, &f)) in g.dq.data.iter().zip(&fd.dq).enumerate() {
+            assert_close(a, f, &format!("{label} dq[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dk.data.iter().zip(&fd.dk).enumerate() {
+            assert_close(a, f, &format!("{label} dk[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dv.data.iter().zip(&fd.dv).enumerate() {
+            assert_close(a, f, &format!("{label} dv[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dbeta.iter().zip(&fd.dbeta).enumerate() {
+            assert_close(a, f, &format!("{label} dbeta[{i}]"));
+        }
+        for (i, (&a, &f)) in g.dstate.data.iter().zip(&fd.dstate)
+            .enumerate()
+        {
+            assert_close(a, f, &format!("{label} dstate[{i}]"));
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,213 @@
+//! Sequence-parallel scheduler equivalence: the three-phase DAG
+//! decomposition (per-chunk UT transforms ─► per-sequence state scan ─►
+//! per-chunk outputs, one task per (batch, head, chunk) triple) against
+//! the scalar recurrent oracle and the sequential chunkwise entry points,
+//! across chunk sizes × thread counts, including prefill→decode state
+//! continuation and determinism under an oversubscribed pool.
+
+use deltanet::kernels::{
+    backward_batched_on, chunkwise_backward, forward_batched_on,
+    recurrent_step, Gradients, HeadProblem,
+};
+use deltanet::reference::{delta_recurrent, random_problem};
+use deltanet::tensor::rng::Rng;
+use deltanet::tensor::Mat;
+use deltanet::util::threadpool::ThreadPool;
+
+fn problems(n: usize, l: usize, d: usize, seed: u64) -> Vec<HeadProblem> {
+    (0..n)
+        .map(|i| {
+            let (q, k, v, beta) = random_problem(l, d, d, seed + i as u64);
+            HeadProblem::new(q, k, v, beta)
+        })
+        .collect()
+}
+
+#[test]
+fn forward_matches_oracle_across_chunks_and_threads() {
+    // multi-problem (B×H = 6) and single-problem (B = 1, the case the
+    // old per-problem fan-out could not parallelize), L = 100 so chunk
+    // sizes 4/16/64 all leave a partial tail chunk
+    for n in [6usize, 1] {
+        let ps = problems(n, 100, 8, 500);
+        let oracle: Vec<_> = ps.iter()
+            .map(|p| delta_recurrent(&p.q, &p.k, &p.v, &p.beta, None))
+            .collect();
+        for chunk in [1usize, 4, 16, 64] {
+            for threads in [1usize, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let outs = forward_batched_on(&pool, &ps, chunk);
+                for (i, (f, want)) in outs.iter().zip(&oracle).enumerate()
+                {
+                    assert!(f.o.allclose(&want.o, 1e-4, 1e-4),
+                            "o: n={n} p={i} C={chunk} T={threads}");
+                    assert!(f.state.allclose(&want.state, 1e-4, 1e-4),
+                            "state: n={n} p={i} C={chunk} T={threads}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_forward_bit_equals_sequential() {
+    // the DAG path runs the SAME phase kernels as the sequential entry
+    // point, so any thread count must reproduce it bit for bit
+    let ps = problems(3, 57, 8, 520);
+    for chunk in [4usize, 16, 64] {
+        let want: Vec<_> = ps.iter().map(|p| p.forward(chunk)).collect();
+        for threads in [1usize, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = forward_batched_on(&pool, &ps, chunk);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.o.data, w.o.data,
+                           "o: p={i} C={chunk} T={threads}");
+                assert_eq!(g.state.data, w.state.data,
+                           "state: p={i} C={chunk} T={threads}");
+            }
+        }
+    }
+}
+
+fn assert_grads_eq(g: &Gradients, w: &Gradients, label: &str) {
+    assert_eq!(g.dq.data, w.dq.data, "dq: {label}");
+    assert_eq!(g.dk.data, w.dk.data, "dk: {label}");
+    assert_eq!(g.dv.data, w.dv.data, "dv: {label}");
+    assert_eq!(g.dbeta, w.dbeta, "dbeta: {label}");
+    assert_eq!(g.dstate.data, w.dstate.data, "dstate: {label}");
+}
+
+#[test]
+fn parallel_backward_bit_equals_sequential() {
+    let ps = problems(3, 45, 8, 540);
+    let mut rng = Rng::new(541);
+    let d_os: Vec<Mat> =
+        ps.iter().map(|p| Mat::random(p.q.rows, 8, &mut rng, 1.0)).collect();
+    for chunk in [1usize, 4, 16, 64] {
+        let want: Vec<Gradients> = ps.iter().zip(&d_os)
+            .map(|(p, d_o)| chunkwise_backward(
+                &p.q, &p.k, &p.v, &p.beta, chunk, None, d_o, None))
+            .collect();
+        for threads in [1usize, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = backward_batched_on(&pool, &ps, &d_os, None, chunk);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_grads_eq(g, w, &format!("p={i} C={chunk} T={threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_is_chunk_invariant_on_the_parallel_path() {
+    // different chunk sizes take genuinely different arithmetic routes to
+    // the same gradients — agree to allclose, not bit-equality
+    let ps = problems(2, 50, 8, 560);
+    let mut rng = Rng::new(561);
+    let d_os: Vec<Mat> =
+        ps.iter().map(|p| Mat::random(p.q.rows, 8, &mut rng, 1.0)).collect();
+    let pool = ThreadPool::new(8);
+    let base = backward_batched_on(&pool, &ps, &d_os, None, 1);
+    for chunk in [4usize, 16, 64] {
+        let got = backward_batched_on(&pool, &ps, &d_os, None, chunk);
+        for (i, (g, b)) in got.iter().zip(&base).enumerate() {
+            let label = format!("p={i} C={chunk}");
+            assert!(g.dq.allclose(&b.dq, 1e-3, 1e-3), "dq: {label}");
+            assert!(g.dk.allclose(&b.dk, 1e-3, 1e-3), "dk: {label}");
+            assert!(g.dv.allclose(&b.dv, 1e-3, 1e-3), "dv: {label}");
+            assert!(g.dstate.allclose(&b.dstate, 1e-3, 1e-3),
+                    "dstate: {label}");
+            for (j, (x, y)) in g.dbeta.iter().zip(&b.dbeta).enumerate() {
+                assert!((x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                        "dbeta[{j}]: {label} ({x} vs {y})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_state_continues_into_decode() {
+    // B=1 prefill through the DAG scheduler, then token-by-token decode
+    // from the returned state — must match the scalar recurrence over the
+    // whole sequence (the serving path: parallel prompt, then decode)
+    let (l, l0, d) = (77usize, 48usize, 8usize);
+    let (q, k, v, beta) = random_problem(l, d, d, 580);
+    let oracle = delta_recurrent(&q, &k, &v, &beta, None);
+
+    let prefix = HeadProblem::new(
+        Mat { rows: l0, cols: d, data: q.data[..l0 * d].to_vec() },
+        Mat { rows: l0, cols: d, data: k.data[..l0 * d].to_vec() },
+        Mat { rows: l0, cols: d, data: v.data[..l0 * d].to_vec() },
+        beta[..l0].to_vec(),
+    );
+    let pool = ThreadPool::new(8);
+    let fs = forward_batched_on(&pool, std::slice::from_ref(&prefix), 16);
+    let f = &fs[0];
+    assert!(f.o.allclose(
+        &Mat { rows: l0, cols: d, data: oracle.o.data[..l0 * d].to_vec() },
+        1e-4, 1e-4), "prefill outputs");
+
+    let mut s = f.state.clone();
+    let mut out = vec![0f32; d];
+    for t in l0..l {
+        recurrent_step(&mut s, q.row(t), k.row(t), v.row(t), beta[t],
+                       &mut out);
+        let want = oracle.o.row(t);
+        for (j, (&a, &b)) in out.iter().zip(want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                    "decode t={t} j={j}: {a} vs {b}");
+        }
+    }
+    assert!(s.allclose(&oracle.state, 1e-4, 1e-4), "final decode state");
+}
+
+#[test]
+fn initial_state_and_dstate_chain_through_batched_path() {
+    // segment-chained training: segment 2 starts from segment 1's state
+    // (forward) and receives a d_state from downstream (backward) — the
+    // DAG path must reproduce the sequential entry points bit for bit
+    let d = 8usize;
+    let mut rng = Rng::new(600);
+    let s0 = Mat::random(d, d, &mut rng, 0.5);
+    let (q, k, v, beta) = random_problem(39, d, d, 601);
+    let mut p = HeadProblem::new(q, k, v, beta);
+    p.initial_state = Some(s0.clone());
+    let d_o = Mat::random(39, d, &mut rng, 1.0);
+    let d_s = Mat::random(d, d, &mut rng, 1.0);
+
+    let pool = ThreadPool::new(8);
+    for chunk in [4usize, 16] {
+        let fs = forward_batched_on(&pool, std::slice::from_ref(&p), chunk);
+        let want_f = p.forward(chunk);
+        assert_eq!(fs[0].o.data, want_f.o.data, "o: C={chunk}");
+        assert_eq!(fs[0].state.data, want_f.state.data, "state: C={chunk}");
+
+        let gs = backward_batched_on(
+            &pool, std::slice::from_ref(&p), std::slice::from_ref(&d_o),
+            Some(std::slice::from_ref(&d_s)), chunk);
+        let want_g = chunkwise_backward(&p.q, &p.k, &p.v, &p.beta, chunk,
+                                        Some(&s0), &d_o, Some(&d_s));
+        assert_grads_eq(&gs[0], &want_g, &format!("C={chunk}"));
+    }
+}
+
+#[test]
+fn oversubscribed_pool_is_deterministic() {
+    // 8 workers, B=1, L=257, C=4 → 65 tasks per phase racing over a pool
+    // far wider than any host core count here; five runs must agree bit
+    // for bit with each other and with the sequential path
+    let ps = problems(1, 257, 8, 620);
+    let mut rng = Rng::new(621);
+    let d_os: Vec<Mat> = vec![Mat::random(257, 8, &mut rng, 1.0)];
+    let want_f = ps[0].forward(4);
+    let want_g = chunkwise_backward(&ps[0].q, &ps[0].k, &ps[0].v,
+                                    &ps[0].beta, 4, None, &d_os[0], None);
+    let pool = ThreadPool::new(8);
+    for run in 0..5 {
+        let fs = forward_batched_on(&pool, &ps, 4);
+        assert_eq!(fs[0].o.data, want_f.o.data, "o: run={run}");
+        assert_eq!(fs[0].state.data, want_f.state.data, "state: run={run}");
+        let gs = backward_batched_on(&pool, &ps, &d_os, None, 4);
+        assert_grads_eq(&gs[0], &want_g, &format!("run={run}"));
+    }
+}
